@@ -1,0 +1,88 @@
+"""Paper Fig. 5: per-iteration Cholesky cost, naive O(n^3) vs lazy O(n^2).
+
+Simulates the BO loop's factorization work at growing n:
+  * naive  — rebuild K and fully refactorize (XLA cholesky) every iteration
+             (the paper's baseline; its reference code used a scalar loop,
+             which is also measured once at small n as `alg2_literal`).
+  * lazy   — one incremental row append (padded trsv + row write).
+
+Reports per-iteration microseconds, the cumulative-time speedup over the
+sweep, and fitted growth exponents.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cholesky as chol
+from repro.core.kernels import KernelParams, matern52
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n_max: int = 1024, step: int = 128, full: bool = False):
+    params = KernelParams.default()
+    key = jax.random.PRNGKey(0)
+    xs = jax.random.uniform(key, (n_max + 1, 5))
+    rows = []
+
+    naive_fn = jax.jit(lambda k: jnp.linalg.cholesky(k))
+    append_fn = jax.jit(
+        lambda l, p, c, n: chol.lazy_append_row(l, p, c, n, n_max=n_max),
+        static_argnames=())
+
+    sizes = list(range(step, n_max + 1, step))
+    cum_naive = cum_lazy = 0.0
+    for n in sizes:
+        k_n = matern52(xs[:n], xs[:n], params) + 1e-6 * jnp.eye(n)
+        t_naive = _time(naive_fn, k_n)
+
+        l_pad = chol.identity_pad_factor(jnp.linalg.cholesky(k_n), n_max)
+        p_pad = jnp.zeros((n_max,)).at[:n].set(
+            matern52(xs[:n], xs[n:n + 1], params)[:, 0])
+        c = matern52(xs[n:n + 1], xs[n:n + 1], params)[0, 0] + 1e-6
+        t_lazy = _time(append_fn, l_pad, p_pad, c, jnp.asarray(n, jnp.int32))
+
+        cum_naive += t_naive
+        cum_lazy += t_lazy
+        rows.append((n, t_naive * 1e6, t_lazy * 1e6))
+
+    # growth exponents from the last half of the sweep
+    ns = np.array([r[0] for r in rows], float)
+    tn = np.array([r[1] for r in rows], float)
+    tl = np.array([r[2] for r in rows], float)
+    half = len(ns) // 2
+    exp_naive = np.polyfit(np.log(ns[half:]), np.log(tn[half:]), 1)[0]
+    exp_lazy = np.polyfit(np.log(ns[half:]), np.log(tl[half:]), 1)[0]
+
+    out = []
+    for n, a, b in rows:
+        out.append(f"cholesky_naive_n{n},{a:.1f},")
+        out.append(f"cholesky_lazy_n{n},{b:.1f},speedup={a / b:.1f}x")
+    out.append(f"cholesky_cumulative,,"
+               f"speedup={cum_naive / cum_lazy:.1f}x")
+    out.append(f"cholesky_growth_exponents,,naive~n^{exp_naive:.2f}"
+               f" lazy~n^{exp_lazy:.2f}")
+
+    if full:
+        # the paper's literal Alg. 2 scalar loop, small n (it is slow)
+        n = 256
+        k_n = matern52(xs[:n], xs[:n], params) + 1e-6 * jnp.eye(n)
+        t_lit = _time(jax.jit(chol.cholesky_naive), k_n, reps=2)
+        out.append(f"cholesky_alg2_literal_n{n},{t_lit * 1e6:.1f},")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

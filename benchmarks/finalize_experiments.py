@@ -1,0 +1,95 @@
+"""Append the final §Dry-run / §Roofline / §Perf tables to EXPERIMENTS.md
+from the dry-run result files.  Run after the final matrix:
+
+    python -m benchmarks.finalize_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import analyse, format_table
+
+RESULTS = "results"
+OUT = "EXPERIMENTS.md"
+
+
+def load(path):
+    recs = []
+    if os.path.exists(path):
+        with open(path) as f:
+            recs = [json.loads(l) for l in f if l.strip()]
+    return recs
+
+
+def main():
+    single = load(f"{RESULTS}/final_single.jsonl")
+    multi = load(f"{RESULTS}/final_multi.jsonl")
+
+    lines = ["\n---\n\n## Final state (optimized framework)\n"]
+
+    # --- dry-run summary -------------------------------------------------
+    for name, recs in (("16x16 single-pod", single),
+                       ("2x16x16 multi-pod", multi)):
+        ok = [r for r in recs if r["status"] == "ok"]
+        sk = [r for r in recs if r["status"] == "skipped"]
+        er = [r for r in recs if r["status"] == "error"]
+        lines.append(f"**{name}**: {len(ok)} cells compiled, "
+                     f"{len(sk)} documented skips, {len(er)} errors.")
+        if er:
+            for r in er:
+                lines.append(f"  * ERROR {r['arch']} {r['shape']}: "
+                             f"{r['error'][:160]}")
+    lines.append("")
+
+    # --- per-cell memory table (both meshes) ------------------------------
+    lines.append("### §Dry-run: per-device memory (GB) and compile time\n")
+    lines.append("| arch | shape | 16x16 peak GB | 2x16x16 peak GB | "
+                 "compile s (single) |")
+    lines.append("|---|---|---|---|---|")
+    multi_idx = {(r["arch"], r["shape"]): r for r in multi
+                 if r["status"] == "ok"}
+    for r in sorted(single, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — skip: "
+                         f"{r['reason']} | — | — |")
+            continue
+        if r["status"] != "ok":
+            continue
+        m = multi_idx.get((r["arch"], r["shape"]))
+        mm = (f"{m['memory']['peak_per_device_bytes'] / 1e9:.2f}"
+              if m else "?")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{r['memory']['peak_per_device_bytes'] / 1e9:.2f} | {mm} | "
+            f"{r['compile_seconds']} |")
+    lines.append("")
+
+    # --- roofline table ----------------------------------------------------
+    lines.append("### §Roofline: final single-pod table\n")
+    lines.append("(terms in seconds/step at v5e constants; `useful` = "
+                 "MODEL_FLOPS/HLO_FLOPs; `roofl.` = useful-compute time over "
+                 "the dominant bound)\n")
+    rows = [analyse(r) for r in single]
+    rows = [r for r in rows if r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines.append("```")
+    lines.append(format_table(rows))
+    lines.append("```\n")
+
+    # --- dominant-term summaries -------------------------------------------
+    lines.append("Per-cell dominant bottleneck + the one-line lever:\n")
+    from benchmarks.roofline import whats_limiting
+    for r in rows:
+        lines.append(f"* `{r['arch']} x {r['shape']}`: {r['dominant']}-bound "
+                     f"(bound {r['bound_s']:.3f}s, roofline fraction "
+                     f"{r['roofline_fraction']:.3f}) — {whats_limiting(r)}")
+    lines.append("")
+
+    with open(OUT, "a") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"appended final tables to {OUT} ({len(rows)} roofline rows)")
+
+
+if __name__ == "__main__":
+    main()

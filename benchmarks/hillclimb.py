@@ -1,0 +1,80 @@
+"""§Perf hillclimb driver: run named variants of the three chosen cells.
+
+Each variant is a (hypothesis, change) pair from EXPERIMENTS.md §Perf; this
+script lowers+compiles the cell per variant and prints the three roofline
+terms so the before/after lands in the iteration log.
+
+    python -m benchmarks.hillclimb --cell qwen3 --out results/hc_qwen3.jsonl
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+CELLS = {
+    "qwen3": ("qwen3-moe-30b-a3b", "train_4k"),
+    "granite-moe": ("granite-moe-3b-a800m", "train_4k"),
+    "deepseek": ("deepseek-coder-33b", "train_4k"),
+    "minicpm3-decode": ("minicpm3-4b", "decode_32k"),
+}
+
+# variant -> (cfg_overrides, train_overrides, seq_parallel)
+VARIANTS = {
+    # paper-order baseline for the cell (SP on: the no-SP ablation OOMs)
+    "base": ({}, {}, True),
+    "no-sp": ({}, {}, False),
+    "moe-cumsum": ({"moe_dispatch": "cumsum"}, {}, True),
+    "bf16-grads": ({}, {"bf16_grads": True}, True),
+    "remat-dots": ({"remat_policy": "dots"}, {}, True),
+    "bf16+dots": ({"remat_policy": "dots"}, {"bf16_grads": True}, True),
+    "bf16+dots+ef": ({"remat_policy": "dots"},
+                     {"bf16_grads": True}, True),   # + compress_grads below
+}
+OPT_VARIANTS = {"bf16+dots+ef": {"compress_grads": True}}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--variants", default=None,
+                    help="comma list; default = sensible set per cell")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from benchmarks.roofline import analyse
+    from repro.launch.dryrun import run_cell
+
+    arch, shape = CELLS[args.cell]
+    if args.variants:
+        names = args.variants.split(",")
+    elif "moe" in arch:
+        names = ["base", "moe-cumsum", "bf16-grads", "bf16+dots"]
+    else:
+        names = ["base", "bf16-grads", "remat-dots", "bf16+dots"]
+
+    for name in names:
+        cfg_o, train_o, sp = VARIANTS[name]
+        rec = run_cell(arch, shape, False, seq_parallel=sp,
+                       cfg_overrides=cfg_o, train_overrides=train_o,
+                       opt_overrides=OPT_VARIANTS.get(name))
+        rec["variant"] = name
+        row = analyse(rec) if rec["status"] == "ok" else None
+        if row:
+            print(f"{name:14s} comp={row['t_compute_s']:.3f}s "
+                  f"mem={row['t_memory_s']:.3f}s "
+                  f"coll={row['t_collective_s']:.3f}s "
+                  f"dom={row['dominant']:10s} "
+                  f"roofline={row['roofline_fraction']:.4f} "
+                  f"peakGB={row['peak_mem_gb']:.2f}", flush=True)
+        else:
+            print(f"{name:14s} {rec['status']}: "
+                  f"{rec.get('error', '')[:160]}", flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Roofline analysis over dry-run results (EXPERIMENTS.md §Roofline).
+
+Reads the JSONL written by `repro.launch.dryrun` and derives, per cell:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_link_bytes_per_device / link_bw
+
+(The dry-run records the *per-partition* HLO module, so the three terms are
+per-chip already; dividing global totals by chip count gives the same
+numbers.)  Hardware constants are TPU v5e per the assignment:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Also reports MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (decode/prefill
+fwd-only) and the MODEL_FLOPS / HLO_FLOPs usefulness ratio that catches
+remat/causal-masking/redundancy waste.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,       # one new token per sequence
+    "long_500k": 1,
+}
+SHAPE_FACTOR = {             # useful FLOPs per param per token
+    "train_4k": 6.0,         # fwd 2 + bwd 4
+    "prefill_32k": 2.0,      # fwd only
+    "decode_32k": 2.0,
+    "long_500k": 2.0,
+}
+
+
+def analyse(record: dict) -> dict | None:
+    if record.get("status") != "ok" or "cost" not in record:
+        return None
+    n_dev = record["n_devices"]
+    flops_dev = record["cost"]["flops_per_device"]
+    bytes_dev = record["cost"]["bytes_accessed_per_device"]
+    link_dev = record["collectives"]["total_link_bytes"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_collective = link_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+
+    shape = record["shape"]
+    n_active = record["model"]["n_active_params"]
+    model_flops = (SHAPE_FACTOR[shape] * n_active * SHAPE_TOKENS[shape])
+    model_flops_dev = model_flops / n_dev
+    useful_ratio = model_flops_dev / max(flops_dev, 1.0)
+    # roofline fraction: time the chip would spend doing useful model math at
+    # peak, over the bound imposed by the dominant term.
+    t_useful = model_flops_dev / PEAK_FLOPS
+    roofline_frac = t_useful / max(bound, 1e-12)
+
+    return {
+        "arch": record["arch"],
+        "shape": shape,
+        "mesh": record["mesh"],
+        "seq_parallel": record.get("seq_parallel", False),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops_per_device": model_flops_dev,
+        "hlo_flops_per_device": flops_dev,
+        "useful_ratio": useful_ratio,
+        "roofline_fraction": roofline_frac,
+        "peak_mem_gb": record["memory"]["peak_per_device_bytes"] / 1e9,
+    }
+
+
+def whats_limiting(row: dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("shrink/overlap the TP+DP collectives (SP activations, "
+                "reduce-scatter grads, bf16 payloads, 2D sharding)")
+    if d == "memory":
+        return ("cut HBM traffic: larger fusion blocks, bf16 intermediates, "
+                "avoid materialized score/logit buffers, better remat policy")
+    return ("raise MXU utilization: remove causal-mask waste, pad-free "
+            "shapes, reduce remat recompute")
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"| {'arch':22s} | {'shape':11s} | {'mesh':7s} | comp s | mem s  "
+           f"| coll s | dominant   | useful | roofl. | mem GB |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']:22s} | {r['shape']:11s} | {r['mesh']:7s} "
+            f"| {r['t_compute_s']:6.3f} | {r['t_memory_s']:6.3f} "
+            f"| {r['t_collective_s']:6.3f} | {r['dominant']:10s} "
+            f"| {r['useful_ratio']:6.3f} | {r['roofline_fraction']:6.3f} "
+            f"| {r['peak_mem_gb']:6.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl", nargs="+")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = []
+    for path in args.jsonl:
+        with open(path) as f:
+            for line in f:
+                if not line.strip():
+                    continue
+                row = analyse(json.loads(line))
+                if row:
+                    rows.append(row)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(format_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

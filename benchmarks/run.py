@@ -1,0 +1,53 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  * bench_cholesky — Fig. 5 (naive O(n^3) vs lazy O(n^2) factorization)
+  * bench_levy     — Tab. 1 (5-D Levy convergence, 1 vs 100 seeds)
+  * bench_lag      — Fig. 6 (lagging-factor sweep)
+  * bench_nn_hpo   — Fig. 1 + Tabs. 2/3 (network-trainer HPO overhead)
+  * bench_parallel — Tab. 4 (top-t parallel suggestions)
+
+`python -m benchmarks.run [--full] [--only NAME]`.  The roofline analysis
+(§Roofline) is separate: `python -m benchmarks.roofline results/*.jsonl`
+over the dry-run output.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale iteration counts (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_cholesky, bench_lag, bench_levy,
+                            bench_nn_hpo, bench_parallel)
+    suites = {
+        "cholesky": lambda: bench_cholesky.run(full=args.full),
+        "levy": lambda: bench_levy.run(full=args.full),
+        "lag": lambda: bench_lag.run(full=args.full),
+        "nn_hpo": lambda: bench_nn_hpo.run(full=args.full),
+        "parallel": lambda: bench_parallel.run(full=args.full),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # pragma: no cover
+            print(f"{name}_FAILED,,{type(e).__name__}: {e}", flush=True)
+            raise
+        print(f"# {name} suite: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

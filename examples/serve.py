@@ -1,0 +1,71 @@
+"""Batched serving: prefill a prompt batch, then decode with a KV cache.
+
+    python examples/serve.py [--arch granite-3-2b] [--batch 4] [--new 32]
+
+Uses each arch's real serve path: KV caches for attention stacks, latent
+caches for MLA, recurrent states for Mamba2/xLSTM — the same `prefill` /
+`decode_step` the multi-pod dry-run lowers at 32k/500k.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.models import decode_step, init_params, prefill  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode path")
+    key = jax.random.PRNGKey(0)
+    params, _ = init_params(cfg, key)
+    max_len = args.prompt_len + args.new
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    jit_prefill = jax.jit(lambda p, t: prefill(p, cfg, t, max_len))
+    jit_decode = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t),
+                         donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    logits, cache = jax.block_until_ready(jit_prefill(params, prompts))
+    t_prefill = time.perf_counter() - t0
+
+    toks = []
+    key_s = key
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.new):
+        toks.append(tok)
+        logits, cache = jit_decode(params, cache, tok)
+        key_s = jax.random.fold_in(key_s, i)
+        tok = jax.random.categorical(
+            key_s, logits[:, -1] / args.temperature)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    out = jnp.concatenate(toks, axis=1)
+    print(f"arch={cfg.name}  prefill {args.batch}x{args.prompt_len} tokens "
+          f"in {1e3 * t_prefill:.1f} ms")
+    print(f"decoded {args.batch}x{args.new} tokens in {1e3 * t_decode:.1f} ms"
+          f"  ({args.batch * args.new / t_decode:.0f} tok/s, incl. compile)")
+    print("sampled ids (seq 0):", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro — Scalable HPO with Lazy Gaussian Processes, as a multi-pod JAX framework.
+
+Subpackages:
+  core/       lazy-GP Bayesian optimization (the paper's contribution)
+  kernels/    Pallas TPU kernels for the GP hot spots
+  hpo/        trial scheduler: parallel suggestions, async absorption, fault tolerance
+  models/     assigned-architecture model zoo (dense/MoE/MLA/SSM/xLSTM/...)
+  data/       deterministic synthetic token pipeline
+  optim/      optimizers, schedules, gradient compression
+  training/   train/prefill/decode steps (remat, microbatching)
+  checkpoint/ save/restore for fault tolerance
+  configs/    one config per assigned architecture
+  launch/     production meshes, sharding rules, dry-run, train CLI
+"""
+__version__ = "1.0.0"

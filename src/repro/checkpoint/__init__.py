@@ -1,0 +1,5 @@
+"""Atomic checkpoint store (fault-tolerance substrate)."""
+from repro.checkpoint.store import (committed_steps, latest_step, restore,
+                                    restore_latest, save)
+__all__ = ["committed_steps", "latest_step", "restore", "restore_latest",
+           "save"]

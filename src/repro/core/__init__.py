@@ -1,0 +1,29 @@
+"""Lazy Gaussian-process Bayesian optimization (the paper's contribution).
+
+Public API:
+  * kernels: Matérn-2.5/1.5, RBF — `repro.core.kernels`
+  * lazy Cholesky: `repro.core.cholesky` (Alg. 2 naive, Alg. 3 incremental)
+  * GP state machine: `repro.core.gp`
+  * acquisition + top-t local maxima: `repro.core.acquisition`
+  * BO driver: `repro.core.bayesopt`
+  * synthetic objectives: `repro.core.levy`
+"""
+from repro.core.acquisition import AcqConfig, expected_improvement, optimize_acquisition
+from repro.core.bayesopt import BayesOpt, BOConfig, BOHistory, run_bo
+from repro.core.cholesky import (cholesky_naive, cholesky_xla, lazy_append_row,
+                                 lazy_full_refactor, padded_trsv)
+from repro.core.gp import (GPConfig, LazyGPState, append, append_batch,
+                           dense_posterior, init_state, log_marginal_likelihood,
+                           maybe_refit, posterior, refactor, refit_params)
+from repro.core.kernels import KERNELS, KernelParams, gram, matern32, matern52, rbf
+from repro.core.levy import levy, levy_1d, levy_bounds, neg_levy
+
+__all__ = [
+    "AcqConfig", "BayesOpt", "BOConfig", "BOHistory", "GPConfig", "KERNELS",
+    "KernelParams", "LazyGPState", "append", "append_batch", "cholesky_naive",
+    "cholesky_xla", "dense_posterior", "expected_improvement", "gram",
+    "init_state", "lazy_append_row", "lazy_full_refactor",
+    "log_marginal_likelihood", "matern32", "matern52", "maybe_refit",
+    "optimize_acquisition", "padded_trsv", "posterior", "rbf", "refactor",
+    "refit_params", "run_bo", "levy", "levy_1d", "levy_bounds", "neg_levy",
+]

@@ -1,0 +1,153 @@
+"""Acquisition functions and their optimizers.
+
+Expected Improvement (paper Sec. 3.2.1) plus a jit-able multi-start optimizer
+that returns either the single argmax (sequential BO) or the top-t *local
+maxima* (paper Sec. 3.4's parallel strategy: "not only use the maximal
+expected improvement ... but the t best local maxima").
+
+Local maxima are approximated by multi-start projected gradient ascent from R
+random restarts followed by spatial deduplication: ascended points that
+converge to the same basin collapse to one representative, and the t best
+distinct basins are returned.  This is fixed-shape (R restarts, S ascent
+steps) so the whole suggestion step compiles once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gp as gp_mod
+from repro.core.kernels import KernelFn
+
+Array = jax.Array
+
+_SQRT2 = 1.4142135623730951
+
+
+def _norm_pdf(z: Array) -> Array:
+    return jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+
+
+def _norm_cdf(z: Array) -> Array:
+    return 0.5 * (1.0 + jax.lax.erf(z / _SQRT2))
+
+
+def expected_improvement(mean: Array, var: Array, f_best: Array,
+                         xi: float = 0.01) -> Array:
+    """EI(x) = gamma Phi(Z) + sigma phi(Z)  (paper Eq. 11, maximization form).
+
+    gamma = mu(x) - f_best - xi ; Z = gamma / sigma.  xi trades exploration
+    for exploitation.
+    """
+    sigma = jnp.sqrt(var)
+    gamma = mean - f_best - xi
+    z = jnp.where(sigma > 0, gamma / jnp.maximum(sigma, 1e-12), 0.0)
+    ei = gamma * _norm_cdf(z) + sigma * _norm_pdf(z)
+    return jnp.where(sigma > 0, jnp.maximum(ei, 0.0), 0.0)
+
+
+def upper_confidence_bound(mean: Array, var: Array, f_best: Array,
+                           beta: float = 2.0) -> Array:
+    del f_best
+    return mean + beta * jnp.sqrt(var)
+
+
+ACQUISITIONS: dict[str, Callable[..., Array]] = {
+    "ei": expected_improvement,
+    "ucb": upper_confidence_bound,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AcqConfig:
+    name: str = "ei"
+    xi: float = 0.01
+    restarts: int = 64          # R multi-start seeds
+    ascent_steps: int = 25      # S projected-gradient steps per seed
+    lr: float = 0.05            # in units of the box width
+    dedup_radius: float = 0.08  # basin-merge radius, units of box width
+
+
+def _acq_value(state: gp_mod.LazyGPState, kernel: KernelFn, x: Array,
+               f_best: Array, cfg: AcqConfig) -> Array:
+    mean, var = gp_mod.posterior(state, kernel, x[None, :])
+    fn = ACQUISITIONS[cfg.name]
+    return fn(mean, var, f_best, cfg.xi)[0]
+
+
+def _f_best(state: gp_mod.LazyGPState) -> Array:
+    m = jnp.arange(state.n_max) < state.n
+    return jnp.max(jnp.where(m, state.y_buf, -jnp.inf))
+
+
+def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
+                         lo: Array, hi: Array, key: Array,
+                         cfg: AcqConfig, top_t: int = 1
+                         ) -> tuple[Array, Array]:
+    """Return (points (top_t, d), acq values (top_t,)), best first.
+
+    top_t = 1 is standard sequential BO; top_t = t implements the paper's
+    parallel suggestion of the t best distinct local maxima.
+    """
+    d = state.dim
+    f_best = _f_best(state)
+    width = hi - lo
+
+    seeds = lo + (hi - lo) * jax.random.uniform(key, (cfg.restarts, d),
+                                                dtype=state.x_buf.dtype)
+
+    value = lambda x: _acq_value(state, kernel, x, f_best, cfg)
+    grad = jax.grad(value)
+
+    def ascend(x):
+        def step(_, x):
+            g = grad(x)
+            gn = jnp.linalg.norm(g)
+            g = jnp.where(gn > 0, g / jnp.maximum(gn, 1e-12), 0.0)
+            return jnp.clip(x + cfg.lr * width * g, lo, hi)
+        return jax.lax.fori_loop(0, cfg.ascent_steps, step, x)
+
+    finals = jax.vmap(ascend)(seeds)                    # (R, d)
+    vals = jax.vmap(value)(finals)                      # (R,)
+
+    # Spatial dedup: greedy pick best, suppress all restarts within radius.
+    order = jnp.argsort(-vals)
+    finals = finals[order]
+    vals = vals[order]
+    radius = cfg.dedup_radius * jnp.linalg.norm(width)
+
+    def pick(i, carry):
+        chosen, chosen_vals, suppressed, count = carry
+        is_free = ~suppressed[i] & (count < top_t)
+        chosen = jax.lax.cond(
+            is_free,
+            lambda c: jax.lax.dynamic_update_slice(c, finals[i][None, :],
+                                                   (count, 0)),
+            lambda c: c, chosen)
+        chosen_vals = jax.lax.cond(
+            is_free,
+            lambda c: jax.lax.dynamic_update_slice(c, vals[i][None], (count,)),
+            lambda c: c, chosen_vals)
+        dist = jnp.linalg.norm(finals - finals[i], axis=-1)
+        suppressed = jnp.where(is_free, suppressed | (dist < radius), suppressed)
+        count = count + jnp.where(is_free, 1, 0)
+        return chosen, chosen_vals, suppressed, count
+
+    chosen0 = jnp.zeros((top_t, d), finals.dtype)
+    vals0 = jnp.full((top_t,), -jnp.inf, vals.dtype)
+    suppressed0 = jnp.zeros((cfg.restarts,), bool)
+    chosen, chosen_vals, _, count = jax.lax.fori_loop(
+        0, cfg.restarts, pick, (chosen0, vals0, suppressed0, 0))
+
+    # If fewer than top_t distinct basins exist, back-fill with jittered
+    # copies of the best point so the batch shape stays fixed.
+    jitter = 0.01 * width * jax.random.normal(
+        jax.random.fold_in(key, 1), (top_t, d), dtype=finals.dtype)
+    fallback = jnp.clip(chosen[0] + jitter, lo, hi)
+    filled = jnp.arange(top_t) < count
+    chosen = jnp.where(filled[:, None], chosen, fallback)
+    chosen_vals = jnp.where(filled, chosen_vals, chosen_vals[0])
+    return chosen, chosen_vals

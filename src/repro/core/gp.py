@@ -1,0 +1,249 @@
+"""Lazy Gaussian process regression (the paper's surrogate model).
+
+State machine per DESIGN.md §4: fixed-shape padded buffers hold the observed
+points, observations, and the identity-padded Cholesky factor; `append` is the
+paper's O(n^2) Alg. 3 step; `refit` is the lag-event full refactorization with
+kernel hyper-parameter re-estimation via log-marginal-likelihood.
+
+Everything here is shape-static and jit-able; the BO loop compiles once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cholesky as chol
+from repro.core.kernels import KERNELS, KernelFn, KernelParams
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LazyGPState:
+    """Padded, fixed-shape GP state (see DESIGN.md §4)."""
+
+    x_buf: Array        # (n_max, d) observed points
+    y_buf: Array        # (n_max,) observations
+    l_buf: Array        # (n_max, n_max) identity-padded factor of K + noise I
+    alpha: Array        # (n_max,) (K + noise I)^{-1} (y - mean), zero-padded
+    n: Array            # () int32 active count
+    since_refit: Array  # () int32 appends since last full refactor
+    params: KernelParams
+
+    @property
+    def n_max(self) -> int:
+        return self.x_buf.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.x_buf.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class GPConfig:
+    n_max: int = 1024
+    dim: int = 5
+    kernel: str = "matern52"
+    lag: int = 0           # 0 = never refit (the fully lazy GP of the paper)
+    noise2: float = 1e-6
+    rho0: float = 0.25     # initial length scale on the unit box.  The paper
+    # fixes rho = 1; on a normalized domain that over-smooths multimodal
+    # targets, so the framework default is 0.25 (beyond-paper).  Paper-repro
+    # benchmarks pass rho0 = 1.0 explicitly.
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def kernel_fn(self) -> KernelFn:
+        return KERNELS[self.kernel]
+
+
+def init_state(cfg: GPConfig, params: KernelParams | None = None) -> LazyGPState:
+    params = params or KernelParams(sigma2=1.0, rho=cfg.rho0, noise2=cfg.noise2)
+    return LazyGPState(
+        x_buf=jnp.zeros((cfg.n_max, cfg.dim), cfg.dtype),
+        y_buf=jnp.zeros((cfg.n_max,), cfg.dtype),
+        l_buf=jnp.eye(cfg.n_max, dtype=cfg.dtype),
+        alpha=jnp.zeros((cfg.n_max,), cfg.dtype),
+        n=jnp.asarray(0, jnp.int32),
+        since_refit=jnp.asarray(0, jnp.int32),
+        params=KernelParams(*[jnp.asarray(v, cfg.dtype)
+                              for v in (params.sigma2, params.rho, params.noise2)]),
+    )
+
+
+def _active_mask(state: LazyGPState) -> Array:
+    return jnp.arange(state.n_max) < state.n
+
+
+def _ymean(state: LazyGPState) -> Array:
+    """Mean of the active observations (GP prior mean = running mean)."""
+    m = _active_mask(state)
+    cnt = jnp.maximum(state.n, 1)
+    return jnp.sum(jnp.where(m, state.y_buf, 0.0)) / cnt
+
+
+def _recompute_alpha(state: LazyGPState) -> Array:
+    """alpha = (K + noise I)^{-1} (y - mean) via two padded triangular solves."""
+    resid = jnp.where(_active_mask(state), state.y_buf - _ymean(state), 0.0)
+    z = chol.padded_trsv(state.l_buf, resid, lower=True)
+    return chol.padded_trsv(state.l_buf, z, lower=True, trans=True)
+
+
+def _cov_column(state: LazyGPState, kernel: KernelFn, x_new: Array) -> tuple[Array, Array]:
+    """(p_pad, c): covariances of x_new against actives (padded) and itself."""
+    p = kernel(state.x_buf, x_new[None, :], state.params)[:, 0]
+    p_pad = jnp.where(_active_mask(state), p, 0.0)
+    c = kernel(x_new[None, :], x_new[None, :], state.params)[0, 0] + state.params.noise2
+    return p_pad, c
+
+
+def append(state: LazyGPState, kernel: KernelFn, x_new: Array,
+           y_new: Array) -> LazyGPState:
+    """Absorb one observation in O(n_max^2) (paper Alg. 3).
+
+    Traced-shape safe: can run under jit with n as a traced value.
+    """
+    n_max = state.n_max
+    p_pad, c = _cov_column(state, kernel, x_new)
+    l_buf, _ = chol.lazy_append_row(state.l_buf, p_pad, c, state.n, n_max=n_max)
+    x_buf = jax.lax.dynamic_update_slice(state.x_buf, x_new[None, :], (state.n, 0))
+    y_buf = jax.lax.dynamic_update_slice(state.y_buf, y_new[None], (state.n,))
+    new = dataclasses.replace(
+        state, x_buf=x_buf, y_buf=y_buf, l_buf=l_buf,
+        n=state.n + 1, since_refit=state.since_refit + 1)
+    return dataclasses.replace(new, alpha=_recompute_alpha(new))
+
+
+def append_batch(state: LazyGPState, kernel: KernelFn, xs: Array,
+                 ys: Array) -> LazyGPState:
+    """Absorb t observations as t sequential O(n^2) appends (paper Sec. 3.4).
+
+    Under a frozen kernel the appends commute up to row order, so the HPO
+    scheduler may feed results in *completion* order (async absorption).
+    """
+    def body(i, st):
+        return append(st, kernel, xs[i], ys[i])
+
+    return jax.lax.fori_loop(0, xs.shape[0], body, state)
+
+
+def posterior(state: LazyGPState, kernel: KernelFn,
+              x_star: Array) -> tuple[Array, Array]:
+    """Posterior mean and variance at query points x_star (m, d).
+
+    mean = k_*^T alpha + ymean ; var = k_** - v^T v with v = L^{-1} k_*
+    (paper Alg. 1 lines 3-6), on padded buffers.
+    """
+    k_star = kernel(state.x_buf, x_star, state.params)          # (n_max, m)
+    k_star = jnp.where(_active_mask(state)[:, None], k_star, 0.0)
+    mean = k_star.T @ state.alpha + _ymean(state)
+    v = chol.padded_trsv(state.l_buf, k_star, lower=True)       # (n_max, m)
+    k_ss = kernel(x_star, x_star, state.params)
+    var = jnp.maximum(jnp.diag(k_ss) - jnp.sum(v * v, axis=0), 1e-12)
+    return mean, var
+
+
+def log_marginal_likelihood(state: LazyGPState) -> Array:
+    """log p(y | X) = -1/2 y^T alpha - sum log L_ii - n/2 log 2pi (Alg. 1 l.7).
+
+    Identity padding contributes log(1) = 0 to the diagonal sum, so the padded
+    computation is exact.
+    """
+    m = _active_mask(state)
+    resid = jnp.where(m, state.y_buf - _ymean(state), 0.0)
+    quad = resid @ state.alpha
+    logdet = jnp.sum(jnp.where(m, jnp.log(jnp.diagonal(state.l_buf)), 0.0))
+    return -0.5 * quad - logdet - 0.5 * state.n * jnp.log(2.0 * jnp.pi)
+
+
+# ---------------------------------------------------------------------------
+# Lag-event refit (paper Sec. 4.1, the lagging factor l).
+# ---------------------------------------------------------------------------
+
+def refactor(state: LazyGPState, kernel: KernelFn,
+             params: KernelParams | None = None) -> LazyGPState:
+    """Full O(n^3) refactorization (optionally with new kernel params)."""
+    params = params or state.params
+    st = dataclasses.replace(state, params=params)
+    k_full = kernel(st.x_buf, st.x_buf, params)
+    k_full = k_full + params.noise2 * jnp.eye(st.n_max, dtype=k_full.dtype)
+    k_pad = chol.mask_gram(k_full, st.n)
+    l_buf = jnp.linalg.cholesky(k_pad)
+    st = dataclasses.replace(st, l_buf=l_buf, since_refit=jnp.asarray(0, jnp.int32))
+    return dataclasses.replace(st, alpha=_recompute_alpha(st))
+
+
+def _lml_for(state: LazyGPState, kernel: KernelFn, params: KernelParams) -> Array:
+    """LML under candidate params (full rebuild; only used at lag events)."""
+    st = refactor(state, kernel, params)
+    return log_marginal_likelihood(st)
+
+
+def refit_params(state: LazyGPState, kernel: KernelFn,
+                 rho_grid: Array | None = None,
+                 sigma2_grid: Array | None = None) -> KernelParams:
+    """Multi-restart (grid) LML maximization over (sigma2, rho).
+
+    The paper refits "at reasonable intervals"; a coarse grid is robust, jits
+    to a fixed program, and costs l-amortized O(G n^3).
+    """
+    if rho_grid is None:
+        # Unit-box length scales (inputs are normalized by the BO driver).
+        rho_grid = jnp.asarray([0.05, 0.1, 0.2, 0.4, 0.8, 1.6],
+                               state.x_buf.dtype)
+    if sigma2_grid is None:
+        sigma2_grid = jnp.asarray([0.25, 1.0, 4.0], state.x_buf.dtype)
+
+    rr, ss = jnp.meshgrid(rho_grid, sigma2_grid, indexing="ij")
+    cand = jnp.stack([ss.ravel(), rr.ravel()], axis=-1)  # (G, 2) [sigma2, rho]
+
+    def score(c):
+        p = KernelParams(sigma2=c[0], rho=c[1], noise2=state.params.noise2)
+        return _lml_for(state, kernel, p)
+
+    lmls = jax.lax.map(score, cand)
+    best = jnp.argmax(lmls)
+    return KernelParams(sigma2=cand[best, 0], rho=cand[best, 1],
+                        noise2=state.params.noise2)
+
+
+def maybe_refit(state: LazyGPState, kernel: KernelFn, lag: int) -> LazyGPState:
+    """Apply the lag policy: every `lag` appends, refit params + refactor.
+
+    lag <= 0 means never (the fully lazy GP); lag == 1 reproduces the standard
+    per-iteration refit (the paper's baseline semantics).
+    """
+    if lag <= 0:
+        return state
+
+    def do_refit(st):
+        params = refit_params(st, kernel)
+        return refactor(st, kernel, params)
+
+    return jax.lax.cond(state.since_refit >= lag, do_refit, lambda s: s, state)
+
+
+# ---------------------------------------------------------------------------
+# Reference (non-lazy) GP for parity tests and the naive baseline.
+# ---------------------------------------------------------------------------
+
+def dense_posterior(x: Array, y: Array, x_star: Array, kernel: KernelFn,
+                    params: KernelParams) -> tuple[Array, Array]:
+    """Textbook GP posterior with a fresh full factorization (paper Alg. 1)."""
+    n = x.shape[0]
+    k = kernel(x, x, params) + params.noise2 * jnp.eye(n, dtype=x.dtype)
+    l = jnp.linalg.cholesky(k)
+    ymean = jnp.mean(y)
+    z = chol.padded_trsv(l, y - ymean, lower=True)
+    alpha = chol.padded_trsv(l, z, lower=True, trans=True)
+    k_star = kernel(x, x_star, params)
+    mean = k_star.T @ alpha + ymean
+    v = chol.padded_trsv(l, k_star, lower=True)
+    var = jnp.maximum(jnp.diag(kernel(x_star, x_star, params))
+                      - jnp.sum(v * v, axis=0), 1e-12)
+    return mean, var

@@ -1,0 +1,41 @@
+"""Synthetic objectives: the d-dimensional Levy function (paper Sec. 4.1).
+
+The paper maximizes the *negative* Levy function on [-10, 10]^d; the global
+maximum is 0 at x* = (1, ..., 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def levy(x: Array) -> Array:
+    """Levy function (paper Eq. 19). x: (..., d)."""
+    w = 1.0 + (x - 1.0) / 4.0
+    term1 = jnp.sin(jnp.pi * w[..., 0]) ** 2
+    wi = w[..., :-1]
+    term2 = jnp.sum((wi - 1.0) ** 2
+                    * (1.0 + 10.0 * jnp.sin(jnp.pi * wi + 1.0) ** 2), axis=-1)
+    wd = w[..., -1]
+    term3 = (wd - 1.0) ** 2 * (1.0 + jnp.sin(2.0 * jnp.pi * wd) ** 2)
+    return term1 + term2 + term3
+
+
+def neg_levy(x: Array) -> Array:
+    """The paper's maximization target: max_x -f_L(x), optimum 0 at 1-vector."""
+    return -levy(x)
+
+
+def levy_bounds(dim: int) -> tuple[Array, Array]:
+    lo = jnp.full((dim,), -10.0)
+    hi = jnp.full((dim,), 10.0)
+    return lo, hi
+
+
+def levy_1d(x: Array) -> Array:
+    """1-D special case used in the paper's Fig. 2/3 illustration (Eq. 7)."""
+    w = 1.0 + (x - 1.0) / 4.0
+    return jnp.sin(jnp.pi * w) ** 2 + (w - 1.0) ** 2 * (
+        1.0 + jnp.sin(2.0 * jnp.pi * w) ** 2)

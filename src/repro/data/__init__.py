@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipeline."""
+from repro.data.pipeline import DataConfig, DataIterator, host_local_batch, synth_tokens
+__all__ = ["DataConfig", "DataIterator", "host_local_batch", "synth_tokens"]

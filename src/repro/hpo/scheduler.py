@@ -1,0 +1,266 @@
+"""HPO trial scheduler — the paper's parallel lazy-GP loop, production shape.
+
+The paper's Sec. 3.4 insight: with O(n^2) GP updates, synchronization stops
+being the bottleneck, so you can (a) suggest the top-t EI local maxima and
+train t models concurrently, and (b) absorb results as *row appends* that
+commute under the frozen kernel.  This scheduler turns that into the
+1000-node orchestration contract:
+
+  * **async absorption** — results are appended in *completion* order; a
+    straggler never blocks the GP or the next suggestion round (suggestions
+    can be issued from the current posterior at any time).
+  * **fault tolerance** — a failed trial (node crash, NaN loss) produces no
+    observation; the scheduler re-suggests from the posterior (optionally
+    recording a penalized pseudo-observation so EI avoids a crashing
+    region), and the GP state checkpoints with the trial ledger so a
+    restarted controller resumes with the identical posterior.
+  * **elasticity** — the parallel width t is re-read every round, so the
+    suggestion batch tracks however many pod-slices are currently healthy.
+  * **lag policy** — every `lag` absorbed results, kernel params are refit
+    and the factor rebuilt (paper Fig. 6), amortizing the O(n^3) cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import traceback
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acquisition as acq_mod
+from repro.core import gp as gp_mod
+from repro.core.kernels import KERNELS
+from repro.hpo.space import SearchSpace
+from repro import checkpoint as ckpt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    n_max: int = 512
+    kernel: str = "matern52"
+    lag: int = 0                 # 0 = fully lazy (paper's main mode)
+    parallel: int = 1            # t (elastic; re-read each round)
+    rho0: float = 0.25
+    noise2: float = 1e-5
+    seed: int = 0
+    failure_penalty: float | None = None  # None: drop; else pseudo-y
+    max_retries: int = 1
+    ckpt_dir: str | None = None
+    acq: acq_mod.AcqConfig = dataclasses.field(
+        default_factory=lambda: acq_mod.AcqConfig(restarts=48,
+                                                  ascent_steps=20))
+
+
+@dataclasses.dataclass
+class Trial:
+    trial_id: int
+    unit: np.ndarray
+    hparams: dict
+    status: str = "pending"      # pending | running | done | failed
+    value: float | None = None
+    error: str | None = None
+    started: float = 0.0
+    finished: float = 0.0
+    retries: int = 0
+
+
+class TrialScheduler:
+    """Drives `objective(hparams) -> float (maximize)` through the lazy GP."""
+
+    def __init__(self, space: SearchSpace, cfg: SchedulerConfig):
+        self.space = space
+        self.cfg = cfg
+        self.kernel = KERNELS[cfg.kernel]
+        gcfg = gp_mod.GPConfig(n_max=cfg.n_max, dim=space.dim,
+                               kernel=cfg.kernel, noise2=cfg.noise2,
+                               rho0=cfg.rho0)
+        self.state = gp_mod.init_state(gcfg)
+        self.trials: list[Trial] = []
+        self._next_id = 0
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._lo = jnp.zeros((space.dim,))
+        self._hi = jnp.ones((space.dim,))
+        self._suggest = jax.jit(self._suggest_impl,
+                                static_argnames=("top_t",))
+        self._append = jax.jit(
+            lambda st, x, y: gp_mod.append(st, self.kernel, x, y))
+        self._refit = jax.jit(self._refit_impl)
+
+    # ------------------------------------------------------------------
+    def _suggest_impl(self, state, key, *, top_t):
+        return acq_mod.optimize_acquisition(
+            state, self.kernel, self._lo, self._hi, key, self.cfg.acq, top_t)
+
+    def _refit_impl(self, state):
+        params = gp_mod.refit_params(state, self.kernel)
+        return gp_mod.refactor(state, self.kernel, params)
+
+    def _split(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # ------------------------------------------------------------------
+    def seed_trials(self, n: int) -> list[Trial]:
+        rng = np.random.default_rng(self.cfg.seed)
+        units = self.space.sample(rng, n)
+        return [self._make_trial(u) for u in units]
+
+    def suggest(self, t: int | None = None) -> list[Trial]:
+        """Top-t distinct EI local maxima from the current posterior."""
+        t = t or self.cfg.parallel
+        if int(self.state.n) == 0:
+            return self.seed_trials(t)
+        units, _ = self._suggest(self.state, self._split(), top_t=t)
+        return [self._make_trial(np.asarray(u)) for u in units]
+
+    def _make_trial(self, unit: np.ndarray) -> Trial:
+        tr = Trial(self._next_id, unit.astype(np.float32),
+                   self.space.to_hparams(unit))
+        self._next_id += 1
+        self.trials.append(tr)
+        return tr
+
+    # ------------------------------------------------------------------
+    def absorb(self, trial: Trial, value: float) -> None:
+        """O(n^2) row append (order-independent under the frozen kernel)."""
+        trial.status = "done"
+        trial.value = float(value)
+        trial.finished = time.time()
+        self.state = self._append(self.state, jnp.asarray(trial.unit),
+                                  jnp.asarray(value, jnp.float32))
+        if self.cfg.lag > 0 and int(self.state.since_refit) >= self.cfg.lag:
+            self.state = self._refit(self.state)
+        self._maybe_checkpoint()
+
+    def record_failure(self, trial: Trial, error: str) -> Trial | None:
+        """Failed trial: retry (fresh suggestion) or penalize the region."""
+        trial.status = "failed"
+        trial.error = error
+        trial.finished = time.time()
+        if self.cfg.failure_penalty is not None:
+            # Pseudo-observation keeps EI away from a crashing region.
+            self.state = self._append(
+                self.state, jnp.asarray(trial.unit),
+                jnp.asarray(self.cfg.failure_penalty, jnp.float32))
+        if trial.retries < self.cfg.max_retries:
+            nxt = self.suggest(1)[0]
+            nxt.retries = trial.retries + 1
+            return nxt
+        return None
+
+    # ------------------------------------------------------------------
+    def best(self) -> Trial | None:
+        done = [t for t in self.trials if t.status == "done"]
+        return max(done, key=lambda t: t.value) if done else None
+
+    def history(self) -> list[dict]:
+        return [dataclasses.asdict(t) | {"unit": t.unit.tolist()}
+                for t in self.trials]
+
+    # ------------------------------------------------------------------
+    def _maybe_checkpoint(self):
+        if not self.cfg.ckpt_dir:
+            return
+        n_done = sum(t.status == "done" for t in self.trials)
+        ckpt_mod.save(self.cfg.ckpt_dir, n_done,
+                      dataclasses.asdict(self.state),
+                      metadata={"trials": json.dumps(self.history()),
+                                "next_id": self._next_id})
+
+    def restore(self) -> bool:
+        if not self.cfg.ckpt_dir:
+            return False
+        out = ckpt_mod.restore_latest(self.cfg.ckpt_dir,
+                                      dataclasses.asdict(self.state))
+        if out is None:
+            return False
+        _, tree, meta = out
+        from repro.core.kernels import KernelParams
+        tree["params"] = KernelParams(**tree["params"])
+        self.state = gp_mod.LazyGPState(**tree)
+        self._next_id = int(meta["next_id"])
+        self.trials = []
+        for rec in json.loads(meta["trials"]):
+            tr = Trial(rec["trial_id"], np.asarray(rec["unit"], np.float32),
+                       rec["hparams"], rec["status"], rec["value"],
+                       rec["error"], rec["started"], rec["finished"],
+                       rec["retries"])
+            self.trials.append(tr)
+        return True
+
+    # ------------------------------------------------------------------
+    def run(self, objective: Callable[[dict], float], budget: int,
+            n_seed: int = 1, executor: ThreadPoolExecutor | None = None,
+            parallel: Callable[[], int] | None = None) -> Trial | None:
+        """Run until `budget` observations have been absorbed.
+
+        `parallel` is an optional callable re-read each round — the elastic
+        width (e.g. the number of currently-healthy pod slices).
+        """
+        own_pool = executor is None and self.cfg.parallel > 1
+        pool = executor or (ThreadPoolExecutor(self.cfg.parallel)
+                            if own_pool else None)
+        width_fn = parallel or (lambda: self.cfg.parallel)
+
+        def launch(pool, trial):
+            trial.status = "running"
+            trial.started = time.time()
+            fut = pool.submit(objective, trial.hparams)
+            fut.trial = trial
+            return fut
+
+        try:
+            if pool is None:
+                # Sequential mode (t = 1).
+                for tr in self.seed_trials(n_seed):
+                    self._run_one(objective, tr)
+                while sum(t.status == "done" for t in self.trials) < budget:
+                    tr = self.suggest(1)[0]
+                    self._run_one(objective, tr)
+                return self.best()
+
+            pending: set[Future] = set()
+            for tr in self.seed_trials(max(n_seed, 1)):
+                pending.add(launch(pool, tr))
+            absorbed = 0
+            while absorbed < budget:
+                done, pending = wait(pending, return_when=FIRST_COMPLETED)
+                for fut in done:       # async absorption, completion order
+                    tr = fut.trial
+                    try:
+                        self.absorb(tr, float(fut.result()))
+                        absorbed += 1
+                    except Exception as e:  # noqa: BLE001 — trial fault
+                        retry = self.record_failure(
+                            tr, f"{type(e).__name__}: {e}")
+                        if retry is not None:
+                            pending.add(launch(pool, retry))
+                width = max(1, width_fn())
+                while len(pending) < width and absorbed + len(pending) < budget:
+                    for tr in self.suggest(1):
+                        pending.add(launch(pool, tr))
+            return self.best()
+        finally:
+            if own_pool and pool is not None:
+                pool.shutdown(wait=False, cancel_futures=True)
+
+    def _run_one(self, objective, trial: Trial):
+        trial.status = "running"
+        trial.started = time.time()
+        try:
+            val = float(objective(trial.hparams))
+            if not np.isfinite(val):
+                raise FloatingPointError(f"objective returned {val}")
+            self.absorb(trial, val)
+        except Exception as e:  # noqa: BLE001
+            retry = self.record_failure(trial, traceback.format_exc()[-500:]
+                                        if not isinstance(e, FloatingPointError)
+                                        else str(e))
+            if retry is not None:
+                self._run_one(objective, retry)

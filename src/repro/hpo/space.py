@@ -1,0 +1,82 @@
+"""Hyper-parameter search spaces (the paper's Sec. 4.2/4.3 domains).
+
+Each dimension has a range and a scale ("linear" | "log"); the GP always
+sees the unit cube (the BO driver normalizes), and `to_hparams` maps a unit
+vector back to named values.  The paper's LeNet space (dropout keep probs,
+lr, weight decay, momentum) and ResNet space (lr, wd, momentum) ship as
+presets, plus the LM space the framework's own trainer exposes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Dim:
+    name: str
+    lo: float
+    hi: float
+    scale: str = "linear"   # "linear" | "log"
+
+    def to_value(self, u: float) -> float:
+        u = min(max(float(u), 0.0), 1.0)
+        if self.scale == "log":
+            llo, lhi = math.log(self.lo), math.log(self.hi)
+            return math.exp(llo + u * (lhi - llo))
+        return self.lo + u * (self.hi - self.lo)
+
+    def to_unit(self, v: float) -> float:
+        if self.scale == "log":
+            llo, lhi = math.log(self.lo), math.log(self.hi)
+            return (math.log(v) - llo) / (lhi - llo)
+        return (v - self.lo) / (self.hi - self.lo)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    dims: tuple[Dim, ...]
+
+    @property
+    def names(self) -> list[str]:
+        return [d.name for d in self.dims]
+
+    @property
+    def dim(self) -> int:
+        return len(self.dims)
+
+    def to_hparams(self, u: np.ndarray) -> dict[str, float]:
+        return {d.name: d.to_value(u[i]) for i, d in enumerate(self.dims)}
+
+    def to_unit(self, hparams: dict[str, float]) -> np.ndarray:
+        return np.asarray([d.to_unit(hparams[d.name]) for d in self.dims],
+                          np.float32)
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        return rng.uniform(0.0, 1.0, (n, self.dim)).astype(np.float32)
+
+
+# --- presets (paper Sec. 4.2 / 4.3) ---------------------------------------
+
+LENET_SPACE = SearchSpace((
+    Dim("dropout1", 0.01, 1.0),
+    Dim("dropout2", 0.01, 1.0),
+    Dim("lr", 1e-4, 1e-1, "log"),
+    Dim("weight_decay", 1e-6, 1e-3, "log"),
+    Dim("momentum", 0.0, 0.99),
+))
+
+RESNET_SPACE = SearchSpace((
+    Dim("lr", 1e-4, 1e-1, "log"),
+    Dim("weight_decay", 1e-6, 1e-3, "log"),
+    Dim("momentum", 0.0, 0.99),
+))
+
+LM_SPACE = SearchSpace((
+    Dim("lr", 1e-4, 3e-2, "log"),
+    Dim("weight_decay", 1e-4, 0.3, "log"),
+    Dim("warmup_frac", 0.01, 0.4),
+    Dim("b2", 0.9, 0.999),
+))

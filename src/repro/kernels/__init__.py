@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the lazy-GP hot spots (paper Sec. 3.3).
+
+  * `matern.py` — tiled pairwise Matérn-2.5 covariance build (MXU distances)
+  * `trsv.py`   — blocked forward/backward substitution: the O(n^2)
+                  incremental-Cholesky append (Alg. 3) and posterior solves
+  * `chol.py`   — blocked right-looking Cholesky: the lag-event refactorization
+  * `ops.py`    — jitted wrappers w/ padding + XLA fallback
+  * `ref.py`    — pure-jnp oracles for allclose validation
+"""
+from repro.kernels import ops, ref
+from repro.kernels.chol import cholesky_pallas
+from repro.kernels.matern import matern52_gram_pallas
+from repro.kernels.trsv import trsv_pallas
+
+__all__ = ["ops", "ref", "cholesky_pallas", "matern52_gram_pallas",
+           "trsv_pallas"]

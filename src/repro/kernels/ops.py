@@ -1,0 +1,129 @@
+"""Jitted public wrappers around the Pallas kernels, with padding + fallback.
+
+Dispatch policy (`implementation`):
+  * "auto"   — Pallas on TPU backends, XLA elsewhere (this CPU container).
+  * "pallas" — force Pallas (interpret=True off-TPU; used by the test suite).
+  * "xla"    — XLA-native ops (`jnp.linalg.cholesky`, `solve_triangular`).
+  * "ref"    — the pure-jnp oracles in `ref.py`.
+
+Every wrapper pads to the kernels' 128-aligned envelope and slices the result
+back, so callers never see alignment constraints.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chol import cholesky_pallas
+from repro.kernels.matern import matern52_gram_pallas
+from repro.kernels.trsv import trsv_pallas
+
+Array = jax.Array
+
+ALIGN = 128
+# Whole-factor VMEM residency bound (f32): 1024^2 * 4 B * (in + out) = 8 MB.
+MAX_PALLAS_N = 2048
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas(implementation: str) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)."""
+    if implementation == "pallas":
+        return True, not _on_tpu()
+    if implementation == "auto":
+        return _on_tpu(), False
+    return False, False
+
+
+def _pad_to(x: Array, n: int, axis: int) -> Array:
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _round_up(n: int) -> int:
+    return ((n + ALIGN - 1) // ALIGN) * ALIGN
+
+
+def matern52_gram(x: Array, y: Array, sigma2, rho,
+                  implementation: str = "auto") -> Array:
+    """Pairwise Matérn-2.5 covariance, arbitrary (n, d) x (m, d)."""
+    use, interp = _use_pallas(implementation)
+    if implementation == "ref" or not use:
+        return ref.matern52_gram_ref(x, y, sigma2, rho)
+    n, m = x.shape[0], y.shape[0]
+    npad, mpad = _round_up(n), _round_up(m)
+    dpad = _round_up(x.shape[1])
+    # Zero-padding features is exact for squared distances; padded rows
+    # produce garbage covariances that are sliced away below.
+    xp = _pad_to(_pad_to(x, npad, 0), dpad, 1)
+    yp = _pad_to(_pad_to(y, mpad, 0), dpad, 1)
+    out = matern52_gram_pallas(xp, yp, sigma2, rho, interpret=interp)
+    return out[:n, :m]
+
+
+def trsv(l: Array, b: Array, *, trans: bool = False,
+         implementation: str = "auto") -> Array:
+    """Triangular solve L q = b / L^T q = b; b (n,) or (n, r)."""
+    use, interp = _use_pallas(implementation)
+    if implementation == "ref" or not use or l.shape[0] > MAX_PALLAS_N:
+        return ref.trsv_ref(l, b, trans=trans)
+    n = l.shape[0]
+    npad = _round_up(n)
+    vec = b.ndim == 1
+    b2 = b[:, None] if vec else b
+    rpad = _round_up(b2.shape[1])
+    lp = _pad_to(_pad_to(l, npad, 0), npad, 1)
+    # Identity-pad the factor so padded solves stay well-defined.
+    if npad != n:
+        idx = jnp.arange(npad)
+        lp = jnp.where((idx[:, None] == idx[None, :]) & (idx[:, None] >= n),
+                       1.0, lp)
+    bp = _pad_to(_pad_to(b2, npad, 0), rpad, 1)
+    q = trsv_pallas(lp, bp, trans=trans, interpret=interp)[:n, : b2.shape[1]]
+    return q[:, 0] if vec else q
+
+
+def cholesky(k: Array, implementation: str = "auto") -> Array:
+    """Blocked Cholesky of an SPD matrix (lower factor)."""
+    use, interp = _use_pallas(implementation)
+    if implementation == "ref" or not use or k.shape[0] > MAX_PALLAS_N:
+        return ref.cholesky_ref(k)
+    n = k.shape[0]
+    npad = _round_up(n)
+    kp = _pad_to(_pad_to(k, npad, 0), npad, 1)
+    if npad != n:
+        idx = jnp.arange(npad)
+        kp = jnp.where((idx[:, None] == idx[None, :]) & (idx[:, None] >= n),
+                       1.0, kp)
+    return cholesky_pallas(kp, interpret=interp)[:n, :n]
+
+
+def chol_append(l: Array, p: Array, c: Array,
+                implementation: str = "auto") -> tuple[Array, Array]:
+    """Fused incremental append on the active factor: q = L^{-1}p, d."""
+    q = trsv(l, p, implementation=implementation)
+    d = jnp.sqrt(jnp.maximum(c - q @ q, 1e-10))
+    return q, d
+
+
+def gp_posterior_solve(l: Array, resid: Array, k_star: Array, k_ss_diag: Array,
+                       implementation: str = "auto") -> tuple[Array, Array]:
+    """Fused GP posterior solves (mean, var) sharing one factor residency."""
+    if implementation == "ref":
+        return ref.gp_posterior_solve_ref(l, resid, k_star, k_ss_diag)
+    z = trsv(l, resid, implementation=implementation)
+    alpha = trsv(l, z, trans=True, implementation=implementation)
+    v = trsv(l, k_star, implementation=implementation)
+    mean = k_star.T @ alpha
+    var = jnp.maximum(k_ss_diag - jnp.sum(v * v, axis=0), 1e-12)
+    return mean, var

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests `assert_allclose` against, and the
+fallback implementation `ops.py` uses when Pallas is unavailable or the shape
+falls outside a kernel's supported envelope.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+Array = jax.Array
+
+
+def matern52_gram_ref(x: Array, y: Array, sigma2, rho) -> Array:
+    """Pairwise Matérn-2.5 covariance matrix, (n, d) x (m, d) -> (n, m)."""
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    sq = jnp.maximum(xx + yy - 2.0 * (x @ y.T), 0.0)
+    d = jnp.sqrt(sq + 1e-36)
+    z = jnp.sqrt(5.0) * d / rho
+    return sigma2 * (1.0 + z + z * z / 3.0) * jnp.exp(-z)
+
+
+def trsv_ref(l: Array, b: Array, *, trans: bool = False) -> Array:
+    """Lower-triangular solve L q = b (or L^T q = b). b: (n,) or (n, r)."""
+    return solve_triangular(l, b, lower=True, trans=1 if trans else 0)
+
+
+def cholesky_ref(k: Array) -> Array:
+    """Full Cholesky factor (lower)."""
+    return jnp.linalg.cholesky(k)
+
+
+def chol_append_ref(l: Array, p: Array, c: Array) -> tuple[Array, Array]:
+    """Reference for the incremental append: q = L^{-1} p, d = sqrt(c - q.q).
+
+    Operates on the *active* (n, n) factor (unpadded).
+    """
+    q = solve_triangular(l, p, lower=True)
+    d = jnp.sqrt(jnp.maximum(c - q @ q, 1e-10))
+    return q, d
+
+
+def gp_posterior_solve_ref(l: Array, resid: Array, k_star: Array,
+                           k_ss_diag: Array) -> tuple[Array, Array]:
+    """Fused posterior solve: mean = k*^T K^{-1} resid, var = k** - |v|^2."""
+    z = solve_triangular(l, resid, lower=True)
+    alpha = solve_triangular(l, z, lower=True, trans=1)
+    v = solve_triangular(l, k_star, lower=True)
+    mean = k_star.T @ alpha
+    var = jnp.maximum(k_ss_diag - jnp.sum(v * v, axis=0), 1e-12)
+    return mean, var

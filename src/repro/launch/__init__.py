@@ -1,0 +1,1 @@
+"""Distribution layer: production meshes, sharding rules, dry-run, train CLI."""

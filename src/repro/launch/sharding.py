@@ -1,0 +1,176 @@
+"""Logical-axis sharding rules (MaxText-style) + activation constraints.
+
+Parameters and activations are annotated with *logical* axis names
+("embed", "heads", "mlp", "expert", "vocab", "batch", "seq", ...); a rule
+table maps logical names to mesh axes per mesh topology.  Per-arch overrides
+handle degenerate head counts (gemma3 8H, xlstm 4H) where tensor-parallel
+head sharding would idle most of the model axis.
+
+`constrain` is the in-model activation hook: a no-op unless a rule context
+is active (so model code runs unchanged on a single device).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None)
+# "fsdp" rules shard the parameter stationary dim over the data axes too
+# (ZeRO-3 style) so optimizer state fits at 33B scale.
+BASE_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),        # activations' batch dim
+    "seq": None,                     # sequence (sharded only under SP)
+    "embed": ("pod", "data"),        # params: FSDP over data axes
+    "heads": "model",                # TP over attention heads dim
+    "kv_heads": "model",
+    "mlp": "model",                  # TP over FFN hidden
+    "expert": "model",               # EP over experts
+    "capacity": None,                # MoE dispatch-buffer capacity dim
+    "vocab": "model",                # TP over vocab (embed + lm head)
+    "norm": None,
+    "layers": None,
+    "layers_none": None,
+}
+
+# Sequence-parallel variant: long activations sharded over "model" on seq.
+SP_RULES = dict(BASE_RULES, seq="model")
+
+# Archs whose head counts make TP-on-heads wasteful; shard mlp/embed instead
+# and keep attention projections FSDP-only.
+ARCH_OVERRIDES: dict[str, dict[str, Any]] = {
+    "gemma3-4b": {"heads": None, "kv_heads": None},      # 8 q / 4 kv heads
+    "xlstm-1.3b": {"heads": None, "kv_heads": None},     # 4 heads
+    "zamba2-1.2b": {},                                    # mamba: mlp-sharded
+    # 40 experts don't divide the 16-way model axis: shard the dispatch
+    # buffer's capacity dim instead (experts replicate; expert GEMMs stay
+    # local in C; see moe_ffn).
+    "granite-moe-3b-a800m": {"expert": None, "capacity": "model"},
+}
+
+
+def rules_for(arch: str | None, mesh: Mesh, *, seq_parallel: bool = False,
+              extra: Mapping[str, Any] | None = None) -> dict[str, Any]:
+    rules = dict(SP_RULES if seq_parallel else BASE_RULES)
+    if arch and arch in ARCH_OVERRIDES:
+        rules.update(ARCH_OVERRIDES[arch])
+    if extra:
+        rules.update(extra)
+    # Drop mesh axes the mesh doesn't have (single-pod has no "pod").
+    def fix(v):
+        if v is None:
+            return None
+        axes = v if isinstance(v, tuple) else (v,)
+        kept = tuple(a for a in axes if a in mesh.axis_names)
+        return kept if len(kept) > 1 else (kept[0] if kept else None)
+    return {k: fix(v) for k, v in rules.items()}
+
+
+# ---------------------------------------------------------------------------
+# Context + constrain
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    rules: Mapping[str, Any]
+
+
+_CTX: contextvars.ContextVar[ShardingCtx | None] = contextvars.ContextVar(
+    "sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Mapping[str, Any]):
+    token = _CTX.set(ShardingCtx(mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def logical_to_spec(axes: Sequence[Any], rules: Mapping[str, Any]) -> P:
+    parts, used = [], set()
+    for ax in axes:
+        if ax is None:
+            parts.append(None)
+            continue
+        mapped = rules.get(ax)
+        if mapped is None:
+            parts.append(None)
+            continue
+        flat = mapped if isinstance(mapped, tuple) else (mapped,)
+        fresh = tuple(m for m in flat if m not in used)
+        used.update(fresh)
+        parts.append(fresh if len(fresh) > 1 else (fresh[0] if fresh else None))
+    return P(*parts)
+
+
+def constrain(x: Array, axes: Sequence[Any]) -> Array:
+    """Apply a logical-axis sharding constraint if a rule context is active.
+
+    Dims that don't divide evenly by their mapped mesh-axis product are left
+    unconstrained: GSPMD *would* pad them, but padded shards force
+    involuntary remat copies in the backward pass (observed on non-divisible
+    kv-head constraints), so replication is the better default there.
+    """
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    if len(axes) != x.ndim:
+        return x
+    spec = logical_to_spec(axes, ctx.rules)
+    parts = []
+    for dim, entry in zip(x.shape, spec):
+        if entry is None:
+            parts.append(None)
+            continue
+        ax = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in ax:
+            size *= ctx.mesh.shape[a]
+        parts.append(entry if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*parts)))
+
+
+def param_shardings(specs, mesh: Mesh, rules: Mapping[str, Any],
+                    shapes=None):
+    """Map a logical-axis spec pytree to NamedShardings.
+
+    pjit *input* shardings demand exact divisibility, so when `shapes` is
+    given every non-divisible dim falls back to replication for that dim
+    (e.g. vocab=49155 over model=16, or 40 experts over 16) — the logical
+    rule tables stay clean and the fallback is mechanical.
+    """
+    def spec_of(axes, shape=None):
+        spec = logical_to_spec(axes, rules)
+        if shape is None:
+            return NamedSharding(mesh, spec)
+        parts = []
+        for dim, entry in zip(shape, spec):
+            if entry is None:
+                parts.append(None)
+                continue
+            ax = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in ax:
+                size *= mesh.shape[a]
+            parts.append(entry if dim % size == 0 else None)
+        return NamedSharding(mesh, P(*parts))
+
+    if shapes is None:
+        return jax.tree.map(spec_of, specs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(lambda ax, sh: spec_of(ax, sh.shape), specs, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))

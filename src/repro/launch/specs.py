@@ -1,0 +1,187 @@
+"""ShapeDtypeStruct input specs + sharding specs per (arch x shape) cell.
+
+`input_specs(cfg, shape_name)` returns weak-type-correct, shardable
+stand-ins for every input of the lowered step — no device allocation — plus
+the matching PartitionSpecs.  This is what the multi-pod dry-run lowers.
+
+Assigned LM shape grid (per the assignment):
+    train_4k     seq=4096    global_batch=256   (train_step)
+    prefill_32k  seq=32768   global_batch=32    (prefill_step)
+    decode_32k   seq=32768   global_batch=128   (decode_step, 1 new token)
+    long_500k    seq=524288  global_batch=1     (decode_step; sub-quadratic
+                                                 archs only — see DESIGN.md)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch import sharding as shard_mod
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str       # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) — the documented skip logic (DESIGN.md §5)."""
+    cell = SHAPES[shape_name]
+    if cell.kind == "decode" and not cfg.supports_decode:
+        return False, "encoder-only arch has no decode step"
+    if cell.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch; 500k decode skipped"
+    return True, ""
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def token_specs(cfg: ModelConfig, batch: int, seq: int,
+                mesh: Mesh) -> tuple[dict, dict]:
+    bspec = batch_spec(mesh)
+    if cfg.frontend == "frames":
+        inputs = SDS((batch, seq, cfg.d_model), jnp.bfloat16)
+        ispec = NamedSharding(mesh, P(*bspec, None, None))
+    else:
+        inputs = SDS((batch, seq), jnp.int32)
+        ispec = NamedSharding(mesh, P(*bspec, None))
+    batch_tree = {
+        "inputs": inputs,
+        "targets": SDS((batch, seq), jnp.int32),
+        "mask": SDS((batch, seq), jnp.float32),
+    }
+    spec_tree = {
+        "inputs": ispec,
+        "targets": NamedSharding(mesh, P(*bspec, None)),
+        "mask": NamedSharding(mesh, P(*bspec, None)),
+    }
+    return batch_tree, spec_tree
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache logical axes -> shardings
+# ---------------------------------------------------------------------------
+
+def cache_shardings(cfg: ModelConfig, cache_shapes: Any, mesh: Mesh,
+                    batch: int) -> Any:
+    """Sharding tree matching init_cache's structure.
+
+    batch > 1: shard cache batch over the data axes, heads over model.
+    batch == 1 (long_500k): replicate batch, shard the cache *sequence* over
+    all axes (sequence-parallel KV) so a 500k cache fits per device.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else dp[0]
+    seq_shard = batch == 1
+
+    def spec_for(path: str, ndim: int) -> P:
+        if path == "pos":
+            return P()
+        if path in ("k", "v", "shared_k", "shared_v"):
+            # (L, B, S, KV, dh): batch over the data axes, cache sequence
+            # over "model" (sequence-parallel KV: decode attention reduces
+            # over the sharded S with a partial-softmax all-reduce, and a
+            # 32k x 128-seq cache stops dominating per-device HBM).
+            if seq_shard:
+                return P(None, None, (*(dp if isinstance(dp, tuple)
+                                        else (dp,)), "model"), None, None)
+            return P(None, dp, "model", None, None)
+        if path in ("c_kv", "k_rope"):
+            # (L, B, S, r) — latent cache: rank unsharded (small), seq over
+            # "model" as above.
+            if seq_shard:
+                return P(None, None, (*(dp if isinstance(dp, tuple)
+                                        else (dp,)), "model"), None)
+            return P(None, dp, "model", None)
+        if path.endswith("conv"):
+            # (L, B, W, conv_dim)
+            return P(None, None if seq_shard else dp, None, "model")
+        if path.endswith("ssm"):
+            # (L, B, H, P, N)
+            return P(None, None if seq_shard else dp, "model", None, None)
+        if path.endswith("c"):
+            # mlstm C: (L, B, H, dh, dh)
+            return P(None, None if seq_shard else dp, None, None, None)
+        if path.endswith("n"):
+            return P(None, None if seq_shard else dp, None, None)
+        if path.endswith("m"):
+            return P(None, None if seq_shard else dp, None)
+        return P(*([None] * ndim))
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        return NamedSharding(mesh, spec_for(prefix, len(tree.shape)))
+
+    return walk(cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Full input-spec bundles per cell
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, rules) -> tuple[Any, Any]:
+    """(ShapeDtypeStruct param tree, NamedSharding tree) via eval_shape."""
+    from repro.models import init_params
+
+    captured = {}
+
+    def init(key):
+        p, s = init_params(cfg, key)
+        captured["specs"] = s  # logical-axis strings: python data, not arrays
+        return p
+
+    params_shapes = jax.eval_shape(init, jax.random.PRNGKey(0))
+    shardings = shard_mod.param_shardings(captured["specs"], mesh, rules,
+                                          shapes=params_shapes)
+    return params_shapes, shardings
+
+
+def abstract_opt_state(opt_cfg, params_shapes, param_shardings, mesh):
+    from repro.optim import init_opt_state
+
+    opt_shapes = jax.eval_shape(lambda p: init_opt_state(opt_cfg, p),
+                                params_shapes)
+    rep = NamedSharding(mesh, P())
+
+    def mirror(sub_shapes):
+        if sub_shapes is None:
+            return None
+        return jax.tree.map(lambda _, s: s, sub_shapes, param_shardings)
+
+    from repro.optim.optimizers import OptState
+    opt_shardings = OptState(
+        step=rep,
+        mu=mirror(opt_shapes.mu),
+        nu=mirror(opt_shapes.nu),
+        ef_residual=mirror(opt_shapes.ef_residual),
+    )
+    return opt_shapes, opt_shardings
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   params_shapes) -> Any:
+    from repro.models import init_cache
+    return jax.eval_shape(
+        lambda p: init_cache(p, cfg, batch, max_len), params_shapes)

@@ -1,0 +1,148 @@
+"""Training launcher: `python -m repro.launch.train --arch granite-3-2b ...`
+
+Runs the full fault-tolerant loop on whatever mesh fits the host:
+  * builds the mesh (production shape, or --mesh-shape for local runs),
+  * shards params/opt with the logical rules, batch over the data axes,
+  * restores the latest committed checkpoint if one exists (crash/preempt
+    recovery: data-iterator state rides in the checkpoint metadata),
+  * checkpoints every --ckpt-every steps (atomic commit protocol),
+  * survives mid-run SIGTERM by checkpointing before exit.
+
+On CPU this trains the reduced configs (used by tests/examples); the same
+entrypoint drives the full configs on real pods.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import signal
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, DataIterator
+from repro.launch import sharding as shard_mod
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_mesh
+from repro.optim import OptimizerConfig, init_opt_state
+from repro.training import TrainConfig, make_train_step
+from repro import checkpoint as ckpt_mod
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--weight-decay", type=float, default=0.01)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgdm"])
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--mesh-shape", default="1x1",
+                    help="DxM local mesh, e.g. 2x4 (under forced devices)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args(argv)
+
+
+def run(args) -> dict:
+    cfg = get_config(args.arch, reduced=args.reduced)
+    dshape = tuple(int(x) for x in args.mesh_shape.split("x"))
+    mesh = make_mesh(dshape, ("data", "model"))
+    rules = shard_mod.rules_for(args.arch, mesh)
+
+    opt_cfg = OptimizerConfig(
+        name=args.optimizer, lr=args.lr, weight_decay=args.weight_decay,
+        momentum=args.momentum, warmup_steps=args.warmup,
+        total_steps=args.steps, compress_grads=args.compress_grads)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                          global_batch=args.global_batch, seed=args.seed,
+                          frontend=cfg.frontend, d_model=cfg.d_model)
+
+    from repro.models import init_params
+    with mesh:
+        params, specs = init_params(cfg, jax.random.PRNGKey(args.seed))
+        opt_state = init_opt_state(opt_cfg, params)
+
+    raw_step = make_train_step(cfg, opt_cfg,
+                               TrainConfig(microbatches=args.microbatches))
+
+    def step_fn(params, opt_state, batch):
+        with shard_mod.use_rules(mesh, rules):
+            return raw_step(params, opt_state, batch)
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    it = DataIterator(data_cfg)
+    start = 0
+    if args.ckpt_dir:
+        restored = ckpt_mod.restore_latest(
+            args.ckpt_dir, {"params": params, "opt": opt_state._asdict()})
+        if restored is not None:
+            start, tree, meta = restored
+            params = tree["params"]
+            from repro.optim.optimizers import OptState
+            opt_state = OptState(**tree["opt"])
+            it.load_state_dict(meta["data_iter"])
+            print(f"[train] resumed from step {start}", flush=True)
+
+    stop_requested = {"flag": False}
+
+    def on_sigterm(signum, frame):
+        stop_requested["flag"] = True
+
+    signal.signal(signal.SIGTERM, on_sigterm)
+
+    def save(step):
+        if not args.ckpt_dir:
+            return
+        ckpt_mod.save(args.ckpt_dir, step,
+                      {"params": params, "opt": opt_state._asdict()},
+                      metadata={"data_iter": it.state_dict(),
+                                "arch": args.arch})
+
+    losses, t0 = [], time.time()
+    with mesh:
+        for step in range(start, args.steps):
+            batch = next(it)
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                print(f"[train] step={step} loss={loss:.4f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"gnorm={float(metrics['grad_norm']):.2f} "
+                      f"({time.time()-t0:.1f}s)", flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save(step + 1)
+            if stop_requested["flag"]:
+                save(step + 1)
+                print("[train] SIGTERM: checkpointed and exiting", flush=True)
+                sys.exit(3)
+    save(args.steps)
+    return {"final_loss": losses[-1] if losses else None, "losses": losses}
+
+
+def main():
+    # On real TPU hosts, enable overlap flags before jax initializes.
+    if os.environ.get("REPRO_TPU") == "1":
+        from repro.launch.xla_flags import apply_tpu_flags
+        apply_tpu_flags()
+    out = run(parse_args())
+    print(f"[train] done: final_loss={out['final_loss']}")
+
+
+if __name__ == "__main__":
+    main()

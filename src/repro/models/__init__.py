@@ -1,0 +1,7 @@
+"""Model zoo: unified stack covering all assigned architectures."""
+from repro.models.config import ModelConfig
+from repro.models.model import (decode_step, forward, init_cache, init_params,
+                                lm_loss, logits_from_hidden, prefill)
+
+__all__ = ["ModelConfig", "decode_step", "forward", "init_cache",
+           "init_params", "lm_loss", "logits_from_hidden", "prefill"]

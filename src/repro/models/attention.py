@@ -1,0 +1,318 @@
+"""Attention variants: GQA (full / chunked / banded / decode) and MLA.
+
+Memory regimes (chosen by the caller based on sequence length):
+  * full     — one masked einsum; scores materialize (train_4k scale).
+  * chunked  — flash-style online softmax, lax.scan over KV blocks inside a
+               scan over Q blocks; O(S * block) live memory (prefill_32k+).
+  * banded   — sliding-window attention via explicit KV window slices; exact
+               and O(S * (window + chunk)) compute (gemma3 local layers).
+  * decode   — one-token query against a KV cache (serve_step).
+
+GQA never materializes repeated KV heads: Q is reshaped to
+(batch, q_per_kv, kv_heads, ...) and contracted group-wise.
+
+MLA (MiniCPM3/DeepSeek-style latent attention) provides a train path that
+materializes per-head K/V and a decode path that keeps the cache in the
+compressed latent space with the absorbed-projection trick.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _group(q: Array, kv_heads: int) -> Array:
+    """(B, S, H, d) -> (B, S, kv, g, d)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, kv_heads, h // kv_heads, d)
+
+
+def _scale(dh: int) -> float:
+    return 1.0 / (dh ** 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Full (masked-einsum) attention
+# ---------------------------------------------------------------------------
+
+def full_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                   window: int = 0) -> Array:
+    """q: (B,S,H,dh); k/v: (B,S,KV,dh).  Returns (B,S,H,dh)."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    qg = _group(q, kv) * _scale(dh)
+    # (B, kv, g, Sq, Sk)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= kj > qi - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention (online softmax) with a flash BACKWARD.
+#
+# A plain scan-over-blocks forward autodiffs into a backward that saves every
+# block's probabilities (scan residuals) — measured +20 GB/device at
+# train_4k.  The custom VJP below implements the FlashAttention backward:
+# save only (q, k, v, out, lse), recompute each block's probabilities from
+# lse inside the backward sweep.  Live memory is O(S * block), both ways.
+# ---------------------------------------------------------------------------
+
+def _block_mask(qi, ki, q_chunk, kv_chunk, causal, window):
+    qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+    kpos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+    mask = jnp.ones((q_chunk, kv_chunk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk):
+    b, s, h, dh = q.shape
+    kv_heads = k.shape[2]
+    g = h // kv_heads
+    dv = v.shape[-1]
+    nq, nk = s // q_chunk, s // kv_chunk
+    qg = (_group(q, kv_heads) * _scale(dh)).astype(q.dtype)
+    qg = qg.reshape(b, nq, q_chunk, kv_heads, g, dh)
+    kc = k.reshape(b, nk, kv_chunk, kv_heads, dh)
+    vc = v.reshape(b, nk, kv_chunk, kv_heads, dv)
+
+    def q_block(qi):
+        q_blk = qg[:, qi]
+        m0 = jnp.full((b, kv_heads, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_heads, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, kv_heads, g, dv), jnp.float32)
+
+        def kv_block(carry, ki):
+            m, l, acc = carry
+            kb, vb = kc[:, ki], vc[:, ki]
+            scores = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, kb,
+                                preferred_element_type=jnp.float32)
+            mask = _block_mask(qi, ki, q_chunk, kv_chunk, causal, window)
+            scores = jnp.where(mask, scores, NEG_INF)
+            m_new = jnp.maximum(m, scores.max(axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bkgqs,bskd->bqkgd", p.astype(q.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))        # (b, kv, g, q_chunk)
+        return out.astype(q.dtype), lse
+
+    outs, lses = jax.lax.map(q_block, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dv)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kv_heads, g, s)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, dout, causal, window, q_chunk,
+                    kv_chunk):
+    b, s, h, dh = q.shape
+    kv_heads = k.shape[2]
+    g = h // kv_heads
+    dv = v.shape[-1]
+    nq, nk = s // q_chunk, s // kv_chunk
+    scale = _scale(dh)
+    qg = _group(q, kv_heads).reshape(b, nq, q_chunk, kv_heads, g, dh)
+    kc = k.reshape(b, nk, kv_chunk, kv_heads, dh)
+    vc = v.reshape(b, nk, kv_chunk, kv_heads, dv)
+    dog = _group(dout, kv_heads).reshape(b, nq, q_chunk, kv_heads, g, dv)
+    lseg = lse.reshape(b, kv_heads, g, nq, q_chunk)
+    # delta_i = rowsum(dout * out)  (b, kv, g, nq, q_chunk)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    delta = _group(delta[..., None], kv_heads)[..., 0]      # (b, s, kv, g)
+    delta = delta.reshape(b, nq, q_chunk, kv_heads, g)
+
+    def q_block(qi):
+        """dq for block qi + this block's (dk, dv) contributions."""
+        q_blk = qg[:, qi]                                   # (b,Q,kv,g,dh)
+        do_blk = dog[:, qi]
+        lse_blk = lseg[:, :, :, qi]                         # (b,kv,g,Q)
+        dlt_blk = delta[:, qi]                              # (b,Q,kv,g)
+
+        def kv_block(carry, ki):
+            dq_acc, dk_all, dv_all = carry
+            kb, vb = kc[:, ki], vc[:, ki]
+            scores = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, kb,
+                                preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(qi, ki, q_chunk, kv_chunk, causal, window)
+            p = jnp.where(mask, jnp.exp(scores - lse_blk[..., None]), 0.0)
+            # dv_j += p^T do
+            dv_blk = jnp.einsum("bkgqs,bqkgd->bskd", p.astype(dout.dtype),
+                                do_blk, preferred_element_type=jnp.float32)
+            # dp = do v^T ; ds = p * (dp - delta) * scale
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", do_blk, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dlt_blk.transpose(0, 2, 3, 1)[..., None]) * scale
+            dsq = ds.astype(q.dtype)
+            dq_acc = dq_acc + jnp.einsum("bkgqs,bskd->bqkgd", dsq, kb,
+                                         preferred_element_type=jnp.float32)
+            dk_blk = jnp.einsum("bkgqs,bqkgd->bskd", dsq, q_blk,
+                                preferred_element_type=jnp.float32)
+            dk_all = jax.lax.dynamic_update_slice_in_dim(
+                dk_all, dk_blk.astype(dk_all.dtype), ki * kv_chunk, axis=1)
+            dv_all = jax.lax.dynamic_update_slice_in_dim(
+                dv_all, dv_blk.astype(dv_all.dtype), ki * kv_chunk, axis=1)
+            return (dq_acc, dk_all, dv_all), None
+
+        dq0 = jnp.zeros((b, q_chunk, kv_heads, g, dh), jnp.float32)
+        dk0 = jnp.zeros((b, s, kv_heads, dh), jnp.float32)
+        dv0 = jnp.zeros((b, s, kv_heads, dv), jnp.float32)
+        (dq_acc, dk_all, dv_all), _ = jax.lax.scan(
+            kv_block, (dq0, dk0, dv0), jnp.arange(nk))
+        return dq_acc, dk_all, dv_all
+
+    dqs, dks, dvs = jax.lax.map(q_block, jnp.arange(nq))
+    # ds already carries the scale factor; dq = ds @ k needs no extra scale.
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dh)
+    dk = dks.sum(0).astype(k.dtype)
+    dvv = dvs.sum(0).astype(v.dtype)
+    return dq.astype(q.dtype), dk, dvv
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, q_chunk, kv_chunk):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, window, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, window, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, dout, causal, window, q_chunk,
+                           kv_chunk)
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                      window: int = 0, q_chunk: int = 1024,
+                      kv_chunk: int = 1024) -> Array:
+    """Flash attention in pure JAX: O(S * block) live memory forward AND
+    backward (custom VJP; probabilities recomputed from the saved lse).
+
+    Masked blocks are still computed (fixed-shape scan) — the causal 2x FLOP
+    overhead shows up in the roofline's MODEL_FLOPS / HLO_FLOPs ratio and is
+    a known hillclimb target (see EXPERIMENTS.md §Perf).
+    """
+    s = q.shape[1]
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    assert s % q_chunk == 0 and s % kv_chunk == 0, (s, q_chunk, kv_chunk)
+    return _flash(q, k, v, causal, window, q_chunk, kv_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Banded (sliding-window) attention via window slices — exact, no waste.
+# ---------------------------------------------------------------------------
+
+def banded_attention(q: Array, k: Array, v: Array, *, window: int,
+                     q_chunk: int = 1024) -> Array:
+    """Causal sliding-window attention, O(S * (window + chunk)) compute.
+
+    For each Q chunk, slice the KV band [start - window, start + chunk) once
+    (padding the front), so no masked-out block is ever computed beyond the
+    band edges.
+    """
+    b, s, h, dh = q.shape
+    kv_heads = k.shape[2]
+    q_chunk = min(q_chunk, s)
+    assert s % q_chunk == 0
+    nq = s // q_chunk
+    band = window + q_chunk
+
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    qg = (_group(q, kv_heads) * _scale(dh))
+    qg = qg.reshape(b, nq, q_chunk, kv_heads, h // kv_heads, dh)
+
+    def q_block(qi):
+        q_blk = qg[:, qi]
+        start = qi * q_chunk            # position in padded coords
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=1)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, kb,
+                            preferred_element_type=jnp.float32)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]      # global q idx
+        kpos = start + jnp.arange(band)[None, :] - window        # global k idx
+        mask = (kpos <= qpos) & (kpos > qpos - window) & (kpos >= 0)
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vb)
+        return out.reshape(b, q_chunk, h, v.shape[-1])
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token vs. the KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, pos: Array,
+                     window: Array | int = 0) -> Array:
+    """q: (B,1,H,dh); caches: (B,S,KV,dh); pos: () current write index.
+
+    Attends to cache positions [0, pos] (or the trailing `window` of them).
+    `window` may be a *traced* scalar (per-layer window arrays ride through
+    the layer scan); window <= 0 means unbounded.
+    """
+    b, _, h, dh = q.shape
+    kv_heads = k_cache.shape[2]
+    s = k_cache.shape[1]
+    qg = _group(q, kv_heads) * _scale(dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    kj = jnp.arange(s)
+    window = jnp.asarray(window, jnp.int32)
+    mask = (kj <= pos) & ((window <= 0) | (kj > pos - window))
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(b, 1, h, v_cache.shape[-1])
+
+
+def dispatch_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                       window: int = 0, full_threshold: int = 1024) -> Array:
+    """Pick the cheapest exact implementation for the sequence length.
+
+    Above `full_threshold` the flash-style chunked path is used even when
+    the (S, S) scores would fit: materializing f32 scores at train_4k costs
+    ~10x the HBM traffic of the online-softmax form (measured in §Perf).
+    """
+    s = q.shape[1]
+    if window > 0 and s > window:
+        return banded_attention(q, k, v, window=window,
+                                q_chunk=min(1024, s))
+    if s <= full_threshold:
+        return full_attention(q, k, v, causal=causal, window=window)
+    return chunked_attention(q, k, v, causal=causal, window=window)

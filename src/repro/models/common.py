@@ -1,0 +1,112 @@
+"""Shared building blocks: norms, RoPE, initializers, logical-axis params.
+
+Params are plain pytrees of arrays.  Every initializer returns a matching
+pytree of *logical axis names* (e.g. ("embed", "heads")) used by
+`repro.launch.sharding` to build NamedShardings — the MaxText pattern, kept
+framework-free.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Any
+Specs = Any
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def init_dense(key, shape: Sequence[int], axes: Sequence[str],
+               dtype, scale: float | None = None):
+    """Truncated-normal fan-in init + logical axes."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    w = (jax.random.truncated_normal(key, -2.0, 2.0, tuple(shape), jnp.float32)
+         * std).astype(dtype)
+    return w, tuple(axes)
+
+
+def init_embed(key, vocab: int, d: int, dtype):
+    w = (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return w, ("vocab", "embed")
+
+
+def init_scale(d: int, dtype):
+    return jnp.ones((d,), dtype), ("norm",)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos = jnp.cos(angles)[..., :, None, :]                      # (..., s, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> Array:
+    """Fixed sinusoidal embeddings (encoder stacks without RoPE)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    out = jnp.zeros((seq, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(angle))
+    out = out.at[:, 1::2].set(jnp.cos(angle[:, : (d - d // 2)]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Param-tree utilities
+# ---------------------------------------------------------------------------
+
+def split_tree(d: dict) -> tuple[dict, dict]:
+    """Split a dict-of-(value, axes) into (params, specs), recursively."""
+    params, specs = {}, {}
+    for k, v in d.items():
+        if isinstance(v, dict):
+            params[k], specs[k] = split_tree(v)
+        else:
+            params[k], specs[k] = v
+    return params, specs
+
+
+def stack_layer_params(per_layer: list[Params]) -> Params:
+    """Stack a list of identical param trees along a leading 'layers' axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_layer)
+
+
+def stacked_specs(specs: Specs) -> Specs:
+    """Prepend the (unsharded) 'layers' logical axis to every leaf spec."""
+    return jax.tree.map(lambda ax: ("layers",) + tuple(ax), specs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def cast_tree(tree: Params, dtype) -> Params:
+    return jax.tree.map(lambda x: x.astype(dtype)
+                        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def count_params(tree: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))

@@ -1,0 +1,720 @@
+"""Model assembly: blocks, scan-over-layers stacks, LM head, serve paths.
+
+One generic decoder/encoder stack covers all 10 assigned architectures:
+
+  * block kinds: "attn" (GQA or MLA, optional qk-norm / sliding window /
+    bidirectional), "mamba" (Mamba2/SSD), "mlstm" (xLSTM).
+  * layers are stacked along a leading axis and driven by `jax.lax.scan`
+    (O(1) compile time in depth — essential for 62-layer dry-runs on a
+    512-device mesh).  Per-layer heterogeneity (gemma3's 5:1 local:global
+    pattern, zamba2's every-6th shared attention) rides along as scanned
+    flag arrays + `lax.cond`, keeping the stack homogeneous.
+  * zamba2's shared attention block has ONE param set applied at several
+    depths (weight sharing) with its own KV-cache slot per application.
+
+Activation-sharding hints are emitted through `repro.launch.sharding.constrain`
+(logical axes), a no-op outside a mesh context.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (apply_rope, cast_tree, init_dense, init_embed,
+                                 init_scale, rms_norm, sinusoidal_positions,
+                                 split_tree, stack_layer_params, stacked_specs)
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def constrain(x: Array, axes: tuple) -> Array:
+    from repro.launch.sharding import constrain as _c
+    return _c(x, axes)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def _init_attn_params(key, cfg: ModelConfig):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 8)
+    dt = cfg.parameter_dtype
+    if cfg.attention == "mla":
+        qdim = cfg.qk_nope_dim + cfg.qk_rope_dim
+        tree = {
+            "wdq": init_dense(ks[0], (d, cfg.q_lora_rank), ("embed", "mlp"), dt),
+            "q_norm": init_scale(cfg.q_lora_rank, dt),
+            "wuq": init_dense(ks[1], (cfg.q_lora_rank, h * qdim),
+                              ("mlp", "heads"), dt),
+            "wdkv": init_dense(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                               ("embed", "mlp"), dt),
+            "kv_norm": init_scale(cfg.kv_lora_rank, dt),
+            "wuk": init_dense(ks[3], (cfg.kv_lora_rank, h * cfg.qk_nope_dim),
+                              ("mlp", "heads"), dt),
+            "wuv": init_dense(ks[4], (cfg.kv_lora_rank, h * cfg.v_head_dim),
+                              ("mlp", "heads"), dt),
+            "wo": init_dense(ks[5], (h * cfg.v_head_dim, d),
+                             ("heads", "embed"), dt),
+        }
+    else:
+        tree = {
+            "wq": init_dense(ks[0], (d, h * dh), ("embed", "heads"), dt),
+            "wk": init_dense(ks[1], (d, kv * dh), ("embed", "kv_heads"), dt),
+            "wv": init_dense(ks[2], (d, kv * dh), ("embed", "kv_heads"), dt),
+            "wo": init_dense(ks[3], (h * dh, d), ("heads", "embed"), dt),
+        }
+        if cfg.qk_norm:
+            tree["qn"] = init_scale(dh, dt)
+            tree["kn"] = init_scale(dh, dt)
+    return tree
+
+
+def _init_mlp_params(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.parameter_dtype
+    return {
+        "wi": init_dense(ks[0], (d, f), ("embed", "mlp"), dt),
+        "wg": init_dense(ks[1], (d, f), ("embed", "mlp"), dt),
+        "wo": init_dense(ks[2], (f, d), ("mlp", "embed"), dt),
+    }
+
+
+def _init_block_params(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    dt = cfg.parameter_dtype
+    if kind == "attn":
+        tree = {
+            "ln1": init_scale(cfg.d_model, dt),
+            "attn": _init_attn_params(ks[0], cfg),
+            "ln2": init_scale(cfg.d_model, dt),
+        }
+        if cfg.is_moe:
+            p, s = moe_mod.init_moe_params(
+                ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts, dt,
+                num_experts_padded=cfg.num_experts_padded)
+            tree["moe"] = (p, s)  # pre-split pair; flatten below
+        else:
+            tree["mlp"] = _init_mlp_params(ks[1], cfg)
+    elif kind == "mamba":
+        p, s = ssm_mod.init_mamba_params(
+            ks[0], cfg.d_model, expand=cfg.ssm_expand, state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, groups=cfg.ssm_groups, dtype=dt)
+        tree = {"ln": init_scale(cfg.d_model, dt), "mixer": (p, s)}
+    elif kind == "mlstm":
+        p, s = xlstm_mod.init_mlstm_params(
+            ks[0], cfg.d_model, heads=cfg.mlstm_heads or cfg.num_heads,
+            pf=cfg.mlstm_pf, dtype=dt)
+        tree = {"ln": init_scale(cfg.d_model, dt), "mixer": (p, s)}
+    else:
+        raise ValueError(kind)
+    return _split_nested(tree)
+
+
+def _split_nested(tree):
+    """split_tree that tolerates pre-split (params, specs) sub-pairs."""
+    params, specs = {}, {}
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            params[k], specs[k] = _split_nested(v)
+        elif isinstance(v, tuple) and len(v) == 2 and isinstance(v[0], dict):
+            params[k], specs[k] = v
+        else:
+            params[k], specs[k] = v
+    return params, specs
+
+
+def block_kind(cfg: ModelConfig) -> str:
+    return {"attn": "attn", "mamba": "mamba", "mlstm": "mlstm"}[
+        cfg.block_pattern]
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer sliding window (0 = full/global attention)."""
+    if cfg.sliding_window <= 0:
+        return jnp.zeros((cfg.num_layers,), jnp.int32)
+    if cfg.global_every <= 0:
+        return jnp.full((cfg.num_layers,), cfg.sliding_window, jnp.int32)
+    idx = jnp.arange(cfg.num_layers)
+    is_global = (idx % cfg.global_every) == (cfg.global_every - 1)
+    return jnp.where(is_global, 0, cfg.sliding_window).astype(jnp.int32)
+
+
+def shared_attn_flags(cfg: ModelConfig) -> jnp.ndarray:
+    """zamba2: apply the shared attention block after every k-th layer."""
+    if cfg.shared_attn_every <= 0:
+        return jnp.zeros((cfg.num_layers,), jnp.int32)
+    idx = jnp.arange(cfg.num_layers)
+    flag = (idx % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
+    # slot index for the shared KV cache = cumulative application count
+    return jnp.where(flag, jnp.cumsum(flag.astype(jnp.int32)), 0).astype(
+        jnp.int32)  # 0 = no application; k>0 = k-th application
+
+
+def layer_windows_py(cfg: ModelConfig) -> list:
+    """Python-int version of layer_windows (static dispatch when unrolled)."""
+    if cfg.sliding_window <= 0:
+        return [0] * cfg.num_layers
+    if cfg.global_every <= 0:
+        return [cfg.sliding_window] * cfg.num_layers
+    return [0 if (i % cfg.global_every) == (cfg.global_every - 1)
+            else cfg.sliding_window for i in range(cfg.num_layers)]
+
+
+def shared_slots_py(cfg: ModelConfig) -> list:
+    if cfg.shared_attn_every <= 0:
+        return [0] * cfg.num_layers
+    out, count = [], 0
+    for i in range(cfg.num_layers):
+        fire = (i % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
+        count += int(fire)
+        out.append(count if fire else 0)
+    return out
+
+
+def num_shared_apps(cfg: ModelConfig) -> int:
+    if cfg.shared_attn_every <= 0:
+        return 0
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def init_params(cfg: ModelConfig, key: Array):
+    """Returns (params, logical-axis specs)."""
+    ks = jax.random.split(key, cfg.num_layers + 8)
+    kind = block_kind(cfg)
+    per_layer = [_init_block_params(ks[i], cfg, kind)
+                 for i in range(cfg.num_layers)]
+    blocks = stack_layer_params([p for p, _ in per_layer])
+    block_specs = stacked_specs(per_layer[0][1])
+
+    tree: dict[str, Any] = {"blocks": (blocks, block_specs)}
+    if cfg.frontend == "frames":
+        tree["frame_proj"] = init_dense(ks[-1], (cfg.d_model, cfg.d_model),
+                                        ("embed", "mlp"), cfg.parameter_dtype)
+    else:
+        tree["embed"] = init_embed(ks[-1], cfg.vocab_padded, cfg.d_model,
+                                   cfg.parameter_dtype)
+    tree["final_norm"] = init_scale(cfg.d_model, cfg.parameter_dtype)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = init_dense(ks[-2], (cfg.d_model, cfg.vocab_padded),
+                                     ("embed", "vocab"), cfg.parameter_dtype)
+    if num_shared_apps(cfg) > 0:
+        shared_cfg = dataclasses.replace(cfg, block_pattern="attn",
+                                         num_experts=0)
+        tree["shared_attn"] = _init_block_params(ks[-3], shared_cfg, "attn")
+    params, specs = _split_nested(tree)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Attention block application
+# ---------------------------------------------------------------------------
+
+def _gqa_qkv(p, cfg: ModelConfig, x: Array, positions: Array):
+    b, s, d = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block_forward(p, cfg: ModelConfig, x: Array, window,
+                       positions: Array):
+    """Full-sequence attention sublayer (train / prefill).
+
+    `window` may be a traced scalar; global (0) vs. local dispatch happens
+    via lax.cond with the static config window used in the banded branch.
+    Returns (out, (k, v)) so prefill can build the cache.
+    """
+    h = cfg.num_heads
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        out, kv_pair = _mla_forward(p["attn"], cfg, xn, positions)
+    else:
+        q, k, v = _gqa_qkv(p["attn"], cfg, xn, positions)
+        q = constrain(q, ("batch", "seq", "heads", None))
+        k = constrain(k, ("batch", "seq", "kv_heads", None))
+        v = constrain(v, ("batch", "seq", "kv_heads", None))
+
+        if cfg.sliding_window > 0 and cfg.global_every > 0:
+            s = x.shape[1]
+
+            def local_branch(qkv):
+                q_, k_, v_ = qkv
+                if s <= cfg.sliding_window:
+                    return attn_mod.full_attention(
+                        q_, k_, v_, causal=cfg.causal,
+                        window=cfg.sliding_window)
+                return attn_mod.banded_attention(
+                    q_, k_, v_, window=cfg.sliding_window)
+
+            def global_branch(qkv):
+                q_, k_, v_ = qkv
+                return attn_mod.dispatch_attention(q_, k_, v_,
+                                                   causal=cfg.causal)
+
+            if isinstance(window, int):     # static layer type (unrolled)
+                out = (local_branch if window > 0 else global_branch)(
+                    (q, k, v))
+            else:
+                out = jax.lax.cond(window > 0, local_branch, global_branch,
+                                   (q, k, v))
+        elif cfg.sliding_window > 0:
+            out = attn_mod.dispatch_attention(q, k, v, causal=cfg.causal,
+                                              window=cfg.sliding_window)
+        else:
+            out = attn_mod.dispatch_attention(q, k, v, causal=cfg.causal)
+        kv_pair = (k, v)
+        out = out.reshape(*x.shape[:2], h * cfg.head_dim_)
+        out = out @ p["attn"]["wo"]
+    return x + out, kv_pair
+
+
+def _mla_forward(p, cfg: ModelConfig, xn: Array, positions: Array):
+    """MLA train/prefill path: materialize per-head K/V; cache latents."""
+    b, s, _ = xn.shape
+    h = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cq = rms_norm(xn @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(b, s, h, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = xn @ p["wdkv"]                              # (b,s,kvr+rdim)
+    c_kv = rms_norm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"],
+                    cfg.norm_eps)
+    k_rope = apply_rope(ckv_full[..., cfg.kv_lora_rank:][:, :, None, :],
+                        positions, cfg.rope_theta)          # (b,s,1,rdim)
+    k_nope = (c_kv @ p["wuk"]).reshape(b, s, h, nope)
+    v = (c_kv @ p["wuv"]).reshape(b, s, h, vdim)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (b, s, h, rdim))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    out = attn_mod.dispatch_attention(q_full, k, v, causal=cfg.causal)
+    out = out.reshape(b, s, h * vdim) @ p["wo"]
+    return out, (c_kv, k_rope[:, :, 0, :])                 # latent cache
+
+
+def mlp_forward(p, cfg: ModelConfig, x: Array):
+    xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        out, aux = moe_mod.moe_ffn(p["moe"], xn, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   dispatch=cfg.moe_dispatch)
+        return x + out, aux
+    # Sequence-parallel MLP: the GEMMs run on seq-sharded activations with
+    # the weights FSDP-gathered per layer; the weight-grad partial sums
+    # all-reduce over the model axis.  The Megatron-SP alternative (gather
+    # seq, TP on mlp, reduce-scatter out) was measured WORSE at deepseek
+    # width (coll 18.8 -> 27.2 s: activations outweigh weights there), so
+    # GSPMD's strategy is kept — see EXPERIMENTS.md §Perf D3 (refuted).
+    h = jax.nn.silu(xn @ p["mlp"]["wg"]) * (xn @ p["mlp"]["wi"])
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return x + h @ p["mlp"]["wo"], jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens: Array,
+            collect_cache: bool = False):
+    """tokens: (B, S) int32 ids, or (B, S, D) frames for `frontend='frames'`.
+
+    Returns (hidden (B,S,D), aux_loss, per-layer cache pytree or None).
+    The cache pytree has a leading layer axis (scan-stacked): KV pairs for
+    attention stacks, decode-state dicts for recurrent stacks, plus the
+    shared-attention KV when present.
+    """
+    act = cfg.activation_dtype
+    if cfg.frontend == "frames":
+        x = tokens.astype(act) @ params["frame_proj"].astype(act)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(act)
+    else:
+        x = params["embed"].astype(act)[tokens]
+    b, s = x.shape[:2]
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    kind = block_kind(cfg)
+    windows = layer_windows(cfg)
+    shared_slots = shared_attn_flags(cfg)
+    shared = params.get("shared_attn")
+
+    def body(x, scanned):
+        layer_p, window, shared_slot = scanned
+        layer_p = cast_tree(layer_p, act)
+        aux = jnp.zeros((), jnp.float32)
+        if kind == "attn":
+            x, state = attn_block_forward(layer_p, cfg, x, window, positions)
+            x, aux = mlp_forward(layer_p, cfg, x)
+        elif kind == "mamba":
+            xn = rms_norm(x, layer_p["ln"], cfg.norm_eps)
+            y, state = ssm_mod.mamba_block(layer_p["mixer"], xn, cfg,
+                                           return_state=True)
+            x = x + y
+        else:  # mlstm
+            xn = rms_norm(x, layer_p["ln"], cfg.norm_eps)
+            y, state = xlstm_mod.mlstm_block(layer_p["mixer"], xn, cfg,
+                                             return_state=True)
+            x = x + y
+        if shared is not None:
+            def apply_shared(x):
+                sp = cast_tree(shared, act)
+                x2, skv = attn_block_forward(sp, cfg, x, 0, positions)
+                x2, _ = mlp_forward(sp, cfg, x2)
+                return x2, skv
+
+            def no_shared(x):
+                return x, _shared_kv_zeros(cfg, b, s, act)
+
+            if isinstance(shared_slot, int):   # static (unrolled)
+                x, skv = (apply_shared if shared_slot > 0 else no_shared)(x)
+            else:
+                x, skv = jax.lax.cond(shared_slot > 0, apply_shared,
+                                      no_shared, x)
+        else:
+            skv = None
+        x = constrain(x, ("batch", "seq", "embed"))
+        outs = (state, skv) if collect_cache else None
+        return x, (outs, aux)
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat_policy == "nothing"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    if cfg.unroll_layers:
+        # Python-loop unroll: identical math, exact HLO cost accounting
+        # (XLA's HloCostAnalysis counts while-loop bodies once), and static
+        # per-layer dispatch (no dead cond branches polluting the count).
+        win_py, slot_py = layer_windows_py(cfg), shared_slots_py(cfg)
+        outs_list, aux_total = [], jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            layer_p = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
+            x, (outs, aux_i) = body(x, (layer_p, win_py[i], slot_py[i]))
+            outs_list.append(outs)
+            aux_total = aux_total + aux_i
+        if collect_cache:
+            cache_parts = jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                                       *outs_list)
+        else:
+            cache_parts = None
+        x = rms_norm(x, params["final_norm"].astype(act), cfg.norm_eps)
+        return x, aux_total, cache_parts
+
+    x, (cache_parts, aux) = jax.lax.scan(
+        body, x, (params["blocks"], windows, shared_slots))
+    x = rms_norm(x, params["final_norm"].astype(act), cfg.norm_eps)
+    return x, aux.sum(), cache_parts
+
+
+def _shared_kv_zeros(cfg, b, s, act):
+    kv, dh = cfg.num_kv_heads, cfg.head_dim_
+    return (jnp.zeros((b, s, kv, dh), act), jnp.zeros((b, s, kv, dh), act))
+
+
+def logits_from_hidden(params, cfg: ModelConfig, x: Array) -> Array:
+    act = cfg.activation_dtype
+    if cfg.tie_embeddings:
+        head = params["embed"].astype(act).T
+    else:
+        head = params["lm_head"].astype(act)
+    logits = x @ head
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def lm_loss(params, cfg: ModelConfig, batch) -> tuple[Array, dict]:
+    """Next-token (or frame-label) cross entropy + MoE aux."""
+    inputs = batch["inputs"]
+    targets = batch["targets"]
+    mask = batch.get("mask")
+    x, aux, _ = forward(params, cfg, inputs)
+    logits = logits_from_hidden(params, cfg, x).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    loss = ce + cfg.router_aux_weight * aux
+    acc = ((logits.argmax(-1) == targets) * mask).sum() / denom
+    return loss, {"ce": ce, "aux": aux, "accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int):
+    """Decode-state pytree (shape depends on block kind)."""
+    act = cfg.activation_dtype
+    kind = block_kind(cfg)
+    nl = cfg.num_layers
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if kind == "attn":
+        if cfg.attention == "mla":
+            cache["c_kv"] = jnp.zeros((nl, batch, max_len, cfg.kv_lora_rank),
+                                      act)
+            cache["k_rope"] = jnp.zeros((nl, batch, max_len, cfg.qk_rope_dim),
+                                        act)
+        else:
+            kv, dh = cfg.num_kv_heads, cfg.head_dim_
+            cache["k"] = jnp.zeros((nl, batch, max_len, kv, dh), act)
+            cache["v"] = jnp.zeros((nl, batch, max_len, kv, dh), act)
+    elif kind == "mamba":
+        one = ssm_mod.mamba_init_state(
+            _layer0(params["blocks"])["mixer"], batch, cfg, cfg.d_model, act)
+        cache["mamba"] = jax.tree.map(
+            lambda z: jnp.zeros((nl,) + z.shape, z.dtype), one)
+    else:
+        one = xlstm_mod.mlstm_init_state(
+            _layer0(params["blocks"])["mixer"], batch, cfg, cfg.d_model, act)
+        cache["mlstm"] = jax.tree.map(
+            lambda z: jnp.zeros((nl,) + z.shape, z.dtype), one)
+    napps = num_shared_apps(cfg)
+    if napps > 0:
+        kv, dh = cfg.num_kv_heads, cfg.head_dim_
+        cache["shared_k"] = jnp.zeros((napps, batch, max_len, kv, dh), act)
+        cache["shared_v"] = jnp.zeros((napps, batch, max_len, kv, dh), act)
+    return cache
+
+
+def _layer0(blocks):
+    return jax.tree.map(lambda x: x[0], blocks)
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array, max_len: int):
+    """Process the prompt; returns (last-position logits, cache).
+
+    Serving state falls out of the same scan as the forward pass: attention
+    stacks emit per-layer KV (or MLA latents); recurrent stacks emit their
+    final chunk states.
+    """
+    b, s = tokens.shape[:2]
+    x, _, cache_parts = forward(params, cfg, tokens, collect_cache=True)
+    logits = logits_from_hidden(params, cfg, x[:, -1:, :])
+    cache = init_cache(params, cfg, b, max_len)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    kind = block_kind(cfg)
+    states, skv = cache_parts
+    if kind == "attn":
+        if cfg.attention == "mla":
+            c_kv, k_rope = states         # (L, b, s, r), (L, b, s, rdim)
+            cache["c_kv"] = cache["c_kv"].at[:, :, :s].set(c_kv)
+            cache["k_rope"] = cache["k_rope"].at[:, :, :s].set(k_rope)
+        else:
+            k, v = states
+            cache["k"] = cache["k"].at[:, :, :s].set(k)
+            cache["v"] = cache["v"].at[:, :, :s].set(v)
+    elif kind == "mamba":
+        cache["mamba"] = states
+    else:
+        cache["mlstm"] = states
+    if skv is not None and "shared_k" in cache:
+        sk, sv = skv                       # (L, b, s, kv, dh), zeros where
+        period = cfg.shared_attn_every     # the shared block didn't fire
+        app_layers = [i for i in range(cfg.num_layers)
+                      if (i % period) == period - 1]
+        cache["shared_k"] = cache["shared_k"].at[:, :, :s].set(
+            sk[jnp.asarray(app_layers)])
+        cache["shared_v"] = cache["shared_v"].at[:, :, :s].set(
+            sv[jnp.asarray(app_layers)])
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token: Array):
+    """One decode step.  token: (B, 1) ids (or (B, 1, D) frames).
+
+    Returns (logits (B, 1, V), updated cache).  The layer scan threads the
+    shared-attention KV through its carry (zamba2).
+    """
+    act = cfg.activation_dtype
+    if cfg.frontend == "frames":
+        x = token.astype(act) @ params["frame_proj"].astype(act)
+    else:
+        x = params["embed"].astype(act)[token]
+    b = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    kind = block_kind(cfg)
+    windows = layer_windows(cfg)
+    shared_slots = shared_attn_flags(cfg)
+    shared = params.get("shared_attn")
+    new_cache = dict(cache)
+
+    def layer_apply(x, layer_p, window, layer_state):
+        if kind == "attn":
+            layer_p = cast_tree(layer_p, act)
+            if cfg.attention == "mla":
+                xo, layer_state = _mla_decode(layer_p, cfg, x, layer_state,
+                                              pos, positions)
+                x, _ = mlp_forward(layer_p, cfg, xo)
+                return x, layer_state
+            k_c, v_c = layer_state
+            xn = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+            q, k1, v1 = _gqa_qkv(layer_p["attn"], cfg, xn, positions)
+            k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k1, pos, axis=1)
+            v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v1, pos, axis=1)
+            out = attn_mod.decode_attention(q, k_c, v_c, pos, window=window)
+            out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim_)
+            x = x + out @ layer_p["attn"]["wo"]
+            x, _ = mlp_forward(layer_p, cfg, x)
+            return x, (k_c, v_c)
+        layer_p = cast_tree(layer_p, act)
+        xn = rms_norm(x, layer_p["ln"], cfg.norm_eps)
+        if kind == "mamba":
+            y, layer_state = ssm_mod.mamba_decode_step(layer_p["mixer"], xn,
+                                                       layer_state, cfg)
+        else:
+            y, layer_state = xlstm_mod.mlstm_decode_step(layer_p["mixer"], xn,
+                                                         layer_state, cfg)
+        return x + y, layer_state
+
+    if kind == "attn":
+        if cfg.attention == "mla":
+            per_layer_state = (cache["c_kv"], cache["k_rope"])
+        else:
+            per_layer_state = (cache["k"], cache["v"])
+    elif kind == "mamba":
+        per_layer_state = cache["mamba"]
+    else:
+        per_layer_state = cache["mlstm"]
+
+    def scan_body(carry, scanned):
+        x, sk, sv = carry
+        layer_p, window, slot, layer_state = scanned
+        x, new_state = layer_apply(x, layer_p, window, layer_state)
+        if shared is not None:
+            def apply_shared(args):
+                x, sk, sv = args
+                sp = cast_tree(shared, act)
+                xn = rms_norm(x, sp["ln1"], cfg.norm_eps)
+                q, k1, v1 = _gqa_qkv(sp["attn"], cfg, xn, positions)
+                app = slot - 1
+                skl = jax.lax.dynamic_index_in_dim(sk, app, 0, keepdims=False)
+                svl = jax.lax.dynamic_index_in_dim(sv, app, 0, keepdims=False)
+                skl = jax.lax.dynamic_update_slice_in_dim(skl, k1, pos, axis=1)
+                svl = jax.lax.dynamic_update_slice_in_dim(svl, v1, pos, axis=1)
+                out = attn_mod.decode_attention(q, skl, svl, pos)
+                out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim_)
+                x = x + out @ sp["attn"]["wo"]
+                x, _ = mlp_forward(sp, cfg, x)
+                sk = jax.lax.dynamic_update_slice_in_dim(sk, skl[None], app,
+                                                         axis=0)
+                sv = jax.lax.dynamic_update_slice_in_dim(sv, svl[None], app,
+                                                         axis=0)
+                return x, sk, sv
+
+            if isinstance(slot, int):       # static (unrolled)
+                if slot > 0:
+                    x, sk, sv = apply_shared((x, sk, sv))
+            else:
+                x, sk, sv = jax.lax.cond(slot > 0, apply_shared, lambda a: a,
+                                         (x, sk, sv))
+        return (x, sk, sv), new_state
+
+    if shared is not None:
+        carry0 = (x, cache["shared_k"], cache["shared_v"])
+    else:
+        zero = jnp.zeros((0,), act)
+        carry0 = (x, zero, zero)
+
+    if cfg.unroll_layers:
+        win_py, slot_py = layer_windows_py(cfg), shared_slots_py(cfg)
+        carry, states_list = carry0, []
+        for i in range(cfg.num_layers):
+            layer_p = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
+            state_i = jax.tree.map(lambda a, i=i: a[i], per_layer_state)
+            carry, new_state = scan_body(
+                carry, (layer_p, win_py[i], slot_py[i], state_i))
+            states_list.append(new_state)
+        (x, sk, sv) = carry
+        new_states = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *states_list)
+    else:
+        (x, sk, sv), new_states = jax.lax.scan(
+            scan_body, carry0,
+            (params["blocks"], windows, shared_slots, per_layer_state))
+
+    if kind == "attn":
+        if cfg.attention == "mla":
+            new_cache["c_kv"], new_cache["k_rope"] = new_states
+        else:
+            new_cache["k"], new_cache["v"] = new_states
+    elif kind == "mamba":
+        new_cache["mamba"] = new_states
+    else:
+        new_cache["mlstm"] = new_states
+    if shared is not None:
+        new_cache["shared_k"] = sk
+        new_cache["shared_v"] = sv
+
+    x = rms_norm(x, params["final_norm"].astype(act), cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def _mla_decode(p, cfg: ModelConfig, x, caches, pos, positions):
+    """Absorbed-projection MLA decode: attention in the latent space."""
+    ckv_c, krope_c = caches                      # (b, S, r), (b, S, rdim)
+    b = x.shape[0]
+    h = cfg.num_heads
+    nope, rdim = cfg.qk_nope_dim, cfg.qk_rope_dim
+    r = cfg.kv_lora_rank
+    ap = p["attn"]
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+
+    cq = rms_norm(xn @ ap["wdq"], ap["q_norm"], cfg.norm_eps)
+    q = (cq @ ap["wuq"]).reshape(b, 1, h, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = xn @ ap["wdkv"]
+    c_new = rms_norm(ckv_full[..., :r], ap["kv_norm"], cfg.norm_eps)
+    krope_new = apply_rope(ckv_full[..., r:][:, :, None, :], positions,
+                           cfg.rope_theta)[:, :, 0, :]
+    ckv_c = jax.lax.dynamic_update_slice_in_dim(ckv_c, c_new, pos, axis=1)
+    krope_c = jax.lax.dynamic_update_slice_in_dim(krope_c, krope_new, pos,
+                                                  axis=1)
+
+    # Absorb W_uk into q: q_abs (b, 1, h, r)
+    wuk = ap["wuk"].reshape(r, h, nope)
+    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, wuk)
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv_c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, krope_c,
+                           preferred_element_type=jnp.float32))
+    scores = scores / ((nope + rdim) ** 0.5)
+    s_len = ckv_c.shape[1]
+    mask = jnp.arange(s_len) <= pos
+    scores = jnp.where(mask[None, None, None, :], scores, attn_mod.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_latent = jnp.einsum("bhqs,bsr->bqhr", probs, ckv_c)
+    wuv = ap["wuv"].reshape(r, h, cfg.v_head_dim)
+    o = jnp.einsum("bqhr,rhv->bqhv", o_latent, wuv)
+    out = o.reshape(b, 1, h * cfg.v_head_dim) @ ap["wo"]
+    return x + out, (ckv_c, krope_c)

@@ -1,0 +1,322 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing, capacity-bounded.
+
+Design (TPU/EP-native, scales to the production mesh):
+  * routing + dispatch are *per sequence row* (vmapped over batch), so when
+    the batch axis is data-sharded all scatter/gather traffic is local to a
+    data shard — the cross-device movement is exactly the expert-parallel
+    einsum over the (B, E, C, d) buffer, which GSPMD lowers to the usual
+    all-to-all pattern with E on the "model" axis.
+  * dispatch uses scatter-by-slot (slot = expert * C + position), NOT the
+    GShard (T, E, C) one-hot einsum — the one-hot dispatch tensor is O(T^2)
+    at global batch and cannot exist at 1M tokens/step.
+  * capacity C = ceil(S * top_k / E * capacity_factor); overflow tokens drop
+    to the residual path (Switch-style), counted in the aux metrics.
+  * load-balance auxiliary loss (Switch eq. 4) is returned alongside.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_dense, split_tree
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Dispatch/combine primitives with dtype-pinned backward passes.
+#
+# Autodiff of scatter/gather under GSPMD promoted the (B, E*C, d) cotangent
+# buffers to f32 and inserted duplicate-index resolution machinery — at
+# qwen3 scale that was an 8.6 GB all-reduce per layer (§Perf forensics).
+# The custom VJPs below are the exact gradients (slots are unique by
+# construction) with cotangents pinned to the activation dtype.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def scatter_rows(buf: Array, idx: Array, rows: Array) -> Array:
+    """buf.at[idx].set(rows) with unique in-bounds idx (OOB drops)."""
+    return buf.at[idx].set(rows, mode="drop", unique_indices=True)
+
+
+def _scatter_rows_fwd(buf, idx, rows):
+    return scatter_rows(buf, idx, rows), (idx, buf.shape[0])
+
+
+def _scatter_rows_bwd(res, g):
+    idx, n = res
+    g_rows = g.at[idx].get(mode="fill", fill_value=0)
+    # slots written by rows contribute nothing to dbuf
+    dbuf = g.at[idx].set(jnp.zeros_like(g_rows), mode="drop",
+                         unique_indices=True)
+    return dbuf, None, g_rows.astype(g.dtype)
+
+
+scatter_rows.defvjp(_scatter_rows_fwd, _scatter_rows_bwd)
+
+
+@jax.custom_vjp
+def gather_rows(flat: Array, idx: Array) -> Array:
+    """flat[idx] with OOB indices returning zeros."""
+    return flat.at[idx].get(mode="fill", fill_value=0)
+
+
+def _gather_rows_fwd(flat, idx):
+    return gather_rows(flat, idx), (idx, flat.shape[0])
+
+
+def _gather_rows_bwd(res, g):
+    idx, n = res
+    dflat = jnp.zeros((n,) + g.shape[1:], g.dtype)
+    # combine gathers each slot at most top_k times with distinct tokens;
+    # scatter-add resolves the (rare) duplicate slot reads exactly.
+    dflat = dflat.at[idx].add(g, mode="drop")
+    return dflat, None
+
+
+gather_rows.defvjp(_gather_rows_fwd, _gather_rows_bwd)
+
+
+def init_moe_params(key, d_model: int, d_ff: int, num_experts: int, dtype,
+                    num_experts_padded: int | None = None):
+    """Router covers `num_experts`; weight tables may be padded to
+    `num_experts_padded` (zero-init dummy rows that never receive tokens)
+    so the expert dim divides the model mesh axis."""
+    e_pad = num_experts_padded or num_experts
+    ks = jax.random.split(key, 4)
+    tree = {
+        "router": init_dense(ks[0], (d_model, num_experts),
+                             ("embed", "expert"), dtype),
+        "wi": init_dense(ks[1], (e_pad, d_model, d_ff),
+                         ("expert", "embed", "mlp"), dtype),
+        "wg": init_dense(ks[2], (e_pad, d_model, d_ff),
+                         ("expert", "embed", "mlp"), dtype),
+        "wo": init_dense(ks[3], (e_pad, d_ff, d_model),
+                         ("expert", "mlp", "embed"), dtype),
+    }
+    return split_tree(tree)
+
+
+def _capacity(seq: int, top_k: int, num_experts: int, cf: float) -> int:
+    c = max(1, -(-seq * top_k * cf // num_experts).__int__())
+    # lane-align when large enough to matter
+    return min(seq, ((c + 7) // 8) * 8) if c > 8 else c
+
+
+def _positions_cumsum(expert_idx: Array, e: int) -> Array:
+    """Position of each (token, choice) within its expert, via the GShard
+    one-hot cumsum.  O(S*k*E) HBM traffic — kept as the ablation baseline."""
+    onehot = jax.nn.one_hot(expert_idx.reshape(-1), e, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)                # (S*k, E)
+    return jnp.take_along_axis(pos, expert_idx.reshape(-1, 1), axis=1)[:, 0]
+
+
+def _positions_sort(expert_idx: Array, e: int) -> Array:
+    """Same positions via stable argsort ranking: O(S*k log) compare traffic
+    instead of O(S*k*E) one-hot cumsum (hillclimb M2: at qwen3 scale the
+    cumsum alone moves 134 MB/layer/pass).
+
+    rank-within-expert = sorted position - start offset of the expert.
+    """
+    flat = expert_idx.reshape(-1)                              # (S*k,)
+    n = flat.shape[0]
+    order = jnp.argsort(flat, stable=True)                     # (S*k,)
+    counts = jnp.bincount(flat, length=e)
+    starts = jnp.cumsum(counts) - counts                       # (E,)
+    ranks_sorted = jnp.arange(n) - starts[flat[order]]
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(
+        ranks_sorted.astype(jnp.int32))
+    return pos
+
+
+def _route_row(x_row: Array, router: Array, top_k: int, capacity: int,
+               dispatch: str = "sort"):
+    """Per-row routing: returns (slots (S,k), gates (S,k), aux stats)."""
+    s, d = x_row.shape
+    e = router.shape[1]
+    # Router matmul in the activation dtype (its dx cotangent is (S, d)-
+    # sized; doing this matmul in f32 promoted that whole buffer to f32 —
+    # §Perf T1), softmax in f32 for routing stability.
+    logits = (x_row @ router.astype(x_row.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (S, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # (S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    pos_fn = _positions_sort if dispatch == "sort" else _positions_cumsum
+    pos = pos_fn(expert_idx, e).reshape(s, top_k)
+    keep = pos < capacity
+    slots = jnp.where(keep, expert_idx * capacity + pos, e * capacity)
+
+    density = jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32).mean(0)
+    aux = e * jnp.sum(density * probs.mean(0))
+    dropped = 1.0 - keep.mean()
+    return slots, gate_vals.astype(x_row.dtype), aux, dropped
+
+
+def _constrain(x, axes):
+    from repro.launch.sharding import constrain
+    return constrain(x, axes)
+
+
+def _shard_ctx():
+    from repro.launch.sharding import _CTX
+    return _CTX.get()
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel dispatch via shard_map (§Perf M6).
+#
+# GSPMD cannot shard a flat (E*C, d) dispatch buffer that a scatter writes
+# and a gather reads with arbitrary slots: it replicates it and pays an
+# (E*C, d)-sized all-reduce/all-gather per layer per pass (forensics in
+# EXPERIMENTS.md).  The shard_map formulation makes the data flow explicit:
+#
+#   * routing runs replicated on every model shard (identical, cheap),
+#   * each shard scatters only the tokens routed to its OWN E/n experts
+#     (out-of-range slots drop) — zero dispatch collectives,
+#   * expert GEMMs are local (FSDP all-gather of the weight shard inside),
+#   * combine gathers from the local buffer (non-local slots read 0) and
+#     psums the (S, d) partial outputs — the only per-layer collective.
+#
+# Used when the expert count divides the model axis; otherwise the GSPMD
+# path above (capacity-sharded) remains.
+# ---------------------------------------------------------------------------
+
+def _moe_shard_map(params, x: Array, *, top_k: int, capacity: int,
+                   dispatch: str, ctx) -> tuple[Array, Array]:
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh
+    rules = ctx.rules
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    e_pad = params["wi"].shape[0]    # padded tables; routing stays over e
+    n_model = mesh.shape["model"]
+    e_local = e_pad // n_model
+    batch_axes = rules.get("batch")
+    embed_axes = rules.get("embed")          # FSDP axes of the weights
+
+    def fsdp_gather(w, axis):
+        if embed_axes is None:
+            return w
+        names = embed_axes if isinstance(embed_axes, tuple) else (embed_axes,)
+        for name in names:
+            w = jax.lax.all_gather(w, name, axis=axis, tiled=True)
+        return w
+
+    wspec_e = P("model", embed_axes, None)   # (E, d, f) expert weights
+    wspec_o = P("model", None, embed_axes)   # (E, f, d)
+    rspec = P(embed_axes, None)              # router (d, E)
+    xspec = P(batch_axes, None, None)
+
+    def shard_fn(x_blk, router, wi, wg, wo):
+        # x_blk: (B_loc, S, d) replicated over model; w*: local expert shard
+        router = fsdp_gather(router, 0)
+        wi = fsdp_gather(wi, 1)
+        wg = fsdp_gather(wg, 1)
+        wo_f = fsdp_gather(wo, 2)
+        shard = jax.lax.axis_index("model")
+        offset = shard * e_local * capacity
+
+        def one_row(x_row):
+            slots, gates, aux, dropped = _route_row(
+                x_row, router, top_k, capacity, dispatch)
+            # Slots owned by other shards map to a positive OOB sentinel
+            # (negative indices would WRAP in jax indexing, not drop).
+            span = e_local * capacity
+            local = jnp.where((slots >= offset) & (slots < offset + span),
+                              slots - offset, span)
+            buf = jnp.zeros((span, d), x_row.dtype)
+            for j in range(top_k):
+                buf = scatter_rows(buf, local[:, j], x_row)
+            return buf.reshape(e_local, capacity, d), local, gates, aux
+
+        buf, local, gates, aux = jax.vmap(one_row)(x_blk)
+        hidden = jnp.einsum("becd,edf->becf", buf, wi)
+        gate_h = jnp.einsum("becd,edf->becf", buf, wg)
+        hidden = jax.nn.silu(gate_h) * hidden
+        expert_out = jnp.einsum("becf,efd->becd", hidden, wo_f)
+
+        def combine_row(buf_out, local_row, gates_row):
+            flat = buf_out.reshape(e_local * capacity, d)
+            picked = gather_rows(flat, local_row.reshape(-1))
+            picked = picked.reshape(s, top_k, d)
+            return (picked * gates_row[..., None]).sum(1)
+
+        partial = jax.vmap(combine_row)(expert_out, local, gates)
+        out = jax.lax.psum(partial, "model")
+        return out, aux.mean().reshape(1, 1)
+
+    sm = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(xspec, rspec, wspec_e, wspec_e, wspec_o),
+        out_specs=(xspec, P(batch_axes, "model")),
+        check_vma=False)
+    out, aux = sm(x, params["router"], params["wi"], params["wg"],
+                  params["wo"])
+    return out.astype(x.dtype), aux.mean().astype(jnp.float32)
+
+
+def moe_ffn(params, x: Array, *, top_k: int, capacity_factor: float,
+            dispatch: str = "sort") -> tuple[Array, Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux load-balance loss ())."""
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    e_pad = params["wi"].shape[0]
+    capacity = _capacity(s, top_k, e, capacity_factor)
+
+    ctx = _shard_ctx()
+    if (ctx is not None and "model" in ctx.mesh.axis_names
+            and e_pad % ctx.mesh.shape["model"] == 0
+            and ctx.mesh.shape["model"] > 1):
+        return _moe_shard_map(params, x, top_k=top_k, capacity=capacity,
+                              dispatch=dispatch, ctx=ctx)
+
+    # GSPMD fallback (single device, or expert count not divisible by the
+    # model axis — granite-moe's 40e: the capacity dim carries the sharding).
+    # Under sequence-parallel rules the incoming x is seq-sharded; scattering
+    # seq-sharded updates into the dispatch buffer makes GSPMD all-reduce the
+    # whole (E*C, d) buffer per layer (§Perf M5 forensics: 8.6 GB/layer at
+    # qwen3 scale).  Gather the sequence FIRST — an (S, d) all-gather is
+    # ~8x smaller — then dispatch locally.
+    x = _constrain(x, ("batch", None, None))
+
+    def dispatch_row(x_row):
+        slots, gates, aux, dropped = _route_row(
+            x_row, params["router"], top_k, capacity, dispatch)
+        buf = jnp.zeros((e * capacity + 1, d), x_row.dtype)
+        # Each kept (token, choice) owns a unique slot; k scatter-sets avoid
+        # materializing the (S*k, d) repeat (hillclimb M3).  scatter_rows
+        # pins the backward to the activation dtype and skips duplicate-
+        # index resolution (hillclimb M4).
+        for j in range(top_k):
+            buf = scatter_rows(buf, slots[:, j], x_row)
+        return buf[:-1].reshape(e, capacity, d), slots, gates, aux, dropped
+
+    buf, slots, gates, aux, dropped = jax.vmap(dispatch_row)(x)
+    # Expert GEMMs over the (B, E, C, d) buffer: B data-sharded, E
+    # model-sharded -> local compute after GSPMD's all-to-all.  For archs
+    # whose expert count doesn't divide the model axis (granite-moe: 40e on
+    # a 16-way axis) the "capacity" logical axis carries the sharding
+    # instead (see launch/sharding.ARCH_OVERRIDES) — without it the whole
+    # (B, E, C, d) buffer replicates per device (measured 167 GB/device).
+    buf = _constrain(buf, ("batch", "expert", "capacity", None))
+    hidden = jnp.einsum("becd,edf->becf", buf, params["wi"][:e])
+    gate_h = jnp.einsum("becd,edf->becf", buf, params["wg"][:e])
+    hidden = jax.nn.silu(gate_h) * hidden
+    hidden = _constrain(hidden, ("batch", "expert", "capacity", "mlp"))
+    expert_out = jnp.einsum("becf,efd->becd", hidden, params["wo"][:e])
+    expert_out = _constrain(expert_out, ("batch", "expert", "capacity", None))
+
+    def combine_row(buf_out, slots_row, gates_row):
+        flat = buf_out.reshape(e * capacity, d)
+        flat = jnp.concatenate([flat, jnp.zeros((1, d), flat.dtype)], 0)
+        picked = gather_rows(flat, slots_row.reshape(-1))
+        picked = picked.reshape(s, top_k, d)
+        return (picked * gates_row[..., None]).sum(1)
+
+    out = jax.vmap(combine_row)(expert_out, slots, gates)
+    aux_loss = aux.mean() + 0.0 * dropped.mean()
+    return out.astype(x.dtype), aux_loss.astype(jnp.float32)

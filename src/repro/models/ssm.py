@@ -1,0 +1,260 @@
+"""Mamba2 (SSD) blocks: chunked training scan + O(1)-state decode.
+
+Implements the state-space-duality algorithm of Mamba-2 [arXiv:2405.21060]:
+within a chunk the recurrence is computed in quadratic "attention-like" form
+(MXU-friendly); across chunks a (heads, head_dim, state) carry propagates via
+`lax.scan`.  The decode path is the literal per-token recurrence, giving the
+sub-quadratic serving path the assignment requires for `long_500k`.
+
+A naive per-token recurrent reference (`ssd_recurrent_ref`) backs the
+equivalence tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_dense, split_tree
+
+Array = jax.Array
+
+
+def init_mamba_params(key, d_model: int, *, expand: int, state: int,
+                      head_dim: int, groups: int, dtype, conv_width: int = 4):
+    din = expand * d_model
+    nheads = din // head_dim
+    proj_out = 2 * din + 2 * groups * state + nheads
+    conv_dim = din + 2 * groups * state
+    ks = jax.random.split(key, 5)
+    tree = {
+        "in_proj": init_dense(ks[0], (d_model, proj_out), ("embed", "mlp"),
+                              dtype),
+        "conv_w": init_dense(ks[1], (conv_width, conv_dim), ("layers_none", "mlp"),
+                             dtype, scale=0.5),
+        "conv_b": (jnp.zeros((conv_dim,), dtype), ("mlp",)),
+        "a_log": (jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dtype),
+                  ("heads",)),
+        "dt_bias": (jnp.zeros((nheads,), dtype), ("heads",)),
+        "d_skip": (jnp.ones((nheads,), dtype), ("heads",)),
+        "norm_scale": (jnp.ones((din,), dtype), ("mlp",)),
+        "out_proj": init_dense(ks[4], (din, d_model), ("mlp", "embed"), dtype),
+    }
+    return split_tree(tree)
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d.  x: (B, L, C); w: (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _segsum(a: Array) -> Array:
+    """Lower-triangular pairwise decay exponents: out[t, s] = sum_{s<u<=t} a[u].
+
+    a: (..., Q).  Returns (..., Q, Q) with -inf above the diagonal.
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_(s, t]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, b_mat: Array, c_mat: Array,
+                *, chunk: int, h0: Array | None = None,
+                return_final_state: bool = False):
+    """SSD scan.  x: (B, L, H, P); dt: (B, L, H); a: (H,) (negative);
+    b_mat/c_mat: (B, L, G, N) with H % G == 0.
+
+    Returns y (B, L, H, P) [and final state (B, H, P, N)].
+    """
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    chunk = min(chunk, l)
+    l_orig = l
+    if l % chunk:
+        # Zero-pad to a chunk multiple: dt=0 => decay 1 and zero input, so
+        # padded steps are exact no-ops for both outputs and the final state.
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // chunk
+
+    # Broadcast groups to heads.
+    bh = jnp.repeat(b_mat, rep, axis=2)                 # (B, L, H, N)
+    ch = jnp.repeat(c_mat, rep, axis=2)
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = bh.reshape(bsz, nc, chunk, h, n)
+    cc = ch.reshape(bsz, nc, chunk, h, n)
+    ac = (dtc * a[None, None, None, :]).astype(jnp.float32)  # (B, nc, Q, H)
+
+    acs = jnp.cumsum(ac, axis=2)                        # inclusive cumsum
+    seg = _segsum(ac.transpose(0, 1, 3, 2))             # (B, nc, H, Q, Q)
+    decay_mat = jnp.exp(seg)
+
+    # Intra-chunk (quadratic) term.
+    scores = jnp.einsum("bzqhn,bzshn->bzhqs", cc, bc,
+                        preferred_element_type=jnp.float32)
+    scores = scores * decay_mat * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bzhqs,bzshp->bzqhp", scores.astype(x.dtype), xc)
+
+    # Per-chunk final state contribution: sum_s exp(acs[Q-1]-acs[s]) dt_s B_s x_s.
+    decay_to_end = jnp.exp(acs[:, :, -1:, :] - acs)     # (B, nc, Q, H)
+    dtb = (dtc * decay_to_end).astype(x.dtype)
+    chunk_states = jnp.einsum("bzshn,bzshp,bzsh->bzhpn", bc, xc, dtb)
+    chunk_decay = jnp.exp(acs[:, :, -1, :])             # (B, nc, H)
+
+    # Inter-chunk recurrence.
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def scan_fn(hprev, inp):
+        cstate, cdecay = inp                            # (B,H,P,N), (B,H)
+        hnew = hprev * cdecay[..., None, None] + cstate.astype(jnp.float32)
+        return hnew, hprev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_fn, h0.astype(jnp.float32),
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)          # (B, nc, H, P, N)
+
+    # Inter-chunk output: C_t . h_prev, decayed from chunk start to t.
+    decay_from_start = jnp.exp(acs)                     # (B, nc, Q, H)
+    y_inter = jnp.einsum("bzqhn,bzhpn->bzqhp", cc,
+                         h_prevs.astype(cc.dtype))
+    y_inter = y_inter * decay_from_start[..., None].astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)[:, :l_orig]
+    if return_final_state:
+        return y, h_final
+    return y
+
+
+def ssd_recurrent_ref(x, dt, a, b_mat, c_mat, h0=None):
+    """Naive per-token recurrence (oracle for tests)."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b_mat, rep, axis=2)
+    ch = jnp.repeat(c_mat, rep, axis=2)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp                 # (B,H,P), (B,H), (B,H,N) x2
+        decay = jnp.exp(dtt * a[None, :])     # (B,H)
+        hnew = (hprev * decay[..., None, None]
+                + (dtt[..., None, None] * xt[..., None] * bt[:, :, None, :]))
+        y = jnp.einsum("bhn,bhpn->bhp", ct, hnew)
+        return hnew, y
+
+    inputs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+              bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), inputs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# Block-level forward (train / prefill) and decode step
+# ---------------------------------------------------------------------------
+
+def _split_proj(proj, din, groups, state, nheads):
+    z, xin, b, c, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + groups * state,
+               2 * din + 2 * groups * state], axis=-1)
+    return z, xin, b, c, dt
+
+
+def mamba_block(params, x: Array, cfg, *, return_state: bool = False):
+    """Full-sequence Mamba2 mixer.  x: (B, L, D) -> (B, L, D).
+
+    With return_state=True also returns the decode state pytree (conv tail +
+    final SSD carry), so prefill gets serving state for free.
+    """
+    from repro.models.common import rms_norm  # local import to avoid cycle
+    bsz, l, d = x.shape
+    din = cfg.ssm_expand * d
+    nheads = din // cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    proj = x @ params["in_proj"]
+    z, xin, b, c, dt_raw = _split_proj(proj, din, g, n, nheads)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"]))
+    xin, b, c = jnp.split(conv_out, [din, din + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xin.reshape(bsz, l, nheads, cfg.ssm_head_dim)
+    bm = b.reshape(bsz, l, g, n)
+    cm = c.reshape(bsz, l, g, n)
+    y, h_final = ssd_chunked(xh, dt, a, bm, cm, chunk=cfg.ssm_chunk,
+                             return_final_state=True)
+    y = y + xh * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, din)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        width = params["conv_w"].shape[0]
+        state = {"conv": conv_in[:, l - (width - 1):, :], "ssm": h_final}
+        return out, state
+    return out
+
+
+def mamba_init_state(params, batch: int, cfg, d_model: int, dtype):
+    din = cfg.ssm_expand * d_model
+    nheads = din // cfg.ssm_head_dim
+    conv_dim = din + 2 * cfg.ssm_groups * cfg.ssm_state
+    width = params["conv_w"].shape[0]
+    return {
+        "conv": jnp.zeros((batch, width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+    }
+
+
+def mamba_decode_step(params, x: Array, state: dict, cfg):
+    """One-token recurrence.  x: (B, 1, D) -> (y (B, 1, D), new state)."""
+    from repro.models.common import rms_norm
+    bsz, _, d = x.shape
+    din = cfg.ssm_expand * d
+    nheads = din // cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    proj = x[:, 0] @ params["in_proj"]
+    z, xin, b, c, dt_raw = _split_proj(proj, din, g, n, nheads)
+    conv_in = jnp.concatenate([xin, b, c], axis=-1)     # (B, conv_dim)
+    hist = jnp.concatenate([state["conv"], conv_in[:, None, :]], axis=1)
+    w = params["conv_w"]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"])
+    xin, b, c = jnp.split(conv_out, [din, din + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xin.reshape(bsz, nheads, cfg.ssm_head_dim)
+    bm = jnp.repeat(b.reshape(bsz, g, n), nheads // g, axis=1)
+    cm = jnp.repeat(c.reshape(bsz, g, n), nheads // g, axis=1)
+
+    decay = jnp.exp(dt * a[None, :])                    # (B, H)
+    h = (state["ssm"] * decay[..., None, None]
+         + dt[..., None, None] * xh[..., None] * bm[:, :, None, :])
+    y = jnp.einsum("bhn,bhpn->bhp", cm, h).astype(x.dtype)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, din)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv": hist[:, 1:], "ssm": h}

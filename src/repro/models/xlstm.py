@@ -1,0 +1,272 @@
+"""xLSTM mLSTM blocks [arXiv:2405.04517]: chunkwise-parallel train scan and
+O(1)-state recurrent decode.
+
+The mLSTM cell keeps a matrix memory C (dh x dh), normalizer n (dh) and a
+log-space stabilizer m per head, with exponential input gates and sigmoid
+forget gates:
+
+  m_t = max(log f_t + m_{t-1}, log i_t)
+  C_t = e^{log f_t + m_{t-1} - m_t} C_{t-1} + e^{log i_t - m_t} v_t k_t^T
+  n_t = (same decays) n_{t-1} + e^{log i_t - m_t} k_t
+  h_t = (C_t q_t) / max(|n_t^T q_t|, e^{-m_t})
+
+The chunkwise form evaluates the intra-chunk part as a decay-masked
+attention-like product and carries (C, n, m) across chunks — structurally
+the same schedule as Mamba-2's SSD, so the same sharding applies.  The
+per-token recurrence (`mlstm_recurrent_ref` / decode path) is the oracle.
+
+Per the assigned config (d_ff = 0), blocks carry an internal up-projection
+(pf = 2) instead of a separate FFN, matching the xLSTM paper's mLSTM block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_dense, rms_norm, split_tree
+
+Array = jax.Array
+
+
+def init_mlstm_params(key, d_model: int, *, heads: int, pf: float, dtype,
+                      conv_width: int = 4):
+    dv = int(pf * d_model)
+    ks = jax.random.split(key, 8)
+    tree = {
+        "up_proj": init_dense(ks[0], (d_model, 2 * dv), ("embed", "mlp"),
+                              dtype),
+        "conv_w": init_dense(ks[1], (conv_width, dv), ("layers_none", "mlp"),
+                             dtype, scale=0.5),
+        "conv_b": (jnp.zeros((dv,), dtype), ("mlp",)),
+        "wq": init_dense(ks[2], (dv, dv), ("mlp", "heads"), dtype),
+        "wk": init_dense(ks[3], (dv, dv), ("mlp", "heads"), dtype),
+        "wv": init_dense(ks[4], (dv, dv), ("mlp", "heads"), dtype),
+        "w_gates": init_dense(ks[5], (dv, 2 * heads), ("mlp", "heads"), dtype,
+                              scale=0.01),
+        "b_gates": (jnp.concatenate([jnp.zeros((heads,)),
+                                     jnp.linspace(3.0, 6.0, heads)]
+                                    ).astype(dtype), ("heads",)),
+        "norm_scale": (jnp.ones((dv,), dtype), ("mlp",)),
+        "down_proj": init_dense(ks[7], (dv, d_model), ("mlp", "embed"), dtype),
+    }
+    return split_tree(tree)
+
+
+def _qkv_gates(params, x_up: Array, heads: int):
+    """x_up: (B, L, dv) (post-conv for q/k, raw for v)."""
+    b, l, dv = x_up.shape
+    dh = dv // heads
+    conv = jax.nn.silu(_causal_conv(x_up, params["conv_w"], params["conv_b"]))
+    q = (conv @ params["wq"]).reshape(b, l, heads, dh)
+    k = (conv @ params["wk"]).reshape(b, l, heads, dh) / (dh ** 0.5)
+    v = (x_up @ params["wv"]).reshape(b, l, heads, dh)
+    gates = conv @ params["w_gates"] + params["b_gates"]
+    logi = gates[..., :heads].astype(jnp.float32)              # (B, L, H)
+    logf = jax.nn.log_sigmoid(gates[..., heads:].astype(jnp.float32))
+    return q, k, v, logi, logf
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def mlstm_chunked(q, k, v, logi, logf, *, chunk: int, state=None,
+                  return_final_state: bool = False):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q/k/v: (B, L, H, dh); logi/logf: (B, L, H).  state: (C, n, m) with
+    C (B, H, dh, dh), n (B, H, dh), m (B, H).
+    """
+    bsz, l, h, dh = q.shape
+    chunk = min(chunk, l)
+    l_orig = l
+    if l % chunk:
+        # Pad with no-op steps: f=1 (logf=0), i=exp(-inf)=0, zero q/k/v.
+        pad = chunk - l % chunk
+        zpad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        zpad3 = ((0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, zpad4)
+        k = jnp.pad(k, zpad4)
+        v = jnp.pad(v, zpad4)
+        logf = jnp.pad(logf, zpad3)
+        logi = jnp.pad(logi, zpad3, constant_values=-1e30)
+        l = l + pad
+    nc = l // chunk
+
+    qc = q.reshape(bsz, nc, chunk, h, dh)
+    kc = k.reshape(bsz, nc, chunk, h, dh)
+    vc = v.reshape(bsz, nc, chunk, h, dh)
+    lic = logi.reshape(bsz, nc, chunk, h)
+    lfc = logf.reshape(bsz, nc, chunk, h)
+
+    fcs = jnp.cumsum(lfc, axis=2)                        # inclusive (B,nc,Q,H)
+    # intra decay exponent: D[t,s] = fcs[t] - fcs[s] + logi[s], s <= t
+    dmat = (fcs[:, :, :, None, :] - fcs[:, :, None, :, :]
+            + lic[:, :, None, :, :])                     # (B,nc,Q,S,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(tri[None, None, :, :, None], dmat, -jnp.inf)
+    intra_max = dmat.max(axis=3)                         # (B,nc,Q,H)
+
+    if state is None:
+        c0 = jnp.zeros((bsz, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((bsz, h, dh), jnp.float32)
+        m0 = jnp.full((bsz, h), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    # --- inter-chunk carry: scan over chunks ------------------------------
+    # end-of-chunk contributions: sum_s exp(fcs[Q-1]-fcs[s]+logi[s]-m_new) kv
+    def scan_fn(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        kb, vb, li, lf, fcs_b = inp       # (B,Q,H,dh) x2, (B,Q,H) x3
+        fend = fcs_b[:, -1, :]                                 # (B, H)
+        to_end = fend[:, None, :] - fcs_b + li                 # (B, Q, H)
+        m_local = to_end.max(axis=1)                           # (B, H)
+        m_new = jnp.maximum(fend + m_prev, m_local)
+        decay_carry = jnp.exp(fend + m_prev - m_new)           # (B, H)
+        w = jnp.exp(to_end - m_new[:, None, :])                # (B, Q, H)
+        c_new = (c_prev * decay_carry[..., None, None]
+                 + jnp.einsum("bqhv,bqhk,bqh->bhvk", vb, kb, w))
+        n_new = (n_prev * decay_carry[..., None]
+                 + jnp.einsum("bqhk,bqh->bhk", kb, w))
+        return (c_new, n_new, m_new), (c_prev, n_prev, m_prev)
+
+    inputs = (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+              lic.transpose(1, 0, 2, 3), lfc.transpose(1, 0, 2, 3),
+              fcs.transpose(1, 0, 2, 3))
+    (c_f, n_f, m_f), (c_prevs, n_prevs, m_prevs) = jax.lax.scan(
+        scan_fn, (c0.astype(jnp.float32), n0.astype(jnp.float32),
+                  m0.astype(jnp.float32)), inputs)
+    c_prevs = c_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,dh,dh)
+    n_prevs = n_prevs.transpose(1, 0, 2, 3)              # (B,nc,H,dh)
+    m_prevs = m_prevs.transpose(1, 0, 2)                 # (B,nc,H)
+
+    # --- combine intra + inter with a joint stabilizer --------------------
+    inter_exp = fcs + m_prevs[:, :, None, :]             # (B,nc,Q,H)
+    m_t = jnp.maximum(intra_max, inter_exp)              # per-position stab
+    m_t = jnp.where(jnp.isfinite(m_t), m_t, 0.0)
+
+    w_intra = jnp.exp(dmat - m_t[:, :, :, None, :])      # (B,nc,Q,S,H)
+    w_intra = jnp.where(tri[None, None, :, :, None], w_intra, 0.0)
+    scores = jnp.einsum("bzqhd,bzshd->bzqsh", qc, kc,
+                        preferred_element_type=jnp.float32)
+    num_intra = jnp.einsum("bzqsh,bzqsh,bzshd->bzqhd", scores, w_intra,
+                           vc.astype(jnp.float32))
+    den_intra = jnp.einsum("bzqsh,bzqsh->bzqh", scores, w_intra)
+
+    w_inter = jnp.exp(inter_exp - m_t)                   # (B,nc,Q,H)
+    qf = qc.astype(jnp.float32)
+    num_inter = jnp.einsum("bzqhd,bzhvd->bzqhv", qf,
+                           c_prevs.astype(jnp.float32).transpose(0, 1, 2, 3, 4))
+    num_inter = num_inter * w_inter[..., None]
+    den_inter = jnp.einsum("bzqhd,bzhd->bzqh", qf, n_prevs) * w_inter
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    y = (num / denom[..., None]).reshape(bsz, l, h, dh)[:, :l_orig]
+    y = y.astype(q.dtype)
+    if return_final_state:
+        return y, (c_f, n_f, m_f)
+    return y
+
+
+def mlstm_recurrent_ref(q, k, v, logi, logf, state=None):
+    """Per-token recurrence (oracle + decode path)."""
+    bsz, l, h, dh = q.shape
+    if state is None:
+        state = (jnp.zeros((bsz, h, dh, dh), jnp.float32),
+                 jnp.zeros((bsz, h, dh), jnp.float32),
+                 jnp.full((bsz, h), -jnp.inf, jnp.float32))
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        fdec = jnp.exp(lf + m - m_new)
+        iexp = jnp.exp(li - m_new)
+        c = c * fdec[..., None, None] + iexp[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :]).astype(jnp.float32)
+        n = n * fdec[..., None] + iexp[..., None] * kt.astype(jnp.float32)
+        num = jnp.einsum("bhvd,bhd->bhv", c, qt.astype(jnp.float32))
+        den = jnp.einsum("bhd,bhd->bh", n, qt.astype(jnp.float32))
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+        y = num / denom[..., None]
+        return (c, n, m_new), y
+
+    inputs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+              v.transpose(1, 0, 2, 3), logi.transpose(1, 0, 2),
+              logf.transpose(1, 0, 2))
+    (c, n, m), ys = jax.lax.scan(step, state, inputs)
+    return ys.transpose(1, 0, 2, 3).astype(q.dtype), (c, n, m)
+
+
+# ---------------------------------------------------------------------------
+# Block-level forward / decode
+# ---------------------------------------------------------------------------
+
+def mlstm_block(params, x: Array, cfg, *, return_state: bool = False):
+    """x: (B, L, D) -> (B, L, D).  Optionally returns the decode state."""
+    heads = cfg.mlstm_heads or cfg.num_heads
+    up = x @ params["up_proj"]
+    dv = up.shape[-1] // 2
+    u, z = up[..., :dv], up[..., dv:]
+    q, k, v, logi, logf = _qkv_gates(params, u, heads)
+    y, (c, n, m) = mlstm_chunked(q, k, v, logi, logf,
+                                 chunk=cfg.ssm_chunk or 128,
+                                 return_final_state=True)
+    y = y.reshape(*x.shape[:2], dv)
+    y = rms_norm(y, params["norm_scale"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ params["down_proj"]
+    if return_state:
+        width = params["conv_w"].shape[0]
+        state = {"conv": u[:, x.shape[1] - (width - 1):, :],
+                 "c": c, "n": n, "m": m}
+        return out, state
+    return out
+
+
+def mlstm_init_state(params, batch: int, cfg, d_model: int, dtype):
+    heads = cfg.mlstm_heads or cfg.num_heads
+    dv = int(cfg.mlstm_pf * d_model)
+    dh = dv // heads
+    width = params["conv_w"].shape[0]
+    return {
+        "conv": jnp.zeros((batch, width - 1, dv), dtype),
+        "c": jnp.zeros((batch, heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, heads, dh), jnp.float32),
+        "m": jnp.full((batch, heads), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_decode_step(params, x: Array, state: dict, cfg):
+    """x: (B, 1, D) -> (y (B, 1, D), new state)."""
+    heads = cfg.mlstm_heads or cfg.num_heads
+    b = x.shape[0]
+    up = x[:, 0] @ params["up_proj"]
+    dv = up.shape[-1] // 2
+    u, z = up[..., :dv], up[..., dv:]
+    dh = dv // heads
+
+    hist = jnp.concatenate([state["conv"], u[:, None, :]], axis=1)
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, params["conv_w"])
+                       + params["conv_b"])
+    q = (conv @ params["wq"]).reshape(b, 1, heads, dh)
+    k = ((conv @ params["wk"]) / (dh ** 0.5)).reshape(b, 1, heads, dh)
+    v = (u @ params["wv"]).reshape(b, 1, heads, dh)
+    gates = conv @ params["w_gates"] + params["b_gates"]
+    logi = gates[..., :heads].astype(jnp.float32)[:, None, :]
+    logf = jax.nn.log_sigmoid(
+        gates[..., heads:].astype(jnp.float32))[:, None, :]
+
+    y, (c, n, m) = mlstm_recurrent_ref(
+        q, k, v, logi, logf, (state["c"], state["n"], state["m"]))
+    y = y.reshape(b, dv)
+    y = rms_norm(y, params["norm_scale"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ params["down_proj"])[:, None, :]
+    return out, {"conv": hist[:, 1:], "c": c, "n": n, "m": m}

@@ -1,0 +1,6 @@
+"""Train / serve step builders."""
+from repro.training.steps import (TrainConfig, init_train_state,
+                                  make_decode_step, make_eval_step,
+                                  make_prefill_step, make_train_step)
+__all__ = ["TrainConfig", "init_train_state", "make_decode_step",
+           "make_eval_step", "make_prefill_step", "make_train_step"]

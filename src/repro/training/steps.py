@@ -1,0 +1,125 @@
+"""Train / prefill / decode step builders (what launch/dryrun lowers).
+
+`make_train_step` closes over (ModelConfig, OptimizerConfig) and returns the
+pure function pjit compiles:
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+Microbatching (gradient accumulation) runs as a `lax.scan` over microbatch
+slices, which also pipelines the DP gradient reduction behind the next
+microbatch's compute under XLA's latency-hiding scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm_loss
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import (OptimizerConfig, OptState, apply_updates,
+                                    init_opt_state)
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1     # gradient-accumulation steps per update
+    loss_dtype: str = "float32"
+    bf16_grads: bool = False  # differentiate wrt a bf16 copy of the params:
+    # gradients (and their DP reductions) become bf16 — halves the dominant
+    # grad-reduction collective payload; the f32 master update is unchanged
+    # (§Perf hillclimb D1).
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    train_cfg: TrainConfig | None = None) -> Callable:
+    train_cfg = train_cfg or TrainConfig()
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single_step(params, opt_state: OptState, batch):
+        if train_cfg.bf16_grads:
+            from repro.models.common import cast_tree
+            (loss, metrics), grads = grad_fn(
+                cast_tree(params, jnp.bfloat16), batch)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        params, opt_state, opt_metrics = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    if train_cfg.microbatches <= 1:
+        return single_step
+
+    m = train_cfg.microbatches
+
+    def accum_step(params, opt_state: OptState, batch):
+        def slice_micro(i, x):
+            mb = x.shape[0] // m
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            gsum, lsum = carry
+            micro = jax.tree.map(lambda x: slice_micro(i, x), batch)
+            (loss, _), grads = grad_fn(params, micro)
+            gsum = jax.tree.map(jnp.add, gsum, grads)
+            return (gsum, lsum + loss), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.zeros(())),
+                                       jnp.arange(m))
+        grads = jax.tree.map(lambda g: g / m, gsum)
+        params, opt_state, opt_metrics = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(loss=lsum / m, **opt_metrics)
+        return params, opt_state, metrics
+
+    return accum_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    from repro.models import prefill
+
+    def prefill_step(params, tokens):
+        return prefill(params, cfg, tokens, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    from repro.models import decode_step as _decode
+
+    def serve_step(params, cache, token):
+        return _decode(params, cfg, cache, token)
+
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: OptimizerConfig, key):
+    from repro.models import init_params
+    params, specs = init_params(cfg, key)
+    opt_state = init_opt_state(opt_cfg, params)
+    return params, opt_state, specs

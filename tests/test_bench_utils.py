@@ -1,0 +1,78 @@
+"""Unit tests for benchmark/dry-run utilities (pure python, fast)."""
+import pytest
+
+import os as _os
+
+# Importing repro.launch.dryrun sets XLA_FLAGS (its required first lines);
+# restore the environment immediately so the main pytest process keeps
+# seeing 1 device (the assignment forbids setting the flag globally).
+_saved_xla_flags = _os.environ.get("XLA_FLAGS")
+from benchmarks.roofline import SHAPE_FACTOR, SHAPE_TOKENS, analyse
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.dryrun import _lin_combine, _pattern_period
+from repro.launch.specs import SHAPES, cell_applicable
+
+if _saved_xla_flags is None:
+    _os.environ.pop("XLA_FLAGS", None)
+else:
+    _os.environ["XLA_FLAGS"] = _saved_xla_flags
+
+
+
+def test_lin_combine_exact_for_linear_costs():
+    c1 = {"cost": {"flops": 10.0, "bytes": 100.0}, "n": 3}
+    c2 = {"cost": {"flops": 16.0, "bytes": 160.0}, "n": 5}
+    out = _lin_combine(c1, c2, 1, 2, 10)   # f(L) = 4 + 6L, b(L) = 40+60L
+    assert out["cost"]["flops"] == pytest.approx(4 + 6 * 10)
+    assert out["cost"]["bytes"] == pytest.approx(40 + 60 * 10)
+
+
+def test_pattern_period_per_arch():
+    assert _pattern_period(get_config("gemma3-4b")) == 6
+    assert _pattern_period(get_config("zamba2-1.2b")) == 6
+    assert _pattern_period(get_config("granite-3-2b")) == 1
+
+
+def test_cell_applicability_matrix():
+    """32 runnable + 8 documented skips = 40 assigned cells."""
+    runnable = skipped = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, reason = cell_applicable(cfg, shape)
+            if ok:
+                runnable += 1
+            else:
+                skipped += 1
+                assert reason
+    assert runnable == 32
+    assert skipped == 8
+
+
+def test_skips_match_design_doc():
+    full_attn = ["granite-moe-3b-a800m", "qwen3-moe-30b-a3b",
+                 "deepseek-coder-33b", "minicpm3-4b", "granite-3-2b",
+                 "chameleon-34b"]
+    for arch in full_attn:
+        ok, reason = cell_applicable(get_config(arch), "long_500k")
+        assert not ok and "full-attention" in reason
+    for shape in ("decode_32k", "long_500k"):
+        ok, reason = cell_applicable(get_config("hubert-xlarge"), shape)
+        assert not ok and "encoder" in reason
+    for arch in ("gemma3-4b", "zamba2-1.2b", "xlstm-1.3b"):
+        ok, _ = cell_applicable(get_config(arch), "long_500k")
+        assert ok
+
+
+def test_shape_grid_matches_assignment():
+    assert SHAPES["train_4k"].seq == 4096 and SHAPES["train_4k"].batch == 256
+    assert SHAPES["prefill_32k"].seq == 32768
+    assert SHAPES["decode_32k"].batch == 128
+    assert SHAPES["long_500k"].seq == 524288
+    assert SHAPE_TOKENS["train_4k"] == 4096 * 256
+    assert SHAPE_FACTOR["train_4k"] == 6.0
+
+
+def test_analyse_skips_non_ok():
+    assert analyse({"status": "skipped"}) is None
+    assert analyse({"status": "error"}) is None

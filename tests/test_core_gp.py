@@ -1,0 +1,269 @@
+"""Unit + property tests for the lazy-GP core (the paper's contribution).
+
+Covers: lazy-vs-naive Cholesky equivalence (Alg. 2 vs Alg. 3), the paper's
+well-definedness lemma for d, posterior parity with a textbook GP, identity-
+padding invariants, EI closed form, lag policy, and batch (parallel) appends.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GPConfig, KernelParams, append, append_batch,
+                        cholesky_naive, dense_posterior, expected_improvement,
+                        gram, init_state, log_marginal_likelihood, matern52,
+                        neg_levy, levy, posterior, refactor, refit_params,
+                        run_bo, levy_bounds)
+from repro.core import cholesky as chol
+from repro.core import gp as gp_mod
+from repro.core.acquisition import AcqConfig, optimize_acquisition
+
+
+def _seed_state(key, n0, d, n_max, noise2=1e-6):
+    xs = jax.random.uniform(key, (n0, d), minval=-2.0, maxval=2.0)
+    ys = jnp.sin(xs.sum(-1)) + 0.1 * xs[:, 0]
+    cfg = GPConfig(n_max=n_max, dim=d, noise2=noise2)
+    st_ = init_state(cfg)
+    st_ = dataclasses.replace(
+        st_, x_buf=st_.x_buf.at[:n0].set(xs),
+        y_buf=st_.y_buf.at[:n0].set(ys), n=jnp.asarray(n0, jnp.int32))
+    return refactor(st_, matern52), xs, ys
+
+
+# ---------------------------------------------------------------------------
+# Paper Alg. 2 (naive) vs XLA
+# ---------------------------------------------------------------------------
+def test_naive_cholesky_matches_xla():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (24, 4))
+    k = gram(matern52, x, KernelParams.default())
+    np.testing.assert_allclose(np.asarray(cholesky_naive(k)),
+                               np.asarray(jnp.linalg.cholesky(k)),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Lazy append (Alg. 3) == full refactorization, for any append sequence
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(n0=st.integers(2, 8), nadd=st.integers(1, 6), d=st.integers(1, 6),
+       seed=st.integers(0, 2**16))
+def test_lazy_append_equals_full_refactor(n0, nadd, d, seed):
+    key = jax.random.PRNGKey(seed)
+    st_, _, _ = _seed_state(key, n0, d, n_max=32)
+    new_x = jax.random.uniform(jax.random.fold_in(key, 1), (nadd, d),
+                               minval=-2.0, maxval=2.0)
+    new_y = jnp.cos(new_x.sum(-1))
+    lazy = st_
+    for i in range(nadd):
+        lazy = append(lazy, matern52, new_x[i], new_y[i])
+    full = refactor(lazy, matern52)
+    np.testing.assert_allclose(np.asarray(lazy.l_buf), np.asarray(full.l_buf),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(lazy.alpha), np.asarray(full.alpha),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_append_batch_equals_sequential():
+    key = jax.random.PRNGKey(42)
+    st_, _, _ = _seed_state(key, 5, 3, n_max=32)
+    xs = jax.random.uniform(jax.random.fold_in(key, 1), (4, 3))
+    ys = jnp.tanh(xs.sum(-1))
+    seq = st_
+    for i in range(4):
+        seq = append(seq, matern52, xs[i], ys[i])
+    bat = append_batch(st_, matern52, xs, ys)
+    np.testing.assert_allclose(np.asarray(seq.l_buf), np.asarray(bat.l_buf),
+                               rtol=1e-5, atol=1e-6)
+    assert int(bat.n) == 9
+
+
+# ---------------------------------------------------------------------------
+# Paper lemma: d^2 = c - q^T q > 0 for PD K_{n+1}
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 20), d=st.integers(1, 8), seed=st.integers(0, 2**16))
+def test_lemma_d_well_defined(n, d, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (n + 1, d), minval=-3.0, maxval=3.0)
+    params = KernelParams(sigma2=1.0, rho=1.0, noise2=1e-4)
+    k = gram(matern52, x[:n], params)
+    l = jnp.linalg.cholesky(k)
+    p = matern52(x[:n], x[n:], params)[:, 0]
+    c = matern52(x[n:], x[n:], params)[0, 0] + params.noise2
+    q = chol.padded_trsv(l, p)
+    d2 = float(c - q @ q)
+    assert d2 > 0.0  # Sylvester inertia argument, paper Sec. 3.3
+
+
+# ---------------------------------------------------------------------------
+# Posterior parity with the textbook dense GP (paper Alg. 1)
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(n0=st.integers(3, 10), nadd=st.integers(0, 5), seed=st.integers(0, 999))
+def test_posterior_matches_dense(n0, nadd, seed):
+    d = 3
+    key = jax.random.PRNGKey(seed)
+    st_, xs, ys = _seed_state(key, n0, d, n_max=32)
+    extra_x = jax.random.uniform(jax.random.fold_in(key, 9), (nadd, d),
+                                 minval=-2.0, maxval=2.0)
+    extra_y = jnp.sin(extra_x.sum(-1)) + 0.1 * extra_x[:, 0] if nadd else \
+        jnp.zeros((0,))
+    for i in range(nadd):
+        st_ = append(st_, matern52, extra_x[i], extra_y[i])
+    all_x = jnp.concatenate([xs, extra_x]) if nadd else xs
+    all_y = jnp.concatenate([ys, extra_y]) if nadd else ys
+    xq = jax.random.uniform(jax.random.fold_in(key, 5), (9, d),
+                            minval=-2.0, maxval=2.0)
+    m1, v1 = posterior(st_, matern52, xq)
+    m2, v2 = dense_posterior(all_x, all_y, xq, matern52, st_.params)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-3,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-2,
+                               atol=2e-4)
+
+
+def test_posterior_interpolates_observations():
+    key = jax.random.PRNGKey(1)
+    st_, xs, ys = _seed_state(key, 8, 2, n_max=16)
+    mean, var = posterior(st_, matern52, xs)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(ys), atol=1e-2)
+    assert np.all(np.asarray(var) < 1e-3)  # near-zero at observed points
+
+
+def test_lml_matches_direct():
+    key = jax.random.PRNGKey(2)
+    st_, xs, ys = _seed_state(key, 10, 2, n_max=16, noise2=1e-4)
+    got = float(log_marginal_likelihood(st_))
+    # direct: -1/2 r^T K^{-1} r - 1/2 log|K| - n/2 log 2pi
+    k = gram(matern52, xs, st_.params)
+    r = ys - ys.mean()
+    sign, logdet = jnp.linalg.slogdet(k)
+    want = float(-0.5 * r @ jnp.linalg.solve(k, r) - 0.5 * logdet
+                 - 0.5 * 10 * jnp.log(2 * jnp.pi))
+    assert abs(got - want) < 1e-2 * max(1.0, abs(want))
+
+
+# ---------------------------------------------------------------------------
+# Identity-padding invariant (the TPU adaptation of the paper's realloc)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 12), pad=st.integers(1, 20), seed=st.integers(0, 999))
+def test_padded_trsv_exact_for_padded_rhs(n, pad, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (n, n))
+    k = a @ a.T / n + 2 * jnp.eye(n)
+    l = jnp.linalg.cholesky(k)
+    l_pad = chol.identity_pad_factor(l, n + pad)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    b_pad = jnp.zeros(n + pad).at[:n].set(b)
+    q_pad = chol.padded_trsv(l_pad, b_pad)
+    q = chol.padded_trsv(l, b)
+    np.testing.assert_allclose(np.asarray(q_pad[:n]), np.asarray(q),
+                               rtol=1e-5, atol=1e-6)
+    assert np.allclose(np.asarray(q_pad[n:]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Kernel properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 16), d=st.integers(1, 6), seed=st.integers(0, 999),
+       rho=st.floats(0.3, 3.0))
+def test_kernel_gram_psd(n, d, seed, rho):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (n, d), minval=-5.0, maxval=5.0)
+    params = KernelParams(sigma2=1.0, rho=rho, noise2=1e-5)
+    k = gram(matern52, x, params)
+    evals = np.linalg.eigvalsh(np.asarray(k, np.float64))
+    assert evals.min() > -1e-5
+    # symmetry and unit diagonal (+noise)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(k.T), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Expected improvement (paper Eq. 11)
+# ---------------------------------------------------------------------------
+def test_ei_closed_form_vs_monte_carlo():
+    mean, var, fb = jnp.asarray([0.5]), jnp.asarray([0.8]), jnp.asarray(0.3)
+    ei = float(expected_improvement(mean, var, fb, xi=0.0)[0])
+    key = jax.random.PRNGKey(0)
+    samp = mean + jnp.sqrt(var) * jax.random.normal(key, (200000,))
+    mc = float(jnp.mean(jnp.maximum(samp - fb, 0.0)))
+    assert abs(ei - mc) < 5e-3
+
+
+@settings(max_examples=30, deadline=None)
+@given(mu=st.floats(-3, 3), sig=st.floats(0.01, 3), fb=st.floats(-3, 3))
+def test_ei_nonnegative_and_monotone_in_sigma(mu, sig, fb):
+    e1 = float(expected_improvement(jnp.asarray([mu]), jnp.asarray([sig**2]),
+                                    jnp.asarray(fb), xi=0.0)[0])
+    e2 = float(expected_improvement(jnp.asarray([mu]),
+                                    jnp.asarray([(sig * 2) ** 2]),
+                                    jnp.asarray(fb), xi=0.0)[0])
+    assert e1 >= 0.0 and e2 >= e1 - 1e-6  # EI grows with uncertainty
+
+
+def test_topt_suggestions_are_distinct():
+    key = jax.random.PRNGKey(3)
+    st_, _, _ = _seed_state(key, 12, 2, n_max=64)
+    lo, hi = jnp.full((2,), -5.0), jnp.full((2,), 5.0)
+    pts, vals = optimize_acquisition(st_, matern52, lo, hi,
+                                     jax.random.PRNGKey(0),
+                                     AcqConfig(restarts=64), top_t=4)
+    assert pts.shape == (4, 2)
+    assert bool(jnp.all(vals[:-1] >= vals[1:] - 1e-6))  # sorted best-first
+    d01 = float(jnp.linalg.norm(pts[0] - pts[1]))
+    assert d01 > 1e-3  # distinct basins (dedup radius)
+
+
+# ---------------------------------------------------------------------------
+# Lag policy and refit
+# ---------------------------------------------------------------------------
+def test_refit_improves_or_keeps_lml():
+    key = jax.random.PRNGKey(11)
+    st_, _, _ = _seed_state(key, 16, 3, n_max=32)
+    before = float(log_marginal_likelihood(st_))
+    params = refit_params(st_, matern52)
+    after = float(log_marginal_likelihood(refactor(st_, matern52, params)))
+    assert after >= before - 1e-4
+
+
+def test_lag_counter_resets_on_refit():
+    key = jax.random.PRNGKey(12)
+    st_, _, _ = _seed_state(key, 4, 2, n_max=16)
+    for i in range(3):
+        st_ = append(st_, matern52,
+                     jax.random.uniform(jax.random.fold_in(key, i), (2,)),
+                     jnp.asarray(0.1))
+    assert int(st_.since_refit) == 3
+    st_ = gp_mod.maybe_refit(st_, matern52, lag=3)
+    assert int(st_.since_refit) == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end BO sanity (paper Sec. 4.1 protocol, tiny scale)
+# ---------------------------------------------------------------------------
+def test_bo_improves_on_levy_2d():
+    obj = lambda x: np.asarray(neg_levy(jnp.asarray(x)))
+    lo, hi = levy_bounds(2)
+    _, hist = run_bo(obj, lo, hi, iterations=20, dim=2, n_max=64, n_seed=5,
+                     seed=0)
+    assert hist.best_y[-1] > hist.best_y[4]  # improved beyond seeding
+    assert hist.best_y[-1] > -2.0
+
+
+def test_bo_batch_mode_runs_and_counts_evals():
+    obj = lambda x: np.asarray(neg_levy(jnp.asarray(x)))
+    lo, hi = levy_bounds(2)
+    _, hist = run_bo(obj, lo, hi, iterations=4, dim=2, n_max=64, n_seed=2,
+                     seed=1, batch_size=5, lag=3)
+    assert len(hist.ys) == 2 + 4 * 5
+
+
+def test_levy_optimum_is_zero_at_ones():
+    x_star = jnp.ones((5,))
+    assert abs(float(levy(x_star))) < 1e-9

@@ -1,0 +1,151 @@
+"""HPO orchestrator tests: suggestion flow, async absorption, fault
+tolerance, elastic width, GP-state checkpoint/restore."""
+import tempfile
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.hpo.scheduler import SchedulerConfig, TrialScheduler
+from repro.hpo.space import LM_SPACE, RESNET_SPACE, SearchSpace, Dim
+
+
+def quad_objective(hp: dict) -> float:
+    """Smooth 3-D objective with optimum at known hparams (maximize)."""
+    x = np.log10(hp["lr"]) + 2.5          # optimum lr = 10^-2.5
+    y = np.log10(hp["weight_decay"]) + 4.5
+    z = hp["momentum"] - 0.9
+    return float(-(x ** 2 + 0.5 * y ** 2 + 2 * z ** 2))
+
+
+def test_space_roundtrip():
+    rng = np.random.default_rng(0)
+    u = RESNET_SPACE.sample(rng, 5)
+    for row in u:
+        hp = RESNET_SPACE.to_hparams(row)
+        back = RESNET_SPACE.to_unit(hp)
+        np.testing.assert_allclose(back, row, atol=1e-5)
+    hp = RESNET_SPACE.to_hparams(np.zeros(3))
+    assert hp["lr"] == pytest.approx(1e-4)
+    assert hp["momentum"] == pytest.approx(0.0)
+
+
+def test_sequential_scheduler_improves():
+    sched = TrialScheduler(RESNET_SPACE, SchedulerConfig(n_max=64, seed=0))
+    best = sched.run(quad_objective, budget=25, n_seed=4)
+    assert best is not None
+    seeds = [t.value for t in sched.trials[:4] if t.value is not None]
+    assert best.value >= max(seeds)
+    assert best.value > -1.5
+
+
+def test_parallel_scheduler_async_absorption():
+    """Stragglers must not block absorption of faster trials."""
+    call_log = []
+    lock = threading.Lock()
+
+    def slow_objective(hp):
+        # every 4th call is a straggler
+        with lock:
+            idx = len(call_log)
+            call_log.append(idx)
+        time.sleep(0.8 if idx % 4 == 0 else 0.02)
+        return quad_objective(hp)
+
+    sched = TrialScheduler(RESNET_SPACE,
+                           SchedulerConfig(n_max=64, parallel=4, seed=1))
+    best = sched.run(slow_objective, budget=12, n_seed=4)
+    assert best is not None
+    assert int(sched.state.n) == 12
+    # async proof: some trial that STARTED after a straggler FINISHED before
+    # it (i.e. absorption happened out of start order).
+    done = [t for t in sched.trials if t.status == "done"]
+    overtook = any(
+        b.started > a.started and b.finished < a.finished
+        for a in done for b in done if a is not b)
+    assert overtook, "no out-of-order absorption observed"
+
+
+def test_failed_trial_retries_and_gp_consistent():
+    calls = {"n": 0}
+
+    def flaky(hp):
+        calls["n"] += 1
+        if calls["n"] % 3 == 0:
+            raise RuntimeError("node lost")
+        return quad_objective(hp)
+
+    sched = TrialScheduler(RESNET_SPACE,
+                           SchedulerConfig(n_max=64, seed=2, max_retries=2))
+    best = sched.run(flaky, budget=10, n_seed=2)
+    assert best is not None
+    n_done = sum(t.status == "done" for t in sched.trials)
+    n_fail = sum(t.status == "failed" for t in sched.trials)
+    assert n_done == 10 and n_fail >= 1
+    # GP absorbed exactly the done trials
+    assert int(sched.state.n) == n_done
+
+
+def test_failure_penalty_mode_appends_pseudo_observation():
+    def always_fails(hp):
+        raise RuntimeError("boom")
+
+    sched = TrialScheduler(
+        RESNET_SPACE, SchedulerConfig(n_max=32, seed=3, max_retries=0,
+                                      failure_penalty=-100.0))
+    tr = sched.seed_trials(1)[0]
+    sched._run_one(always_fails, tr)
+    assert tr.status == "failed"
+    assert int(sched.state.n) == 1  # penalty observation recorded
+
+
+def test_elastic_width():
+    widths = iter([4, 2, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1])
+    seen = []
+
+    def width():
+        w = next(widths, 1)
+        seen.append(w)
+        return w
+
+    sched = TrialScheduler(RESNET_SPACE,
+                           SchedulerConfig(n_max=64, parallel=4, seed=4))
+    with ThreadPoolExecutor(4) as pool:
+        best = sched.run(lambda hp: quad_objective(hp), budget=10, n_seed=2,
+                         executor=pool, parallel=width)
+    assert best is not None and len(seen) >= 1
+
+
+def test_gp_state_checkpoint_restore():
+    with tempfile.TemporaryDirectory() as d:
+        cfg = SchedulerConfig(n_max=32, seed=5, ckpt_dir=d)
+        sched = TrialScheduler(RESNET_SPACE, cfg)
+        sched.run(quad_objective, budget=6, n_seed=2)
+        n_before = int(sched.state.n)
+        alpha_before = np.asarray(sched.state.alpha)
+
+        sched2 = TrialScheduler(RESNET_SPACE, cfg)
+        assert sched2.restore()
+        assert int(sched2.state.n) == n_before
+        np.testing.assert_allclose(np.asarray(sched2.state.alpha),
+                                   alpha_before, rtol=1e-6)
+        assert len(sched2.trials) == len(sched.trials)
+        # restarted controller can continue suggesting + absorbing
+        best = sched2.run(quad_objective, budget=n_before + 2, n_seed=0)
+        assert best is not None
+
+
+def test_suggestions_within_bounds_and_distinct():
+    sched = TrialScheduler(LM_SPACE, SchedulerConfig(n_max=64, seed=6))
+    sched.run(quad_lm, budget=5, n_seed=3)
+    trs = sched.suggest(4)
+    units = np.stack([t.unit for t in trs])
+    assert units.min() >= 0.0 and units.max() <= 1.0
+    d01 = np.linalg.norm(units[0] - units[1])
+    assert d01 > 1e-4
+
+
+def quad_lm(hp):
+    return -((np.log10(hp["lr"]) + 3) ** 2 + hp["warmup_frac"])

@@ -1,0 +1,227 @@
+"""Substrate tests: data pipeline, optimizers, checkpoint store, train loop."""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.data import DataConfig, DataIterator, host_local_batch, synth_tokens
+from repro.optim import (OptimizerConfig, apply_updates, clip_by_global_norm,
+                         ef_compress_grads, global_norm, init_opt_state,
+                         schedule)
+from repro.training import TrainConfig, init_train_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+def test_data_deterministic_across_restart():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=4, seed=3)
+    a = synth_tokens(cfg, 7)
+    b = synth_tokens(cfg, 7)
+    np.testing.assert_array_equal(np.asarray(a["inputs"]),
+                                  np.asarray(b["inputs"]))
+    it = DataIterator(cfg)
+    for _ in range(5):
+        next(it)
+    state = it.state_dict()
+    x1 = next(it)
+    it2 = DataIterator(cfg)
+    it2.load_state_dict(state)
+    x2 = next(it2)
+    np.testing.assert_array_equal(np.asarray(x1["targets"]),
+                                  np.asarray(x2["targets"]))
+
+
+def test_data_host_sharding_disjoint():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=8, seed=0)
+    b0 = host_local_batch(cfg, 0, host_id=0, num_hosts=4)
+    b1 = host_local_batch(cfg, 0, host_id=1, num_hosts=4)
+    assert b0["inputs"].shape == (2, 16)
+    assert not np.array_equal(np.asarray(b0["inputs"]),
+                              np.asarray(b1["inputs"]))
+
+
+def test_data_has_learnable_signal():
+    cfg = DataConfig(vocab_size=128, seq_len=64, global_batch=8,
+                     pattern_frac=1.0)
+    batch = synth_tokens(cfg, 0)
+    want = (batch["inputs"] * 31 + 7) % 128
+    np.testing.assert_array_equal(np.asarray(batch["targets"]),
+                                  np.asarray(want))
+
+
+def test_frames_frontend_batch():
+    cfg = DataConfig(vocab_size=32, seq_len=16, global_batch=2,
+                     frontend="frames", d_model=24)
+    b = synth_tokens(cfg, 0)
+    assert b["inputs"].shape == (2, 16, 24)
+    assert b["targets"].shape == (2, 16)
+    assert int(b["targets"].max()) < 32
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+def _params(key):
+    return {"w": jax.random.normal(key, (8, 8)),
+            "b": jnp.zeros((8,))}
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                          min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.asarray(0))) == 0.0
+    assert float(schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(schedule(cfg, jnp.asarray(110))) == pytest.approx(0.1)
+
+
+def test_adamw_reduces_quadratic():
+    cfg = OptimizerConfig(name="adamw", lr=0.05, weight_decay=0.0,
+                          warmup_steps=0, total_steps=100)
+    params = _params(jax.random.PRNGKey(0))
+    state = init_opt_state(cfg, params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum((p["b"] - 1) ** 2)
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state, _ = apply_updates(cfg, params, grads, state)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_sgdm_momentum_accumulates():
+    cfg = OptimizerConfig(name="sgdm", lr=0.01, momentum=0.9,
+                          weight_decay=0.0, warmup_steps=0, total_steps=10)
+    params = {"w": jnp.ones((4,))}
+    state = init_opt_state(cfg, params)
+    grads = {"w": jnp.ones((4,))}
+    p1, state, _ = apply_updates(cfg, params, grads, state)
+    p2, state, _ = apply_updates(cfg, p1, grads, state)
+    step1 = float(params["w"][0] - p1["w"][0])
+    step2 = float(p1["w"][0] - p2["w"][0])
+    assert step2 > step1 * 1.5  # momentum compounding
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), scale=st.floats(0.01, 100.0))
+def test_ef_compression_error_feedback_is_lossless_over_time(seed, scale):
+    """Sum of compressed grads + final residual == sum of true grads."""
+    key = jax.random.PRNGKey(seed)
+    grads = [jax.random.normal(jax.random.fold_in(key, i), (16,)) * scale
+             for i in range(8)]
+    residual = {"g": jnp.zeros((16,))}
+    sent_total = jnp.zeros((16,))
+    for g in grads:
+        sent, residual = ef_compress_grads({"g": g}, residual)
+        sent_total = sent_total + sent["g"]
+    true_total = sum(grads)
+    np.testing.assert_allclose(np.asarray(sent_total + residual["g"]),
+                               np.asarray(true_total), rtol=1e-4, atol=1e-3)
+
+
+def test_compressed_training_still_converges():
+    cfg = OptimizerConfig(name="adamw", lr=0.05, weight_decay=0.0,
+                          warmup_steps=0, total_steps=100,
+                          compress_grads=True)
+    params = _params(jax.random.PRNGKey(1))
+    state = init_opt_state(cfg, params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state, _ = apply_updates(cfg, params, grads, state)
+    assert float(loss(params)) < 0.3 * l0
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint store
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_gc():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((2,), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        for step in (1, 2, 3, 4, 5):
+            ckpt.save(d, step, tree, keep=2)
+        assert ckpt.committed_steps(d) == [4, 5]
+        step, tree2, _ = ckpt.restore_latest(d, tree)
+        assert step == 5
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(tree2)):
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32))
+
+
+def test_checkpoint_ignores_uncommitted():
+    import os
+    tree = {"a": jnp.zeros((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, tree)
+        # simulate a crash mid-save: directory without COMMITTED
+        os.makedirs(os.path.join(d, "step_000000099"))
+        assert ckpt.latest_step(d) == 1
+
+
+def test_checkpoint_rejects_tree_mismatch():
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, {"a": jnp.zeros((2,))})
+        with pytest.raises(ValueError, match="mismatch"):
+            ckpt.restore(d, 1, {"b": jnp.zeros((2,))})
+
+
+# ---------------------------------------------------------------------------
+# Train loop integration
+# ---------------------------------------------------------------------------
+def test_train_step_reduces_loss_and_microbatch_matches():
+    cfg = get_config("tiny-lm", reduced=True)
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=100)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    params, opt_state, _ = init_train_state(cfg, ocfg, jax.random.PRNGKey(0))
+    step1 = jax.jit(make_train_step(cfg, ocfg))
+    step4 = jax.jit(make_train_step(cfg, ocfg, TrainConfig(microbatches=4)))
+
+    it = DataIterator(dcfg)
+    losses = []
+    for _ in range(20):
+        params, opt_state, m = step1(params, opt_state, next(it))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+    # microbatched gradient == full-batch gradient (same update direction)
+    pa, oa, _ = init_train_state(cfg, ocfg, jax.random.PRNGKey(1))
+    pb = jax.tree.map(lambda x: x, pa)
+    ob = init_opt_state(ocfg, pb)
+    batch = next(it)
+    pa2, _, ma = step1(pa, oa, batch)
+    pb2, _, mb = step4(pb, ob, batch)
+    da = jax.tree.leaves(jax.tree.map(lambda a, b: jnp.max(jnp.abs(a - b)),
+                                      pa2, pb2))
+    assert max(float(x) for x in da) < 5e-5
+
+
+def test_train_cli_checkpoints_and_resumes():
+    from repro.launch import train as train_mod
+    with tempfile.TemporaryDirectory() as d:
+        args = train_mod.parse_args([
+            "--arch", "tiny-lm", "--reduced", "--steps", "12",
+            "--seq-len", "32", "--global-batch", "4",
+            "--ckpt-dir", d, "--ckpt-every", "5", "--log-every", "50"])
+        out1 = train_mod.run(args)
+        assert ckpt.latest_step(d) == 12
+        # resume: runs only the remaining steps (none) and returns
+        args2 = train_mod.parse_args([
+            "--arch", "tiny-lm", "--reduced", "--steps", "14",
+            "--seq-len", "32", "--global-batch", "4",
+            "--ckpt-dir", d, "--ckpt-every", "5", "--log-every", "50"])
+        out2 = train_mod.run(args2)
+        assert ckpt.latest_step(d) == 14
