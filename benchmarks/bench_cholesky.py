@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import cholesky as chol
 from repro.core.kernels import KernelParams, matern52
+from repro.kernels import ops
 
 
 def _time(fn, *args, reps=5) -> float:
@@ -31,15 +32,18 @@ def _time(fn, *args, reps=5) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def run(n_max: int = 1024, step: int = 128, full: bool = False):
+def run(n_max: int = 1024, step: int = 128, full: bool = False,
+        implementation: str = "auto"):
     params = KernelParams.default()
     key = jax.random.PRNGKey(0)
     xs = jax.random.uniform(key, (n_max + 1, 5))
     rows = []
 
-    naive_fn = jax.jit(lambda k: jnp.linalg.cholesky(k))
+    naive_fn = jax.jit(
+        lambda k: ops.cholesky(k, implementation=implementation))
     append_fn = jax.jit(
-        lambda l, p, c, n: chol.lazy_append_row(l, p, c, n, n_max=n_max),
+        lambda l, p, c, n: chol.lazy_append_row(
+            l, p, c, n, n_max=n_max, implementation=implementation),
         static_argnames=())
 
     sizes = list(range(step, n_max + 1, step))
@@ -48,7 +52,7 @@ def run(n_max: int = 1024, step: int = 128, full: bool = False):
         k_n = matern52(xs[:n], xs[:n], params) + 1e-6 * jnp.eye(n)
         t_naive = _time(naive_fn, k_n)
 
-        l_pad = chol.identity_pad_factor(jnp.linalg.cholesky(k_n), n_max)
+        l_pad = chol.identity_pad_factor(naive_fn(k_n), n_max)
         p_pad = jnp.zeros((n_max,)).at[:n].set(
             matern52(xs[:n], xs[n:n + 1], params)[:, 0])
         c = matern52(xs[n:n + 1], xs[n:n + 1], params)[0, 0] + 1e-6

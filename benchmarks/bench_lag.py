@@ -15,7 +15,8 @@ from repro.core import levy_bounds, neg_levy, run_bo
 TARGET = -0.25
 
 
-def run(iterations: int = 200, n_seed: int = 200, full: bool = False):
+def run(iterations: int = 200, n_seed: int = 200, full: bool = False,
+        implementation: str = "auto"):
     import jax.numpy as jnp
     iterations = 400 if full else iterations
     obj = lambda x: np.asarray(neg_levy(jnp.asarray(x)))
@@ -24,7 +25,8 @@ def run(iterations: int = 200, n_seed: int = 200, full: bool = False):
     for lag in (1, 2, 3, 5, 10, 25, 0):     # 0 = never refit (l = inf)
         _, hist = run_bo(obj, lo, hi, iterations, dim=5, mode="lazy",
                          lag=lag, n_seed=n_seed,
-                         n_max=iterations + n_seed + 8, seed=0)
+                         n_max=iterations + n_seed + 8, seed=0,
+                         implementation=implementation)
         gp_s = float(np.sum(hist.gp_seconds))
         acq_s = float(np.sum(hist.acq_seconds))
         it = hist.iterations_to(TARGET)

@@ -28,7 +28,8 @@ def _milestones(hist):
     return out
 
 
-def run(iterations: int = 300, full: bool = False):
+def run(iterations: int = 300, full: bool = False,
+        implementation: str = "auto"):
     import jax.numpy as jnp
 
     from repro.core import levy_bounds, neg_levy
@@ -45,7 +46,8 @@ def run(iterations: int = 300, full: bool = False):
                 iterations // 3, 100)  # naive's O(n^3) refits are slow
             _, hist = run_bo(obj, lo, hi, budget, dim=5, mode=mode,
                              n_seed=n_seed, n_max=budget + n_seed + 8,
-                             seed=0, rho0=rho0)
+                             seed=0, rho0=rho0,
+                             implementation=implementation)
             ms = _milestones(hist)
             gp_us = 1e6 * float(np.mean(hist.gp_seconds))
             best = hist.best()[1]

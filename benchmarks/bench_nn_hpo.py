@@ -80,7 +80,8 @@ def make_objective(steps: int = 25, seq_len: int = 64, batch: int = 8):
     return objective
 
 
-def run(iterations: int = 40, full: bool = False):
+def run(iterations: int = 40, full: bool = False,
+        implementation: str = "auto"):
     iterations = 120 if full else iterations
     obj = make_objective()
     lo = np.zeros(RESNET_SPACE.dim)
@@ -90,7 +91,8 @@ def run(iterations: int = 40, full: bool = False):
     for mode in ("lazy", "naive"):
         budget = iterations if mode == "lazy" else max(iterations // 2, 10)
         _, hist = run_bo(lambda u: obj(u), lo, hi, budget, dim=RESNET_SPACE.dim,
-                         mode=mode, n_seed=4, n_max=budget + 12, seed=0)
+                         mode=mode, n_seed=4, n_max=budget + 12, seed=0,
+                         implementation=implementation)
         train_s = float(np.mean(hist.obj_seconds))
         gp_s = float(np.mean(hist.gp_seconds))
         overhead = gp_s / max(train_s + gp_s, 1e-9)

@@ -16,7 +16,7 @@ from repro.core import levy_bounds, neg_levy, run_bo
 TARGET = -0.5
 
 
-def run(rounds: int = 60, full: bool = False):
+def run(rounds: int = 60, full: bool = False, implementation: str = "auto"):
     import jax.numpy as jnp
     rounds = 150 if full else rounds
     obj = lambda x: np.asarray(neg_levy(jnp.asarray(x)))
@@ -27,7 +27,8 @@ def run(rounds: int = 60, full: bool = False):
         n_rounds = rounds if t == 1 else max(rounds // t * 2, 15)
         _, hist = run_bo(obj, lo, hi, n_rounds, dim=5, mode="lazy",
                          batch_size=t, n_seed=5,
-                         n_max=n_rounds * t + 16, seed=0)
+                         n_max=n_rounds * t + 16, seed=0,
+                         implementation=implementation)
         # round index at which target first reached
         evals_to = hist.iterations_to(TARGET)
         rounds_to = None if evals_to is None else max(

@@ -1,0 +1,96 @@
+"""Substrate benchmark: one BO step per (mode x implementation).
+
+Times a full BO round (suggest -> absorb -> lag policy) for every
+factorization mode ("lazy" | "naive") against every linalg substrate the
+current backend supports ("xla" | "ref" always; "pallas" only where the
+kernels compile natively, i.e. TPU — interpret mode on CPU is a correctness
+harness, not a benchmark), plus the "auto" policy the configs default to.
+
+Emits the rows in the standard `name,us_per_call,derived` CSV format for
+`benchmarks.run`, and writes the machine-readable `BENCH_substrate.json`
+with the per-phase split (suggest vs GP update) per combination.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BayesOpt, BOConfig, BOHistory, levy_bounds, neg_levy
+
+JSON_PATH = "BENCH_substrate.json"
+
+
+def _implementations() -> list[str]:
+    impls = ["auto", "xla", "ref"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")
+    return impls
+
+
+def _time_step(mode: str, implementation: str, *, n0: int, n_max: int,
+               dim: int = 5, reps: int = 3) -> dict:
+    """Average one BO step (suggest + evaluate + absorb) at n ~ n0."""
+    obj = lambda x: np.asarray(neg_levy(jnp.asarray(x)))
+    lo, hi = levy_bounds(dim)
+    cfg = BOConfig(dim=dim, n_max=n_max, mode=mode, seed=0,
+                   implementation=implementation)
+    bo = BayesOpt(cfg, lo, hi)
+
+    key = jax.random.PRNGKey(0)
+    key, sub = jax.random.split(key)
+    x0 = np.asarray(lo) + (np.asarray(hi) - np.asarray(lo)) * np.asarray(
+        jax.random.uniform(sub, (n0, dim)))
+    state = bo.init(jnp.asarray(x0), jnp.asarray(obj(x0), jnp.float32))
+
+    hist = BOHistory()
+    key, sub = jax.random.split(key)
+    state = bo.step(state, sub, obj, hist)        # compile + warm-up
+    hist = BOHistory()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        key, sub = jax.random.split(key)
+        state = bo.step(state, sub, obj, hist)
+    total = (time.perf_counter() - t0) / reps
+    return {
+        "mode": mode,
+        "implementation": implementation,
+        "n0": n0,
+        "n_max": n_max,
+        "step_us": 1e6 * total,
+        "gp_us": 1e6 * float(np.mean(hist.gp_seconds)),
+        "acq_us": 1e6 * float(np.mean(hist.acq_seconds)),
+        "clamp_count": int(state.clamp_count),
+    }
+
+
+def run(full: bool = False, json_path: str = JSON_PATH):
+    n0 = 512 if full else 128
+    n_max = n0 + 16
+    records = []
+    out = []
+    for mode in ("lazy", "naive"):
+        for impl in _implementations():
+            rec = _time_step(mode, impl, n0=n0, n_max=n_max)
+            records.append(rec)
+            out.append(
+                f"substrate_{mode}_{impl},{rec['step_us']:.0f},"
+                f"gp_us={rec['gp_us']:.0f} acq_us={rec['acq_us']:.0f} "
+                f"n={n0} clamps={rec['clamp_count']}")
+    payload = {
+        "backend": jax.default_backend(),
+        "n0": n0,
+        "n_max": n_max,
+        "results": records,
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    out.append(f"substrate_json,,path={json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

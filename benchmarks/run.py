@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   * bench_lag      — Fig. 6 (lagging-factor sweep)
   * bench_nn_hpo   — Fig. 1 + Tabs. 2/3 (network-trainer HPO overhead)
   * bench_parallel — Tab. 4 (top-t parallel suggestions)
+  * bench_substrate — one BO step per (mode x linalg implementation),
+                      emits BENCH_substrate.json
 
 `python -m benchmarks.run [--full] [--only NAME]`.  The roofline analysis
 (§Roofline) is separate: `python -m benchmarks.roofline results/*.jsonl`
@@ -27,13 +29,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_cholesky, bench_lag, bench_levy,
-                            bench_nn_hpo, bench_parallel)
+                            bench_nn_hpo, bench_parallel, bench_substrate)
     suites = {
         "cholesky": lambda: bench_cholesky.run(full=args.full),
         "levy": lambda: bench_levy.run(full=args.full),
         "lag": lambda: bench_lag.run(full=args.full),
         "nn_hpo": lambda: bench_nn_hpo.run(full=args.full),
         "parallel": lambda: bench_parallel.run(full=args.full),
+        "substrate": lambda: bench_substrate.run(full=args.full),
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

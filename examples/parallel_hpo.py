@@ -29,6 +29,9 @@ def main():
     ap.add_argument("--train-steps", type=int, default=20)
     ap.add_argument("--faults", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--implementation", default="auto",
+                    choices=["auto", "pallas", "xla", "ref"],
+                    help="linalg substrate for the GP math")
     args = ap.parse_args()
 
     base = make_objective(steps=args.train_steps)
@@ -47,6 +50,7 @@ def main():
         RESNET_SPACE,
         SchedulerConfig(n_max=max(64, args.budget + 16),
                         parallel=args.parallel, seed=0,
+                        implementation=args.implementation,
                         max_retries=2, ckpt_dir=args.ckpt_dir))
     if args.ckpt_dir and sched.restore():
         print(f"resumed GP with n={int(sched.state.n)} observations")

@@ -27,13 +27,18 @@ def main():
     ap.add_argument("--lag", type=int, default=0,
                     help="lazy mode: full kernel refit every LAG steps")
     ap.add_argument("--seeds", type=int, default=5)
+    ap.add_argument("--implementation", default="auto",
+                    choices=["auto", "pallas", "xla", "ref"],
+                    help="linalg substrate: auto picks Pallas on TPU, XLA "
+                         "elsewhere")
     args = ap.parse_args()
 
     objective = lambda x: np.asarray(neg_levy(jnp.asarray(x)))
     lo, hi = levy_bounds(5)
     _, hist = run_bo(objective, lo, hi, args.iterations, dim=5,
                      mode=args.mode, lag=args.lag, n_seed=args.seeds,
-                     n_max=args.iterations + args.seeds + 8, seed=0)
+                     n_max=args.iterations + args.seeds + 8, seed=0,
+                     implementation=args.implementation)
 
     print(f"\nmode={args.mode} lag={args.lag}")
     for frac in (0.25, 0.5, 0.75, 1.0):

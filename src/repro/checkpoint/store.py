@@ -36,7 +36,9 @@ _COMMIT = "COMMITTED"
 
 
 def _flatten_with_paths(tree: PyTree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree_util spelling: present across all supported jax versions
+    # (jax.tree.flatten_with_path only landed later).
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                       for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]

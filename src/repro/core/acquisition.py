@@ -72,8 +72,10 @@ class AcqConfig:
 
 
 def _acq_value(state: gp_mod.LazyGPState, kernel: KernelFn, x: Array,
-               f_best: Array, cfg: AcqConfig) -> Array:
-    mean, var = gp_mod.posterior(state, kernel, x[None, :])
+               f_best: Array, cfg: AcqConfig,
+               implementation: str = "auto") -> Array:
+    mean, var = gp_mod.posterior(state, kernel, x[None, :],
+                                 implementation=implementation)
     fn = ACQUISITIONS[cfg.name]
     return fn(mean, var, f_best, cfg.xi)[0]
 
@@ -85,12 +87,14 @@ def _f_best(state: gp_mod.LazyGPState) -> Array:
 
 def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
                          lo: Array, hi: Array, key: Array,
-                         cfg: AcqConfig, top_t: int = 1
+                         cfg: AcqConfig, top_t: int = 1,
+                         *, implementation: str = "auto"
                          ) -> tuple[Array, Array]:
     """Return (points (top_t, d), acq values (top_t,)), best first.
 
     top_t = 1 is standard sequential BO; top_t = t implements the paper's
-    parallel suggestion of the t best distinct local maxima.
+    parallel suggestion of the t best distinct local maxima.  `implementation`
+    selects the linalg substrate for the posterior solves inside the ascent.
     """
     d = state.dim
     f_best = _f_best(state)
@@ -99,7 +103,7 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
     seeds = lo + (hi - lo) * jax.random.uniform(key, (cfg.restarts, d),
                                                 dtype=state.x_buf.dtype)
 
-    value = lambda x: _acq_value(state, kernel, x, f_best, cfg)
+    value = lambda x: _acq_value(state, kernel, x, f_best, cfg, implementation)
     grad = jax.grad(value)
 
     def ascend(x):

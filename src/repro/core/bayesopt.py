@@ -44,6 +44,7 @@ class BOConfig:
     batch_size: int = 1           # t parallel suggestions (paper Sec. 3.4)
     noise2: float = 1e-6
     rho0: float = 0.25            # initial length scale (unit box); paper: 1.0
+    implementation: str = "auto"  # linalg substrate (auto|pallas|xla|ref)
     acq: acq_mod.AcqConfig = dataclasses.field(default_factory=acq_mod.AcqConfig)
     seed: int = 0
 
@@ -56,6 +57,8 @@ class BOHistory:
     gp_seconds: list = dataclasses.field(default_factory=list)   # factor+append
     acq_seconds: list = dataclasses.field(default_factory=list)  # suggestion
     obj_seconds: list = dataclasses.field(default_factory=list)  # evaluations
+    clamp_counts: list = dataclasses.field(default_factory=list)  # cumulative
+    # d^2 conditioning-floor hits after each round (ill-conditioning telemetry)
 
     def best(self) -> tuple[np.ndarray, float]:
         i = int(np.argmax(self.ys))
@@ -86,7 +89,8 @@ class BayesOpt:
         self._unit_lo = jnp.zeros_like(self.lo)
         self._unit_hi = jnp.ones_like(self.hi)
         gcfg = gp_mod.GPConfig(n_max=cfg.n_max, dim=cfg.dim, kernel=cfg.kernel,
-                               lag=cfg.lag, noise2=cfg.noise2, rho0=cfg.rho0)
+                               lag=cfg.lag, noise2=cfg.noise2, rho0=cfg.rho0,
+                               implementation=cfg.implementation)
         self.gp_cfg = gcfg
         self._suggest = jax.jit(self._suggest_impl,
                                 static_argnames=("top_t",))
@@ -100,17 +104,22 @@ class BayesOpt:
         return self.lo + u * (self.hi - self.lo)
 
     # -- jitted pieces ------------------------------------------------------
+    # `implementation` is a Python constant captured from the config, so each
+    # closure compiles once for the selected substrate.
     def _suggest_impl(self, state, key, *, top_t: int):
         return acq_mod.optimize_acquisition(
             state, self.kernel, self._unit_lo, self._unit_hi, key,
-            self.cfg.acq, top_t)
+            self.cfg.acq, top_t, implementation=self.cfg.implementation)
 
     def _append_batch_impl(self, state, xs, ys):
-        return gp_mod.append_batch(state, self.kernel, xs, ys)
+        return gp_mod.append_batch(state, self.kernel, xs, ys,
+                                   implementation=self.cfg.implementation)
 
     def _refit_impl(self, state):
-        params = gp_mod.refit_params(state, self.kernel)
-        return gp_mod.refactor(state, self.kernel, params)
+        params = gp_mod.refit_params(
+            state, self.kernel, implementation=self.cfg.implementation)
+        return gp_mod.refactor(state, self.kernel, params,
+                               implementation=self.cfg.implementation)
 
     # -- public API ---------------------------------------------------------
     def init(self, x0: Array, y0: Array) -> gp_mod.LazyGPState:
@@ -119,6 +128,7 @@ class BayesOpt:
 
         x0 is in *objective* coordinates; stored normalized.
         """
+        gp_mod.ensure_capacity(0, self.cfg.n_max, x0.shape[0])
         state = gp_mod.init_state(self.gp_cfg)
         u0 = self._to_unit(jnp.asarray(x0, jnp.float32))
         state = dataclasses.replace(
@@ -128,12 +138,17 @@ class BayesOpt:
             n=jnp.asarray(x0.shape[0], jnp.int32),
         )
         return self._refit(state) if self.cfg.mode == "naive" else \
-            gp_mod.refactor(state, self.kernel)
+            gp_mod.refactor(state, self.kernel,
+                            implementation=self.cfg.implementation)
 
     def step(self, state: gp_mod.LazyGPState, key: Array,
              objective: Callable[[np.ndarray], np.ndarray],
              history: BOHistory) -> gp_mod.LazyGPState:
         """One BO round: suggest (t points) -> evaluate -> absorb -> lag."""
+        # Guard before the (possibly hours-long) objective evaluations: a
+        # full round must not be computed only to be discarded on overflow.
+        gp_mod.ensure_capacity(int(state.n), self.cfg.n_max,
+                               self.cfg.batch_size)
         t0 = time.perf_counter()
         us, _ = self._suggest(state, key, top_t=self.cfg.batch_size)
         us = jax.block_until_ready(us)
@@ -160,6 +175,7 @@ class BayesOpt:
         history.acq_seconds.append(t1 - t0)
         history.obj_seconds.append(t2 - t1)
         history.gp_seconds.append(t3 - t2)
+        history.clamp_counts.append(int(state.clamp_count))
         return state
 
     def run(self, objective: Callable[[np.ndarray], np.ndarray],
@@ -192,11 +208,13 @@ def run_bo(objective: Callable[[np.ndarray], np.ndarray], lo, hi,
            iterations: int, *, dim: int, mode: str = "lazy", lag: int = 0,
            batch_size: int = 1, n_seed: int = 1, n_max: int = 1024,
            seed: int = 0, kernel: str = "matern52", rho0: float = 0.25,
+           implementation: str = "auto",
            acq: acq_mod.AcqConfig | None = None,
            ) -> tuple[gp_mod.LazyGPState, BOHistory]:
     """One-call functional API (used by examples and benchmarks)."""
     cfg = BOConfig(dim=dim, n_max=n_max, kernel=kernel, mode=mode, lag=lag,
                    batch_size=batch_size, seed=seed, rho0=rho0,
+                   implementation=implementation,
                    acq=acq or acq_mod.AcqConfig())
     bo = BayesOpt(cfg, lo, hi)
     return bo.run(objective, iterations, n_seed=n_seed)

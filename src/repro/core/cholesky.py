@@ -1,20 +1,27 @@
-"""Naive and lazy (incremental) Cholesky factorization.
+"""Padded-state policy layer over the linalg substrate (`repro.kernels.ops`).
 
 This module is the heart of the paper: Alg. 2 (full O(n^3/3) factorization)
 vs. Alg. 3 (the O(n^2) rank-one append that reuses the previous factor).
 
 TPU adaptation (DESIGN.md §3): XLA needs static shapes, so the factor lives in
 a fixed (n_max, n_max) buffer whose active top-left (n, n) block is the true
-factor and whose remainder is the identity.  With identity padding,
-``solve_triangular`` over the full buffer is *exact* for padded right-hand
-sides (rows >= n have zeros left of a unit diagonal), which lets the whole
-append be one fixed-shape jitted program — no recompilation as n grows.
+factor and whose remainder is the identity.  With identity padding, a padded
+triangular solve over the full buffer is *exact* for padded right-hand sides
+(rows >= n have zeros left of a unit diagonal), which lets the whole append be
+one fixed-shape jitted program — no recompilation as n grows.
+
+All linear algebra dispatches through `repro.kernels.ops` (the Pallas / XLA /
+ref substrate); this layer owns only the padded-buffer *policy* — what shape
+the state takes, where rows land, how padding is maintained.  The one
+exception is `cholesky_naive`, the literal scalar-loop port of the paper's
+Alg. 2 kept as a benchmark baseline.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.scipy.linalg import solve_triangular
+
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -27,9 +34,10 @@ def cholesky_naive(k: Array) -> Array:
     """Row-by-row Cholesky–Banachiewicz factorization, O(n^3/3).
 
     A literal JAX port of the paper's Alg. 2 (loop-based), used as the
-    reference baseline in benchmarks.  ``jnp.linalg.cholesky`` (LAPACK/XLA)
-    is used everywhere performance matters; this exists so the benchmark's
-    "naive" column measures the same algorithm the paper measured.
+    reference baseline in benchmarks.  The substrate's blocked/XLA
+    factorization (`ops.cholesky`) is used everywhere performance matters;
+    this exists so the benchmark's "naive" column measures the same algorithm
+    the paper measured.
     """
     n = k.shape[0]
 
@@ -52,9 +60,9 @@ def cholesky_naive(k: Array) -> Array:
     return jax.lax.fori_loop(0, n, row_body, l0)
 
 
-def cholesky_xla(k: Array) -> Array:
-    """XLA's native full factorization — the production 'naive' path."""
-    return jnp.linalg.cholesky(k)
+def cholesky_xla(k: Array, implementation: str = "xla") -> Array:
+    """Full factorization through the substrate — the production 'naive' path."""
+    return ops.cholesky(k, implementation=implementation)
 
 
 # ---------------------------------------------------------------------------
@@ -69,17 +77,21 @@ def identity_pad_factor(l_active: Array, n_max: int) -> Array:
 
 
 def padded_trsv(l_buf: Array, b: Array, *, lower: bool = True,
-                trans: bool = False) -> Array:
+                trans: bool = False, implementation: str = "auto") -> Array:
     """Triangular solve on the identity-padded buffer.
 
     Exact for right-hand sides that are zero beyond the active block — the
-    property the lazy append and the posterior solves rely on.
+    property the lazy append and the posterior solves rely on.  Dispatches
+    through the substrate (`implementation`: auto | pallas | xla | ref).
     """
-    return solve_triangular(l_buf, b, lower=lower, trans=1 if trans else 0)
+    assert lower, "the padded GP state stores lower factors only"
+    return ops.padded_trsv(l_buf, b, trans=trans,
+                           implementation=implementation)
 
 
 def lazy_append_row(l_buf: Array, p_pad: Array, c: Array, n: Array,
-                    *, n_max: int) -> tuple[Array, Array]:
+                    *, n_max: int, implementation: str = "auto"
+                    ) -> tuple[Array, Array]:
     """Paper Alg. 3 inner step: extend the factor by one row, O(n_max^2).
 
     Args:
@@ -91,24 +103,19 @@ def lazy_append_row(l_buf: Array, p_pad: Array, c: Array, n: Array,
     Returns (new l_buf, d) where d is the new diagonal entry.
 
     The paper's lemma (Sylvester inertia) guarantees c - q^T q > 0 in exact
-    arithmetic for PD K_{n+1}; float32 can undershoot so we clamp with a tiny
-    epsilon and report d so callers can monitor conditioning.
+    arithmetic for PD K_{n+1}; float32 can undershoot so the substrate clamps
+    at `ops.CLAMP_EPS` — use `ops.padded_append_row` directly to observe the
+    clamp flag (the GP state machine counts it, DESIGN.md §6).
     """
-    # q solves L_n q = p  (forward substitution).  Identity padding makes the
-    # full-buffer solve return q padded with zeros.
-    q = padded_trsv(l_buf, p_pad, lower=True)
-    d2 = c - q @ q
-    d = jnp.sqrt(jnp.maximum(d2, 1e-10))
-    # Write row n: [q^T, d].  Row n of the identity buffer was e_n, so first
-    # clear it, then scatter the new row.  A single masked-row write:
-    row = jnp.where(jnp.arange(n_max) < n, q, 0.0).at[n].set(d)
-    # Only replace row n; all other rows unchanged.
-    l_buf = jax.lax.dynamic_update_slice(l_buf, row[None, :], (n, 0))
-    return l_buf, d
+    assert n_max == l_buf.shape[0], (n_max, l_buf.shape)
+    l_new, d, _ = ops.padded_append_row(l_buf, p_pad, c, n,
+                                        implementation=implementation)
+    return l_new, d
 
 
 def lazy_append_block(l_buf: Array, p_block: Array, c_block: Array,
-                      n: Array, *, n_max: int) -> Array:
+                      n: Array, *, n_max: int,
+                      implementation: str = "auto") -> Array:
     """Absorb t new points (paper Sec. 3.4 parallel case) as t row appends.
 
     p_block: (t, n_max) covariance columns vs. existing actives (zero-padded
@@ -124,36 +131,32 @@ def lazy_append_block(l_buf: Array, p_block: Array, c_block: Array,
     def body(i, carry):
         l_buf, n = carry
         l_buf, _ = lazy_append_row(l_buf, p_block[i], c_block[i], n,
-                                   n_max=n_max)
+                                   n_max=n_max, implementation=implementation)
         return l_buf, n + 1
 
     l_buf, _ = jax.lax.fori_loop(0, t, body, (l_buf, n))
     return l_buf
 
 
-def lazy_full_refactor(k_active_pad: Array, n: Array, *, n_max: int) -> Array:
+def lazy_full_refactor(k_active_pad: Array, n: Array, *, n_max: int,
+                       implementation: str = "auto") -> Array:
     """Lag-event full refactorization on the padded buffer.
 
     k_active_pad must be the padded Gram matrix with *identity* beyond the
     active block, so the padded factor is the padded-identity factor of the
-    active block.  O(n_max^3) — amortized by the lagging factor l.
+    active block.  O(n_max^3), routed through the substrate's blocked
+    factorization — amortized by the lagging factor l.
     """
     del n, n_max
-    return jnp.linalg.cholesky(k_active_pad)
+    return ops.padded_cholesky(k_active_pad, implementation=implementation)
 
 
 def pad_gram(k_active: Array, n_max: int) -> Array:
-    """Embed an (n, n) Gram matrix with identity padding (for refactor)."""
+    """Embed an (n, n) Gram matrix with identity padding (for refactor).
+
+    The traced-n (fixed-shape) variant lives in the substrate as
+    `ops.masked_gram`, which is what `gp.refactor` dispatches through.
+    """
     n = k_active.shape[0]
     buf = jnp.eye(n_max, dtype=k_active.dtype)
     return buf.at[:n, :n].set(k_active)
-
-
-def mask_gram(k_full: Array, n: Array) -> Array:
-    """Given a full (n_max, n_max) Gram over the x-buffer, keep the active
-    block and identity-pad the rest (fixed-shape version of pad_gram)."""
-    n_max = k_full.shape[0]
-    idx = jnp.arange(n_max)
-    active = (idx[:, None] < n) & (idx[None, :] < n)
-    eye = jnp.eye(n_max, dtype=k_full.dtype)
-    return jnp.where(active, k_full, eye)

@@ -6,6 +6,9 @@ paper's O(n^2) Alg. 3 step; `refit` is the lag-event full refactorization with
 kernel hyper-parameter re-estimation via log-marginal-likelihood.
 
 Everything here is shape-static and jit-able; the BO loop compiles once.
+All linear algebra dispatches through the substrate (`repro.kernels.ops`) via
+the `implementation` knob ("auto" | "pallas" | "xla" | "ref", DESIGN.md §5);
+this module owns the padded-state policy only.
 """
 from __future__ import annotations
 
@@ -18,8 +21,26 @@ import jax.numpy as jnp
 
 from repro.core import cholesky as chol
 from repro.core.kernels import KERNELS, KernelFn, KernelParams
+from repro.kernels import ops
 
 Array = jax.Array
+
+
+class GPCapacityError(RuntimeError):
+    """Raised when an append would overflow the fixed (n_max, …) buffers.
+
+    The padded state cannot grow; without this guard the row write at index
+    n == n_max would clamp and silently corrupt the last row of the factor.
+    """
+
+
+def ensure_capacity(n: int, n_max: int, incoming: int = 1) -> None:
+    """Host-side capacity guard: fail loudly *before* the buffer overflows."""
+    if n + incoming > n_max:
+        raise GPCapacityError(
+            f"GP buffer full: n={n} + {incoming} incoming observation(s) "
+            f"exceeds n_max={n_max}; raise n_max (GPConfig/BOConfig/"
+            f"SchedulerConfig) or stop absorbing")
 
 
 @jax.tree_util.register_dataclass
@@ -33,6 +54,7 @@ class LazyGPState:
     alpha: Array        # (n_max,) (K + noise I)^{-1} (y - mean), zero-padded
     n: Array            # () int32 active count
     since_refit: Array  # () int32 appends since last full refactor
+    clamp_count: Array  # () int32 appends whose d^2 hit the conditioning floor
     params: KernelParams
 
     @property
@@ -55,7 +77,11 @@ class GPConfig:
     # fixes rho = 1; on a normalized domain that over-smooths multimodal
     # targets, so the framework default is 0.25 (beyond-paper).  Paper-repro
     # benchmarks pass rho0 = 1.0 explicitly.
+    implementation: str = "auto"   # linalg substrate (DESIGN.md §5)
     dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        ops.check_implementation(self.implementation)
 
     @property
     def kernel_fn(self) -> KernelFn:
@@ -71,6 +97,7 @@ def init_state(cfg: GPConfig, params: KernelParams | None = None) -> LazyGPState
         alpha=jnp.zeros((cfg.n_max,), cfg.dtype),
         n=jnp.asarray(0, jnp.int32),
         since_refit=jnp.asarray(0, jnp.int32),
+        clamp_count=jnp.asarray(0, jnp.int32),
         params=KernelParams(*[jnp.asarray(v, cfg.dtype)
                               for v in (params.sigma2, params.rho, params.noise2)]),
     )
@@ -87,62 +114,103 @@ def _ymean(state: LazyGPState) -> Array:
     return jnp.sum(jnp.where(m, state.y_buf, 0.0)) / cnt
 
 
-def _recompute_alpha(state: LazyGPState) -> Array:
+def _recompute_alpha(state: LazyGPState,
+                     implementation: str = "auto") -> Array:
     """alpha = (K + noise I)^{-1} (y - mean) via two padded triangular solves."""
     resid = jnp.where(_active_mask(state), state.y_buf - _ymean(state), 0.0)
-    z = chol.padded_trsv(state.l_buf, resid, lower=True)
-    return chol.padded_trsv(state.l_buf, z, lower=True, trans=True)
+    z = chol.padded_trsv(state.l_buf, resid, implementation=implementation)
+    return chol.padded_trsv(state.l_buf, z, trans=True,
+                            implementation=implementation)
 
 
-def _cov_column(state: LazyGPState, kernel: KernelFn, x_new: Array) -> tuple[Array, Array]:
+def _cov_column(state: LazyGPState, kernel: KernelFn, x_new: Array,
+                implementation: str = "auto") -> tuple[Array, Array]:
     """(p_pad, c): covariances of x_new against actives (padded) and itself."""
-    p = kernel(state.x_buf, x_new[None, :], state.params)[:, 0]
+    p = ops.kernel_gram(kernel, state.x_buf, x_new[None, :], state.params,
+                        implementation=implementation)[:, 0]
     p_pad = jnp.where(_active_mask(state), p, 0.0)
     c = kernel(x_new[None, :], x_new[None, :], state.params)[0, 0] + state.params.noise2
     return p_pad, c
 
 
-def append(state: LazyGPState, kernel: KernelFn, x_new: Array,
-           y_new: Array) -> LazyGPState:
-    """Absorb one observation in O(n_max^2) (paper Alg. 3).
+def _append_row_only(state: LazyGPState, kernel: KernelFn, x_new: Array,
+                     y_new: Array, implementation: str) -> LazyGPState:
+    """Row append with a *stale* alpha — the deferred-alpha batch path.
 
-    Traced-shape safe: can run under jit with n as a traced value.
+    Callers must refresh alpha (`_recompute_alpha`) before the state is used
+    for posterior queries; `append_batch` does so once per batch.
     """
-    n_max = state.n_max
-    p_pad, c = _cov_column(state, kernel, x_new)
-    l_buf, _ = chol.lazy_append_row(state.l_buf, p_pad, c, state.n, n_max=n_max)
+    p_pad, c = _cov_column(state, kernel, x_new, implementation)
+    l_buf, _, clamped = ops.padded_append_row(
+        state.l_buf, p_pad, c, state.n, implementation=implementation)
     x_buf = jax.lax.dynamic_update_slice(state.x_buf, x_new[None, :], (state.n, 0))
     y_buf = jax.lax.dynamic_update_slice(state.y_buf, y_new[None], (state.n,))
-    new = dataclasses.replace(
+    return dataclasses.replace(
         state, x_buf=x_buf, y_buf=y_buf, l_buf=l_buf,
-        n=state.n + 1, since_refit=state.since_refit + 1)
-    return dataclasses.replace(new, alpha=_recompute_alpha(new))
+        n=state.n + 1, since_refit=state.since_refit + 1,
+        clamp_count=state.clamp_count + clamped)
+
+
+def append(state: LazyGPState, kernel: KernelFn, x_new: Array,
+           y_new: Array, *, implementation: str = "auto") -> LazyGPState:
+    """Absorb one observation in O(n_max^2) (paper Alg. 3).
+
+    Traced-shape safe: can run under jit with n as a traced value.  Uses the
+    substrate's fused append — the row solve and the alpha refresh share one
+    factor residency (two passes instead of three independent solves).
+    """
+    n_max = state.n_max
+    p_pad, c = _cov_column(state, kernel, x_new, implementation)
+    x_buf = jax.lax.dynamic_update_slice(state.x_buf, x_new[None, :], (state.n, 0))
+    y_buf = jax.lax.dynamic_update_slice(state.y_buf, y_new[None], (state.n,))
+    n_new = state.n + 1
+    mask_new = jnp.arange(n_max) < n_new
+    ymean = jnp.sum(jnp.where(mask_new, y_buf, 0.0)) / jnp.maximum(n_new, 1)
+    resid = jnp.where(mask_new, y_buf - ymean, 0.0)
+    l_buf, alpha, _, clamped = ops.lazy_append(
+        state.l_buf, p_pad, c, resid, state.n, implementation=implementation)
+    return dataclasses.replace(
+        state, x_buf=x_buf, y_buf=y_buf, l_buf=l_buf, alpha=alpha,
+        n=n_new, since_refit=state.since_refit + 1,
+        clamp_count=state.clamp_count + clamped)
 
 
 def append_batch(state: LazyGPState, kernel: KernelFn, xs: Array,
-                 ys: Array) -> LazyGPState:
+                 ys: Array, *, implementation: str = "auto") -> LazyGPState:
     """Absorb t observations as t sequential O(n^2) appends (paper Sec. 3.4).
 
     Under a frozen kernel the appends commute up to row order, so the HPO
     scheduler may feed results in *completion* order (async absorption).
+
+    The alpha refresh is deferred to once per batch: each row append is a
+    single forward solve, and the two alpha solves run once at the end —
+    cutting 2(t-1) O(n_max^2) solves per parallel round vs. refreshing after
+    every row.  The result is numerically equivalent (to solver round-off)
+    to t sequential `append` calls: alpha depends only on the final factor
+    and residual, though the fused sequential path accumulates rounding
+    differently than the final two-solve refresh.
     """
     def body(i, st):
-        return append(st, kernel, xs[i], ys[i])
+        return _append_row_only(st, kernel, xs[i], ys[i], implementation)
 
-    return jax.lax.fori_loop(0, xs.shape[0], body, state)
+    st = jax.lax.fori_loop(0, xs.shape[0], body, state)
+    return dataclasses.replace(
+        st, alpha=_recompute_alpha(st, implementation))
 
 
-def posterior(state: LazyGPState, kernel: KernelFn,
-              x_star: Array) -> tuple[Array, Array]:
+def posterior(state: LazyGPState, kernel: KernelFn, x_star: Array,
+              *, implementation: str = "auto") -> tuple[Array, Array]:
     """Posterior mean and variance at query points x_star (m, d).
 
     mean = k_*^T alpha + ymean ; var = k_** - v^T v with v = L^{-1} k_*
     (paper Alg. 1 lines 3-6), on padded buffers.
     """
-    k_star = kernel(state.x_buf, x_star, state.params)          # (n_max, m)
+    k_star = ops.kernel_gram(kernel, state.x_buf, x_star, state.params,
+                             implementation=implementation)   # (n_max, m)
     k_star = jnp.where(_active_mask(state)[:, None], k_star, 0.0)
     mean = k_star.T @ state.alpha + _ymean(state)
-    v = chol.padded_trsv(state.l_buf, k_star, lower=True)       # (n_max, m)
+    v = chol.padded_trsv(state.l_buf, k_star,
+                         implementation=implementation)       # (n_max, m)
     k_ss = kernel(x_star, x_star, state.params)
     var = jnp.maximum(jnp.diag(k_ss) - jnp.sum(v * v, axis=0), 1e-12)
     return mean, var
@@ -166,27 +234,35 @@ def log_marginal_likelihood(state: LazyGPState) -> Array:
 # ---------------------------------------------------------------------------
 
 def refactor(state: LazyGPState, kernel: KernelFn,
-             params: KernelParams | None = None) -> LazyGPState:
-    """Full O(n^3) refactorization (optionally with new kernel params)."""
+             params: KernelParams | None = None,
+             *, implementation: str = "auto") -> LazyGPState:
+    """Full O(n^3) refactorization (optionally with new kernel params).
+
+    Routed through the substrate's blocked factorization on the identity-
+    padded Gram buffer.
+    """
     params = params or state.params
     st = dataclasses.replace(state, params=params)
-    k_full = kernel(st.x_buf, st.x_buf, params)
-    k_full = k_full + params.noise2 * jnp.eye(st.n_max, dtype=k_full.dtype)
-    k_pad = chol.mask_gram(k_full, st.n)
-    l_buf = jnp.linalg.cholesky(k_pad)
+    k_pad = ops.masked_gram(st.x_buf, st.n, kernel, params,
+                            implementation=implementation)
+    l_buf = chol.lazy_full_refactor(k_pad, st.n, n_max=st.n_max,
+                                    implementation=implementation)
     st = dataclasses.replace(st, l_buf=l_buf, since_refit=jnp.asarray(0, jnp.int32))
-    return dataclasses.replace(st, alpha=_recompute_alpha(st))
+    return dataclasses.replace(
+        st, alpha=_recompute_alpha(st, implementation))
 
 
-def _lml_for(state: LazyGPState, kernel: KernelFn, params: KernelParams) -> Array:
+def _lml_for(state: LazyGPState, kernel: KernelFn, params: KernelParams,
+             implementation: str = "auto") -> Array:
     """LML under candidate params (full rebuild; only used at lag events)."""
-    st = refactor(state, kernel, params)
+    st = refactor(state, kernel, params, implementation=implementation)
     return log_marginal_likelihood(st)
 
 
 def refit_params(state: LazyGPState, kernel: KernelFn,
                  rho_grid: Array | None = None,
-                 sigma2_grid: Array | None = None) -> KernelParams:
+                 sigma2_grid: Array | None = None,
+                 *, implementation: str = "auto") -> KernelParams:
     """Multi-restart (grid) LML maximization over (sigma2, rho).
 
     The paper refits "at reasonable intervals"; a coarse grid is robust, jits
@@ -204,7 +280,7 @@ def refit_params(state: LazyGPState, kernel: KernelFn,
 
     def score(c):
         p = KernelParams(sigma2=c[0], rho=c[1], noise2=state.params.noise2)
-        return _lml_for(state, kernel, p)
+        return _lml_for(state, kernel, p, implementation)
 
     lmls = jax.lax.map(score, cand)
     best = jnp.argmax(lmls)
@@ -212,7 +288,8 @@ def refit_params(state: LazyGPState, kernel: KernelFn,
                         noise2=state.params.noise2)
 
 
-def maybe_refit(state: LazyGPState, kernel: KernelFn, lag: int) -> LazyGPState:
+def maybe_refit(state: LazyGPState, kernel: KernelFn, lag: int,
+                *, implementation: str = "auto") -> LazyGPState:
     """Apply the lag policy: every `lag` appends, refit params + refactor.
 
     lag <= 0 means never (the fully lazy GP); lag == 1 reproduces the standard
@@ -222,8 +299,8 @@ def maybe_refit(state: LazyGPState, kernel: KernelFn, lag: int) -> LazyGPState:
         return state
 
     def do_refit(st):
-        params = refit_params(st, kernel)
-        return refactor(st, kernel, params)
+        params = refit_params(st, kernel, implementation=implementation)
+        return refactor(st, kernel, params, implementation=implementation)
 
     return jax.lax.cond(state.since_refit >= lag, do_refit, lambda s: s, state)
 
@@ -233,17 +310,16 @@ def maybe_refit(state: LazyGPState, kernel: KernelFn, lag: int) -> LazyGPState:
 # ---------------------------------------------------------------------------
 
 def dense_posterior(x: Array, y: Array, x_star: Array, kernel: KernelFn,
-                    params: KernelParams) -> tuple[Array, Array]:
+                    params: KernelParams,
+                    implementation: str = "auto") -> tuple[Array, Array]:
     """Textbook GP posterior with a fresh full factorization (paper Alg. 1)."""
     n = x.shape[0]
     k = kernel(x, x, params) + params.noise2 * jnp.eye(n, dtype=x.dtype)
-    l = jnp.linalg.cholesky(k)
+    l = ops.cholesky(k, implementation=implementation)
     ymean = jnp.mean(y)
-    z = chol.padded_trsv(l, y - ymean, lower=True)
-    alpha = chol.padded_trsv(l, z, lower=True, trans=True)
+    resid = y - ymean
     k_star = kernel(x, x_star, params)
-    mean = k_star.T @ alpha + ymean
-    v = chol.padded_trsv(l, k_star, lower=True)
-    var = jnp.maximum(jnp.diag(kernel(x_star, x_star, params))
-                      - jnp.sum(v * v, axis=0), 1e-12)
-    return mean, var
+    k_ss_diag = jnp.diag(kernel(x_star, x_star, params))
+    mean, var = ops.gp_posterior_solve(l, resid, k_star, k_ss_diag,
+                                       implementation=implementation)
+    return mean + ymean, var

@@ -69,6 +69,11 @@ def rbf(x: Array, y: Array, params: KernelParams) -> Array:
 
 KernelFn = Callable[[Array, Array, KernelParams], Array]
 
+# Explicit substrate tag: kernels with a tiled Pallas gram build advertise it
+# here, and `repro.kernels.ops.kernel_gram` dispatches on the attribute (a
+# name match would silently break for wrapped/renamed kernels).
+matern52.pallas_gram = "matern52"
+
 KERNELS: dict[str, KernelFn] = {
     "matern52": matern52,
     "matern32": matern32,

@@ -49,6 +49,7 @@ class SchedulerConfig:
     rho0: float = 0.25
     noise2: float = 1e-5
     seed: int = 0
+    implementation: str = "auto"  # linalg substrate (auto|pallas|xla|ref)
     failure_penalty: float | None = None  # None: drop; else pseudo-y
     max_retries: int = 1
     ckpt_dir: str | None = None
@@ -68,6 +69,8 @@ class Trial:
     started: float = 0.0
     finished: float = 0.0
     retries: int = 0
+    clamp_count: int | None = None  # cumulative GP conditioning-floor hits
+    # at absorb time (ill-conditioning telemetry, DESIGN.md §6)
 
 
 class TrialScheduler:
@@ -79,7 +82,8 @@ class TrialScheduler:
         self.kernel = KERNELS[cfg.kernel]
         gcfg = gp_mod.GPConfig(n_max=cfg.n_max, dim=space.dim,
                                kernel=cfg.kernel, noise2=cfg.noise2,
-                               rho0=cfg.rho0)
+                               rho0=cfg.rho0,
+                               implementation=cfg.implementation)
         self.state = gp_mod.init_state(gcfg)
         self.trials: list[Trial] = []
         self._next_id = 0
@@ -88,18 +92,25 @@ class TrialScheduler:
         self._hi = jnp.ones((space.dim,))
         self._suggest = jax.jit(self._suggest_impl,
                                 static_argnames=("top_t",))
+        # The substrate knob is a Python constant inside the jitted closures:
+        # one compilation per configured implementation.
         self._append = jax.jit(
-            lambda st, x, y: gp_mod.append(st, self.kernel, x, y))
+            lambda st, x, y: gp_mod.append(
+                st, self.kernel, x, y,
+                implementation=self.cfg.implementation))
         self._refit = jax.jit(self._refit_impl)
 
     # ------------------------------------------------------------------
     def _suggest_impl(self, state, key, *, top_t):
         return acq_mod.optimize_acquisition(
-            state, self.kernel, self._lo, self._hi, key, self.cfg.acq, top_t)
+            state, self.kernel, self._lo, self._hi, key, self.cfg.acq, top_t,
+            implementation=self.cfg.implementation)
 
     def _refit_impl(self, state):
-        params = gp_mod.refit_params(state, self.kernel)
-        return gp_mod.refactor(state, self.kernel, params)
+        params = gp_mod.refit_params(
+            state, self.kernel, implementation=self.cfg.implementation)
+        return gp_mod.refactor(state, self.kernel, params,
+                               implementation=self.cfg.implementation)
 
     def _split(self):
         self._key, sub = jax.random.split(self._key)
@@ -129,11 +140,13 @@ class TrialScheduler:
     # ------------------------------------------------------------------
     def absorb(self, trial: Trial, value: float) -> None:
         """O(n^2) row append (order-independent under the frozen kernel)."""
+        gp_mod.ensure_capacity(int(self.state.n), self.cfg.n_max)
         trial.status = "done"
         trial.value = float(value)
         trial.finished = time.time()
         self.state = self._append(self.state, jnp.asarray(trial.unit),
                                   jnp.asarray(value, jnp.float32))
+        trial.clamp_count = int(self.state.clamp_count)
         if self.cfg.lag > 0 and int(self.state.since_refit) >= self.cfg.lag:
             self.state = self._refit(self.state)
         self._maybe_checkpoint()
@@ -145,9 +158,11 @@ class TrialScheduler:
         trial.finished = time.time()
         if self.cfg.failure_penalty is not None:
             # Pseudo-observation keeps EI away from a crashing region.
+            gp_mod.ensure_capacity(int(self.state.n), self.cfg.n_max)
             self.state = self._append(
                 self.state, jnp.asarray(trial.unit),
                 jnp.asarray(self.cfg.failure_penalty, jnp.float32))
+            trial.clamp_count = int(self.state.clamp_count)
         if trial.retries < self.cfg.max_retries:
             nxt = self.suggest(1)[0]
             nxt.retries = trial.retries + 1
@@ -190,7 +205,7 @@ class TrialScheduler:
             tr = Trial(rec["trial_id"], np.asarray(rec["unit"], np.float32),
                        rec["hparams"], rec["status"], rec["value"],
                        rec["error"], rec["started"], rec["finished"],
-                       rec["retries"])
+                       rec["retries"], rec.get("clamp_count"))
             self.trials.append(tr)
         return True
 
@@ -234,13 +249,20 @@ class TrialScheduler:
                 for fut in done:       # async absorption, completion order
                     tr = fut.trial
                     try:
-                        self.absorb(tr, float(fut.result()))
-                        absorbed += 1
+                        val = float(fut.result())
+                        if not np.isfinite(val):
+                            raise FloatingPointError(
+                                f"objective returned {val}")
                     except Exception as e:  # noqa: BLE001 — trial fault
                         retry = self.record_failure(
                             tr, f"{type(e).__name__}: {e}")
                         if retry is not None:
                             pending.add(launch(pool, retry))
+                    else:
+                        # Scheduler-side errors (capacity, checkpoint IO)
+                        # propagate: they are not trial faults to retry.
+                        self.absorb(tr, val)
+                        absorbed += 1
                 width = max(1, width_fn())
                 while len(pending) < width and absorbed + len(pending) < budget:
                     for tr in self.suggest(1):
@@ -257,10 +279,14 @@ class TrialScheduler:
             val = float(objective(trial.hparams))
             if not np.isfinite(val):
                 raise FloatingPointError(f"objective returned {val}")
-            self.absorb(trial, val)
-        except Exception as e:  # noqa: BLE001
+        except Exception as e:  # noqa: BLE001 — trial fault only
             retry = self.record_failure(trial, traceback.format_exc()[-500:]
                                         if not isinstance(e, FloatingPointError)
                                         else str(e))
             if retry is not None:
                 self._run_one(objective, retry)
+        else:
+            # Absorb outside the trial-fault net: a scheduler-side error
+            # (GP capacity, checkpoint IO) must propagate, not masquerade as
+            # a failed trial and spin the retry loop.
+            self.absorb(trial, val)

@@ -4,7 +4,8 @@
   * `trsv.py`   — blocked forward/backward substitution: the O(n^2)
                   incremental-Cholesky append (Alg. 3) and posterior solves
   * `chol.py`   — blocked right-looking Cholesky: the lag-event refactorization
-  * `ops.py`    — jitted wrappers w/ padding + XLA fallback
+  * `ops.py`    — the linalg substrate: single dispatch surface (pallas/xla/
+                  ref) incl. the padded-state ops every GP operation uses
   * `ref.py`    — pure-jnp oracles for allclose validation
 """
 from repro.kernels import ops, ref

@@ -43,12 +43,9 @@ def _matern_tile_kernel(x_ref, y_ref, sig_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def matern52_gram_pallas(x: Array, y: Array, sigma2, rho,
-                         *, interpret: bool = False) -> Array:
-    """x: (n, d), y: (m, d) with n, m multiples of 128 (ops.py pads).
-
-    Returns the (n, m) Matérn-2.5 covariance tile grid.
-    """
+def _matern_pallas_raw(x: Array, y: Array, sigma2, rho,
+                       *, interpret: bool = False) -> Array:
+    """The raw pallas_call (no AD rule — wrapped by the custom VJP below)."""
     n, d = x.shape
     m = y.shape[0]
     assert n % BLOCK_N == 0 and m % BLOCK_M == 0, (n, m)
@@ -66,3 +63,60 @@ def matern52_gram_pallas(x: Array, y: Array, sigma2, rho,
         out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
         interpret=interpret,
     )(x, y, params)
+
+
+# The acquisition optimizer differentiates the posterior w.r.t. the query
+# points, which flow through this gram build — and `pallas_call` has no
+# linearization rule.  The backward pass is the analytic Matérn-2.5 gradient
+# in plain jnp (one matmul-dominated pass; never re-differentiated):
+#   k = sigma2 g(z) e^{-z},  z = sqrt5 |x - y| / rho,  g = 1 + z + z^2/3
+#   dk/dx_i = -sigma2 (5 / 3 rho^2) e^{-z} (1 + z) (x_i - y_j)
+# (the apparent 1/|x-y| singularity cancels analytically).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _matern_vjp(x: Array, y: Array, sigma2, rho, interpret: bool) -> Array:
+    return _matern_pallas_raw(x, y, sigma2, rho, interpret=interpret)
+
+
+def _matern_fwd(x, y, sigma2, rho, interpret):
+    k = _matern_pallas_raw(x, y, sigma2, rho, interpret=interpret)
+    return k, (x, y, sigma2, rho)
+
+
+def _matern_bwd(interpret, res, g):
+    x, y, sigma2, rho = res
+    x32 = x.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    sig = jnp.asarray(sigma2, jnp.float32)
+    rho32 = jnp.asarray(rho, jnp.float32)
+    xx = jnp.sum(x32 * x32, axis=-1)[:, None]
+    yy = jnp.sum(y32 * y32, axis=-1)[None, :]
+    sq = jnp.maximum(xx + yy - 2.0 * (x32 @ y32.T), 0.0)
+    dist = jnp.sqrt(sq + 1e-36)
+    z = jnp.sqrt(5.0) * dist / rho32
+    ez = jnp.exp(-z)
+    poly = 1.0 + z + z * z / 3.0
+    dsigma2 = jnp.sum(g32 * poly * ez)
+    # dk/dz = -sigma2 e^{-z} z (1 + z) / 3 ;  dz/drho = -z / rho
+    drho = jnp.sum(g32 * sig * ez * z * z * (1.0 + z) / (3.0 * rho32))
+    # s_ij = g_ij dk_ij/d(x_i - y_j) / (x_i - y_j): the d-cancelled factor
+    s = -g32 * sig * ez * (1.0 + z) * (5.0 / (3.0 * rho32 * rho32))
+    dx = jnp.sum(s, axis=1)[:, None] * x32 - s @ y32
+    dy = jnp.sum(s, axis=0)[:, None] * y32 - s.T @ x32
+    return (dx.astype(x.dtype), dy.astype(y.dtype),
+            dsigma2.astype(jnp.result_type(sigma2)),
+            drho.astype(jnp.result_type(rho)))
+
+
+_matern_vjp.defvjp(_matern_fwd, _matern_bwd)
+
+
+def matern52_gram_pallas(x: Array, y: Array, sigma2, rho,
+                         *, interpret: bool = False) -> Array:
+    """x: (n, d), y: (m, d) with n, m multiples of 128 (ops.py pads).
+
+    Returns the (n, m) Matérn-2.5 covariance tile grid.  Differentiable in
+    x, y, sigma2, rho via the analytic VJP above.
+    """
+    return _matern_vjp(x, y, sigma2, rho, interpret)

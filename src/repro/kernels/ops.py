@@ -1,4 +1,4 @@
-"""Jitted public wrappers around the Pallas kernels, with padding + fallback.
+"""The linalg substrate: single dispatch surface for every GP operation.
 
 Dispatch policy (`implementation`):
   * "auto"   — Pallas on TPU backends, XLA elsewhere (this CPU container).
@@ -8,6 +8,22 @@ Dispatch policy (`implementation`):
 
 Every wrapper pads to the kernels' 128-aligned envelope and slices the result
 back, so callers never see alignment constraints.
+
+Two families of entry points:
+
+  * Active-shape ops (`matern52_gram`, `trsv`, `cholesky`, `chol_append`,
+    `gp_posterior_solve`) take exact (n, …) arrays.
+  * Padded-state ops (`padded_trsv`, `padded_cholesky`, `masked_gram`,
+    `padded_append_row`, `lazy_append`) understand the identity-padded
+    (n_max, n_max) buffers of DESIGN.md §3: the active top-left (n, n) block
+    is real data, the remainder is the identity, and right-hand sides are
+    zero beyond the active block.  These are what `repro.core` dispatches
+    through — no direct `solve_triangular` / dense-Cholesky call sites exist
+    above this module.
+
+`lazy_append` is the fused paper-Alg. 3 step: the row solve and the alpha
+refresh share one factor residency (a single two-column forward solve plus
+one backward solve) instead of three independent full solves.
 """
 from __future__ import annotations
 
@@ -26,6 +42,12 @@ Array = jax.Array
 ALIGN = 128
 # Whole-factor VMEM residency bound (f32): 1024^2 * 4 B * (in + out) = 8 MB.
 MAX_PALLAS_N = 2048
+# Floor for the squared new-diagonal d^2 = c - q.q in the incremental append.
+# The paper's lemma guarantees d^2 > 0 in exact arithmetic; hitting this floor
+# means float32 ill-conditioning, which the padded ops report to callers.
+CLAMP_EPS = 1e-10
+
+IMPLEMENTATIONS = ("auto", "pallas", "xla", "ref")
 
 
 def _on_tpu() -> bool:
@@ -112,7 +134,7 @@ def chol_append(l: Array, p: Array, c: Array,
                 implementation: str = "auto") -> tuple[Array, Array]:
     """Fused incremental append on the active factor: q = L^{-1}p, d."""
     q = trsv(l, p, implementation=implementation)
-    d = jnp.sqrt(jnp.maximum(c - q @ q, 1e-10))
+    d = jnp.sqrt(jnp.maximum(c - q @ q, CLAMP_EPS))
     return q, d
 
 
@@ -127,3 +149,140 @@ def gp_posterior_solve(l: Array, resid: Array, k_star: Array, k_ss_diag: Array,
     mean = k_star.T @ alpha
     var = jnp.maximum(k_ss_diag - jnp.sum(v * v, axis=0), 1e-12)
     return mean, var
+
+
+# ---------------------------------------------------------------------------
+# Padded-state ops: the identity-padded (n_max, n_max) buffers of DESIGN.md §3.
+# ---------------------------------------------------------------------------
+
+def check_implementation(implementation: str) -> str:
+    """Validate the dispatch knob early (host-side, before any tracing)."""
+    if implementation not in IMPLEMENTATIONS:
+        raise ValueError(
+            f"unknown implementation {implementation!r}; "
+            f"expected one of {IMPLEMENTATIONS}")
+    return implementation
+
+
+def padded_trsv(l_buf: Array, b: Array, *, trans: bool = False,
+                implementation: str = "auto") -> Array:
+    """Triangular solve on the identity-padded factor buffer.
+
+    Exact for right-hand sides that are zero beyond the active block (rows
+    >= n have zeros left of a unit diagonal), which is the invariant every
+    padded GP solve relies on.  Same dispatch as `trsv`; named separately so
+    call sites document which shape contract they use.
+    """
+    return trsv(l_buf, b, trans=trans, implementation=implementation)
+
+
+def padded_cholesky(k_pad: Array, implementation: str = "auto") -> Array:
+    """Blocked Cholesky of an identity-padded Gram buffer.
+
+    The identity padding is SPD, and the factor of a block-diagonal
+    [[K, 0], [0, I]] matrix is [[L, 0], [0, I]] — so factoring the padded
+    buffer directly yields the identity-padded factor the lazy state stores.
+    """
+    return cholesky(k_pad, implementation=implementation)
+
+
+def kernel_gram(kernel_fn, x: Array, y: Array, params,
+                implementation: str = "auto") -> Array:
+    """Covariance build through the substrate.
+
+    Kernel functions opt into a Pallas build by carrying a `pallas_gram`
+    attribute naming their kernel (set by `repro.core.kernels`); anything
+    else — including wrappers that drop the attribute — falls back to the
+    kernel's own jnp formulation (already one fused MXU-friendly matmul
+    under XLA).  `params` is duck-typed: needs `.sigma2` and `.rho`.
+    """
+    use, _ = _use_pallas(implementation)
+    if use and getattr(kernel_fn, "pallas_gram", None) == "matern52":
+        return matern52_gram(x, y, params.sigma2, params.rho,
+                             implementation=implementation)
+    return kernel_fn(x, y, params)
+
+
+def masked_gram(x_buf: Array, n: Array, kernel_fn, params,
+                implementation: str = "auto") -> Array:
+    """Full identity-padded Gram K + noise2 I over the padded point buffer.
+
+    Rows/cols >= n are replaced by the identity so `padded_cholesky` of the
+    result is the identity-padded factor (the lag-event refactorization
+    input).  `n` may be traced; the output shape is always (n_max, n_max).
+    """
+    n_max = x_buf.shape[0]
+    k = kernel_gram(kernel_fn, x_buf, x_buf, params,
+                    implementation=implementation)
+    eye = jnp.eye(n_max, dtype=k.dtype)
+    k = k + params.noise2 * eye
+    idx = jnp.arange(n_max)
+    active = (idx[:, None] < n) & (idx[None, :] < n)
+    return jnp.where(active, k, eye)
+
+
+def _write_append_row(l_buf: Array, q: Array, d: Array, n: Array) -> Array:
+    """Replace row n of the padded factor with [q^T, d, 0, ...]."""
+    n_max = l_buf.shape[0]
+    row = jnp.where(jnp.arange(n_max) < n, q, 0.0).at[n].set(d)
+    return jax.lax.dynamic_update_slice(l_buf, row[None, :], (n, 0))
+
+
+def padded_append_row(l_buf: Array, p_pad: Array, c: Array, n: Array,
+                      *, implementation: str = "auto"
+                      ) -> tuple[Array, Array, Array]:
+    """Paper Alg. 3 row append on the padded factor, O(n_max^2).
+
+    Args:
+      l_buf: (n_max, n_max) identity-padded factor of K_n + noise I.
+      p_pad: (n_max,) new covariance column k(X, x_new), zero beyond n.
+      c: scalar k(x_new, x_new) + noise.
+      n: active count (traced int32); the new row lands at index n.
+
+    Returns (l_new, d, clamped) where `clamped` is 1 iff d^2 hit the
+    CLAMP_EPS conditioning floor (float32 breakdown — see DESIGN.md §6).
+    """
+    q = padded_trsv(l_buf, p_pad, implementation=implementation)
+    d2 = c - q @ q
+    clamped = (d2 < CLAMP_EPS).astype(jnp.int32)
+    d = jnp.sqrt(jnp.maximum(d2, CLAMP_EPS))
+    return _write_append_row(l_buf, q, d, n), d, clamped
+
+
+def lazy_append(l_buf: Array, p_pad: Array, c: Array, resid: Array, n: Array,
+                *, implementation: str = "auto"
+                ) -> tuple[Array, Array, Array, Array]:
+    """Fused Alg. 3 append: row solve + alpha refresh in two factor passes.
+
+    The unfused path costs three independent O(n_max^2) solves per append
+    (q = L^{-1}p, then z = L'^{-1}r and alpha = L'^{-T}z on the new factor).
+    Because the new factor L' differs from L only in row n, the forward
+    solves for q and z[:n] coincide on the old factor — so both ride one
+    two-column `trsv` (one factor residency), row n of z is a scalar fix-up
+    z_n = (r_n - q.z)/d, and only the backward alpha solve touches L'.
+
+    Args:
+      resid: (n_max,) residual y - mean *including* the new observation at
+        row n, zero beyond row n.
+
+    Returns (l_new, alpha, d, clamped).
+    """
+    n_max = l_buf.shape[0]
+    idx = jnp.arange(n_max)
+    below = idx < n
+    # One forward pass over the old factor for both right-hand sides.
+    rhs = jnp.stack([p_pad, jnp.where(below, resid, 0.0)], axis=1)
+    qz = padded_trsv(l_buf, rhs, implementation=implementation)
+    q = jnp.where(below, qz[:, 0], 0.0)
+    z = jnp.where(below, qz[:, 1], 0.0)
+    d2 = c - q @ q
+    clamped = (d2 < CLAMP_EPS).astype(jnp.int32)
+    d = jnp.sqrt(jnp.maximum(d2, CLAMP_EPS))
+    l_new = _write_append_row(l_buf, q, d, n)
+    # Row n of the forward solve against the *new* factor: L'[n] = [q^T, d].
+    z_n = (resid[n] - q @ z) / d
+    z_full = jnp.where(idx == n, z_n, z)
+    # One backward pass over the new factor.
+    alpha = padded_trsv(l_new, z_full, trans=True,
+                        implementation=implementation)
+    return l_new, jnp.where(idx <= n, alpha, 0.0), d, clamped

@@ -91,13 +91,9 @@ def _trsv_kernel(l_ref, b_ref, out_ref, *, trans: bool, n_blocks: int):
 
 
 @functools.partial(jax.jit, static_argnames=("trans", "interpret"))
-def trsv_pallas(l: Array, b: Array, *, trans: bool = False,
-                interpret: bool = False) -> Array:
-    """Solve L q = b (trans=False) or L^T q = b (trans=True).
-
-    l: (n, n) lower triangular, n a multiple of 128.  b: (n, r) with r a lane
-    multiple (ops.py pads vector RHS to (n, 128)).
-    """
+def _trsv_pallas_raw(l: Array, b: Array, *, trans: bool = False,
+                     interpret: bool = False) -> Array:
+    """The raw pallas_call (no AD rule — wrapped by the custom VJP below)."""
     n = l.shape[0]
     assert n % BLOCK == 0, n
     assert b.ndim == 2 and b.shape[0] == n, b.shape
@@ -112,3 +108,40 @@ def trsv_pallas(l: Array, b: Array, *, trans: bool = False,
         out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
         interpret=interpret,
     )(l, b)
+
+
+# `pallas_call` has no linearization rule, but the acquisition optimizer
+# differentiates through the posterior solves — so the solve carries the
+# textbook triangular-solve VJP, with both backward solves riding the same
+# Pallas kernel:
+#   q = L^{-1} b :  b_bar = L^{-T} q_bar,  L_bar = -tril(b_bar q^T)
+#   q = L^{-T} b :  b_bar = L^{-1} q_bar,  L_bar = -tril(q b_bar^T)
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _trsv_vjp(l: Array, b: Array, trans: bool, interpret: bool) -> Array:
+    return _trsv_pallas_raw(l, b, trans=trans, interpret=interpret)
+
+
+def _trsv_fwd(l, b, trans, interpret):
+    q = _trsv_pallas_raw(l, b, trans=trans, interpret=interpret)
+    return q, (l, q)
+
+
+def _trsv_bwd(trans, interpret, res, g):
+    l, q = res
+    db = _trsv_pallas_raw(l, g, trans=not trans, interpret=interpret)
+    dl = -jnp.tril(q @ db.T if trans else db @ q.T)
+    return dl.astype(l.dtype), db.astype(q.dtype)
+
+
+_trsv_vjp.defvjp(_trsv_fwd, _trsv_bwd)
+
+
+def trsv_pallas(l: Array, b: Array, *, trans: bool = False,
+                interpret: bool = False) -> Array:
+    """Solve L q = b (trans=False) or L^T q = b (trans=True).  Differentiable.
+
+    l: (n, n) lower triangular, n a multiple of 128.  b: (n, r) with r a lane
+    multiple (ops.py pads vector RHS to (n, 128)).
+    """
+    return _trsv_vjp(l, b, trans, interpret)

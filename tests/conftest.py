@@ -1,0 +1,52 @@
+"""Test-session bootstrap: graceful degradation when `hypothesis` is absent.
+
+The property tests in this suite use hypothesis, which is not part of the
+runtime environment (see pyproject.toml's `test` extra).  When the real
+package is unavailable we install a minimal stub into `sys.modules` whose
+`@given` marks the decorated test as skipped — the deterministic tests keep
+running and collection never errors out.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+try:
+    import hypothesis  # noqa: F401  (real package available: nothing to do)
+except ImportError:
+    import pytest
+
+    def _strategy(*args, **kwargs):
+        return None
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    for _name in ("integers", "floats", "booleans", "text", "lists",
+                  "tuples", "sampled_from", "one_of", "just"):
+        setattr(strategies, _name, _strategy)
+
+    def given(*args, **kwargs):
+        def decorate(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed; property test skipped")(fn)
+        return decorate
+
+    def settings(*args, **kwargs):
+        def decorate(fn):
+            return fn
+        return decorate
+
+    settings.register_profile = lambda *a, **k: None
+    settings.load_profile = lambda *a, **k: None
+
+    stub = types.ModuleType("hypothesis")
+    stub.given = given
+    stub.settings = settings
+    stub.strategies = strategies
+    stub.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None)
+    stub.assume = lambda *a, **k: True
+    stub.note = lambda *a, **k: None
+    stub.__is_stub__ = True
+
+    sys.modules["hypothesis"] = stub
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,304 @@
+"""Substrate-dispatch parity: every `implementation` computes the same GP.
+
+Covers the contract of DESIGN.md §6: the lazy GP posterior routed through
+each substrate ("xla", "ref", and "pallas" in interpret mode on CPU) matches
+the textbook dense GP; the deferred-alpha `append_batch` matches sequential
+appends; the fused `lazy_append` matches the unfused row-append + alpha
+recompute; and the observability/safety satellites (conditioning-floor
+counter, capacity guard) behave.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BayesOpt, BOConfig, GPCapacityError, GPConfig,
+                        KernelParams, append, append_batch, dense_posterior,
+                        ensure_capacity, gram, init_state, matern52,
+                        posterior, refactor)
+from repro.core import cholesky as chol
+from repro.core import gp as gp_mod
+from repro.hpo.scheduler import SchedulerConfig, TrialScheduler
+from repro.hpo.space import RESNET_SPACE
+from repro.kernels import ops
+
+IMPLEMENTATIONS = ["xla", "ref", "pallas"]
+
+
+def _seed_state(key, n0, d, n_max, noise2=1e-6, implementation="auto"):
+    xs = jax.random.uniform(key, (n0, d), minval=-2.0, maxval=2.0)
+    ys = jnp.sin(xs.sum(-1)) + 0.1 * xs[:, 0]
+    cfg = GPConfig(n_max=n_max, dim=d, noise2=noise2,
+                   implementation=implementation)
+    st = init_state(cfg)
+    st = dataclasses.replace(
+        st, x_buf=st.x_buf.at[:n0].set(xs),
+        y_buf=st.y_buf.at[:n0].set(ys), n=jnp.asarray(n0, jnp.int32))
+    return refactor(st, matern52, implementation=implementation), xs, ys
+
+
+# ---------------------------------------------------------------------------
+# Posterior parity across substrates
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_posterior_matches_dense_per_implementation(implementation):
+    d = 3
+    key = jax.random.PRNGKey(7)
+    st, xs, ys = _seed_state(key, 6, d, n_max=16,
+                             implementation=implementation)
+    extra_x = jax.random.uniform(jax.random.fold_in(key, 1), (3, d),
+                                 minval=-2.0, maxval=2.0)
+    extra_y = jnp.cos(extra_x.sum(-1))
+    for i in range(3):
+        st = append(st, matern52, extra_x[i], extra_y[i],
+                    implementation=implementation)
+    xq = jax.random.uniform(jax.random.fold_in(key, 2), (5, d),
+                            minval=-2.0, maxval=2.0)
+    m1, v1 = posterior(st, matern52, xq, implementation=implementation)
+    all_x = jnp.concatenate([xs, extra_x])
+    all_y = jnp.concatenate([ys, extra_y])
+    m2, v2 = dense_posterior(all_x, all_y, xq, matern52, st.params)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=2e-3,
+                               atol=5e-4)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-2,
+                               atol=5e-4)
+
+
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_padded_trsv_per_implementation(implementation):
+    key = jax.random.PRNGKey(3)
+    n, n_max = 9, 16
+    a = jax.random.normal(key, (n, n))
+    k = a @ a.T / n + 2 * jnp.eye(n)
+    l = jnp.linalg.cholesky(k)
+    l_pad = chol.identity_pad_factor(l, n_max)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    b_pad = jnp.zeros(n_max).at[:n].set(b)
+    for trans in (False, True):
+        got = chol.padded_trsv(l_pad, b_pad, trans=trans,
+                               implementation=implementation)
+        want = jax.scipy.linalg.solve_triangular(
+            l, b, lower=True, trans=1 if trans else 0)
+        np.testing.assert_allclose(np.asarray(got[:n]), np.asarray(want),
+                                   rtol=5e-4, atol=5e-4)
+        assert np.allclose(np.asarray(got[n:]), 0.0)
+
+
+def test_masked_gram_matches_gram_plus_identity():
+    key = jax.random.PRNGKey(11)
+    n, n_max, d = 7, 12, 4
+    x = jax.random.uniform(key, (n, d))
+    params = KernelParams(sigma2=1.3, rho=0.6, noise2=1e-4)
+    x_buf = jnp.zeros((n_max, d)).at[:n].set(x)
+    got = ops.masked_gram(x_buf, jnp.asarray(n, jnp.int32), matern52, params)
+    want = chol.pad_gram(gram(matern52, x, params), n_max)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_acquisition_gradient_parity(implementation):
+    """The EI ascent differentiates through the substrate: grad must exist
+    for every implementation (Pallas via the custom VJPs) and agree."""
+    from repro.core.acquisition import AcqConfig, _acq_value, _f_best
+    key = jax.random.PRNGKey(9)
+    st, _, _ = _seed_state(key, 6, 2, n_max=8, implementation=implementation)
+    x = jnp.asarray([0.3, -0.4])
+    cfg = AcqConfig()
+    g = jax.grad(lambda q: _acq_value(st, matern52, q, _f_best(st), cfg,
+                                      implementation))(x)
+    g_ref = jax.grad(lambda q: _acq_value(st, matern52, q, _f_best(st), cfg,
+                                          "xla"))(x)
+    assert np.all(np.isfinite(np.asarray(g)))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_matern_gram_pallas_grad_matches_ref():
+    """Analytic Matérn VJP vs autodiff of the jnp oracle, all four inputs."""
+    from repro.kernels import ref
+    key = jax.random.PRNGKey(4)
+    x = jax.random.uniform(key, (128, 128), minval=-2.0, maxval=2.0)
+    y = jax.random.uniform(jax.random.fold_in(key, 1), (128, 128),
+                           minval=-2.0, maxval=2.0)
+    s2, rho = jnp.asarray(1.3), jnp.asarray(0.7)
+
+    def loss_pallas(x, y, s2, rho):
+        return jnp.sum(jnp.sin(ops.matern52_gram(
+            x, y, s2, rho, implementation="pallas")))
+
+    def loss_ref(x, y, s2, rho):
+        return jnp.sum(jnp.sin(ref.matern52_gram_ref(x, y, s2, rho)))
+
+    got = jax.grad(loss_pallas, argnums=(0, 1, 2, 3))(x, y, s2, rho)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x, y, s2, rho)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("trans", [False, True])
+def test_trsv_pallas_grad_matches_ref(trans):
+    from repro.kernels import ref
+    key = jax.random.PRNGKey(6)
+    n = 128
+    a = jax.random.normal(key, (n, n))
+    l = jnp.linalg.cholesky(a @ a.T / n + 2 * jnp.eye(n))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+
+    def loss(solver):
+        return lambda l, b: jnp.sum(
+            jnp.tanh(solver(l, b, trans=trans)))
+
+    got = jax.grad(loss(lambda l, b, trans: ops.trsv(
+        l, b, trans=trans, implementation="pallas")), argnums=(0, 1))(l, b)
+    want = jax.grad(loss(ref.trsv_ref), argnums=(0, 1))(l, b)
+    for a_, b_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_),
+                                   rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Fused append == unfused append, deferred batch == sequential
+# ---------------------------------------------------------------------------
+def test_fused_append_matches_refactor_alpha():
+    key = jax.random.PRNGKey(5)
+    st, _, _ = _seed_state(key, 5, 3, n_max=16)
+    x_new = jax.random.uniform(jax.random.fold_in(key, 1), (3,))
+    y_new = jnp.asarray(0.7)
+    lazy = append(st, matern52, x_new, y_new)
+    full = refactor(lazy, matern52)
+    np.testing.assert_allclose(np.asarray(lazy.l_buf),
+                               np.asarray(full.l_buf), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(lazy.alpha),
+                               np.asarray(full.alpha), rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("implementation", ["xla", "ref"])
+def test_deferred_alpha_batch_matches_sequential(implementation):
+    key = jax.random.PRNGKey(42)
+    st, _, _ = _seed_state(key, 5, 3, n_max=32,
+                           implementation=implementation)
+    xs = jax.random.uniform(jax.random.fold_in(key, 1), (4, 3))
+    ys = jnp.tanh(xs.sum(-1))
+    seq = st
+    for i in range(4):
+        seq = append(seq, matern52, xs[i], ys[i],
+                     implementation=implementation)
+    bat = append_batch(st, matern52, xs, ys, implementation=implementation)
+    assert int(bat.n) == int(seq.n) == 9
+    np.testing.assert_allclose(np.asarray(bat.l_buf), np.asarray(seq.l_buf),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(bat.alpha), np.asarray(seq.alpha),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(bat.x_buf), np.asarray(seq.x_buf))
+
+
+# ---------------------------------------------------------------------------
+# Conditioning telemetry (the d^2 clamp counter)
+# ---------------------------------------------------------------------------
+def test_clamp_counter_increments_on_degenerate_append():
+    key = jax.random.PRNGKey(1)
+    st, xs, _ = _seed_state(key, 4, 2, n_max=8, noise2=1e-12)
+    assert int(st.clamp_count) == 0
+    healthy = append(st, matern52, jnp.asarray([0.5, -0.5]), jnp.asarray(0.1))
+    assert int(healthy.clamp_count) == 0
+    # Duplicate an existing point with ~zero noise: d^2 -> 0 under float32.
+    degenerate = append(st, matern52, xs[0], jnp.asarray(0.1))
+    assert int(degenerate.clamp_count) == 1
+
+
+def test_scheduler_surfaces_clamp_count_in_ledger():
+    cfg = SchedulerConfig(n_max=8, seed=0, noise2=1e-12)
+    sched = TrialScheduler(RESNET_SPACE, cfg)
+    unit = np.full((RESNET_SPACE.dim,), 0.5, np.float32)
+    t1 = sched._make_trial(unit)
+    sched.absorb(t1, 0.3)
+    t2 = sched._make_trial(unit)   # exact duplicate: degenerate append
+    sched.absorb(t2, 0.3)
+    assert t1.clamp_count == 0
+    assert t2.clamp_count == 1
+    assert sched.history()[-1]["clamp_count"] == 1
+
+
+def test_bo_history_surfaces_clamp_counts():
+    from repro.core import levy_bounds, neg_levy, run_bo
+    obj = lambda x: np.asarray(neg_levy(jnp.asarray(x)))
+    lo, hi = levy_bounds(2)
+    _, hist = run_bo(obj, lo, hi, iterations=3, dim=2, n_max=16, n_seed=2,
+                     seed=0)
+    assert len(hist.clamp_counts) == 3
+    assert all(c == 0 for c in hist.clamp_counts)  # healthy run: no clamps
+
+
+# ---------------------------------------------------------------------------
+# Capacity guard
+# ---------------------------------------------------------------------------
+def test_ensure_capacity_raises_with_clear_message():
+    ensure_capacity(3, 4, 1)          # fits exactly: ok
+    with pytest.raises(GPCapacityError, match="n_max=4"):
+        ensure_capacity(4, 4, 1)
+    with pytest.raises(GPCapacityError, match="2 incoming"):
+        ensure_capacity(3, 4, 2)
+
+
+def test_bayesopt_step_raises_at_capacity():
+    from repro.core import levy_bounds, neg_levy
+    obj = lambda x: np.asarray(neg_levy(jnp.asarray(x)))
+    lo, hi = levy_bounds(2)
+    cfg = BOConfig(dim=2, n_max=3, seed=0)
+    bo = BayesOpt(cfg, lo, hi)
+    key = jax.random.PRNGKey(0)
+    x0 = np.asarray(lo) + (np.asarray(hi) - np.asarray(lo)) * \
+        np.asarray(jax.random.uniform(key, (3, 2)))
+    y0 = obj(x0)
+    state = bo.init(jnp.asarray(x0), jnp.asarray(y0, jnp.float32))
+    from repro.core.bayesopt import BOHistory
+    with pytest.raises(GPCapacityError):
+        bo.step(state, key, obj, BOHistory())
+
+
+def test_bayesopt_init_raises_when_seeds_exceed_capacity():
+    from repro.core import levy_bounds
+    lo, hi = levy_bounds(2)
+    bo = BayesOpt(BOConfig(dim=2, n_max=2, seed=0), lo, hi)
+    x0 = jnp.zeros((3, 2))
+    with pytest.raises(GPCapacityError):
+        bo.init(x0, jnp.zeros((3,)))
+
+
+def test_scheduler_absorb_raises_at_capacity():
+    cfg = SchedulerConfig(n_max=2, seed=0)
+    sched = TrialScheduler(RESNET_SPACE, cfg)
+    for i in range(2):
+        tr = sched._make_trial(
+            np.full((RESNET_SPACE.dim,), 0.2 + 0.3 * i, np.float32))
+        sched.absorb(tr, float(i))
+    tr = sched._make_trial(np.full((RESNET_SPACE.dim,), 0.9, np.float32))
+    with pytest.raises(GPCapacityError):
+        sched.absorb(tr, 2.0)
+    # the failed absorb must not have corrupted the factor
+    assert int(sched.state.n) == 2
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-knob validation
+# ---------------------------------------------------------------------------
+def test_invalid_implementation_rejected():
+    with pytest.raises(ValueError, match="implementation"):
+        GPConfig(implementation="cuda")
+    with pytest.raises(ValueError, match="implementation"):
+        gp_mod.GPConfig(n_max=8, dim=2, implementation="")
+
+
+def test_config_threading_reaches_gp_state():
+    cfg = BOConfig(dim=2, n_max=8, implementation="ref")
+    from repro.core import levy_bounds
+    lo, hi = levy_bounds(2)
+    bo = BayesOpt(cfg, lo, hi)
+    assert bo.gp_cfg.implementation == "ref"
+    scfg = SchedulerConfig(n_max=8, implementation="xla")
+    sched = TrialScheduler(RESNET_SPACE, scfg)
+    assert sched.cfg.implementation == "xla"
