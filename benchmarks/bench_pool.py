@@ -1,0 +1,159 @@
+"""Multi-tenant StudyPool benchmark: batched vs S-sequential suggest+absorb.
+
+The multi-tenant claim (DESIGN.md §7): one jitted, vmapped program advancing
+S posteriors beats S sequential single-study dispatches, because per-study
+device work is tiny (the paper's O(n^2) append) and dispatch overhead
+dominates.  This bench measures exactly that:
+
+  * **pool**       — one `StudyPool` over S studies: each round is ONE
+    `suggest_all` dispatch + ONE masked `absorb_many` dispatch.
+  * **sequential** — S one-study pools (the `TrialScheduler` degenerate
+    case, same engine code path): each round loops the S studies through
+    single suggest + routed absorb dispatches.
+
+Both sides run identical GP shapes, acquisition budgets, and substrate, and
+both are warmed up before timing.  Emits `name,us_per_call,derived` CSV rows
+for `benchmarks.run` and writes `BENCH_pool.json` with suggestions/sec,
+absorb latency, and the pool-vs-sequential speedup per S ∈ {1, 4, 16, 64}.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core.acquisition import AcqConfig
+from repro.hpo.pool import SchedulerConfig, StudyPool
+from repro.hpo.space import RESNET_SPACE
+
+JSON_PATH = "BENCH_pool.json"
+
+SIZES = (1, 4, 16, 64)
+
+
+def _objective(sid: int, unit: np.ndarray) -> float:
+    c = 0.2 + 0.6 * (sid % 7) / 7.0
+    return float(-np.sum((np.asarray(unit) - c) ** 2))
+
+
+def _cfg(n_max: int) -> SchedulerConfig:
+    # Small acquisition budget: the bench measures dispatch/batching
+    # overhead, not ascent quality.  Identical on both sides.
+    return SchedulerConfig(n_max=n_max, seed=0,
+                           acq=AcqConfig(restarts=16, ascent_steps=8))
+
+
+def _prefill(pool: StudyPool, n0: int, rng: np.random.Generator) -> None:
+    """Seed every study with n0 observations (untimed setup)."""
+    dim = pool.studies[0].space.dim
+    for _ in range(n0):
+        events = []
+        for s in range(pool.n_studies):
+            u = rng.uniform(size=dim).astype(np.float32)
+            events.append((s, pool._make_trial(s, u), _objective(s, u)))
+        pool.absorb_many(events)
+
+
+def _pool_rounds(pool: StudyPool, rounds: int) -> tuple[float, float]:
+    """Timed batched rounds; returns (suggest_s, absorb_s) totals."""
+    suggest_s = absorb_s = 0.0
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        suggestions = pool.suggest_all(t=1)
+        t1 = time.perf_counter()
+        events = [(s, trs[0], _objective(s, trs[0].unit))
+                  for s, trs in suggestions.items()]
+        t2 = time.perf_counter()
+        pool.absorb_many(events)
+        t3 = time.perf_counter()
+        suggest_s += t1 - t0
+        absorb_s += t3 - t2
+    return suggest_s, absorb_s
+
+
+def _sequential_rounds(pools: list[StudyPool],
+                       rounds: int) -> tuple[float, float]:
+    """Timed S-sequential rounds over one-study pools (same engine path)."""
+    suggest_s = absorb_s = 0.0
+    for _ in range(rounds):
+        trials = []
+        t0 = time.perf_counter()
+        for sid, p in enumerate(pools):
+            trials.append(p.suggest(0, 1)[0])
+        t1 = time.perf_counter()
+        values = [_objective(sid, tr.unit)
+                  for sid, tr in enumerate(trials)]
+        t2 = time.perf_counter()
+        for p, tr, val in zip(pools, trials, values):
+            p.absorb(0, tr, val)
+        t3 = time.perf_counter()
+        suggest_s += t1 - t0
+        absorb_s += t3 - t2
+    return suggest_s, absorb_s
+
+
+def _bench_size(s: int, *, n_max: int, n0: int, rounds: int) -> dict:
+    rng = np.random.default_rng(0)
+    pool = StudyPool([RESNET_SPACE] * s, _cfg(n_max))
+    _prefill(pool, n0, rng)
+    _pool_rounds(pool, 1)                                   # warm-up/compile
+    pool_suggest, pool_absorb = _pool_rounds(pool, rounds)
+
+    rng = np.random.default_rng(0)
+    seq = [StudyPool([RESNET_SPACE], _cfg(n_max)) for _ in range(s)]
+    for _ in range(n0):
+        for sid, p in enumerate(seq):
+            u = rng.uniform(size=RESNET_SPACE.dim).astype(np.float32)
+            p.absorb(0, p._make_trial(0, u), _objective(sid, u))
+    _sequential_rounds(seq, 1)                              # warm-up/compile
+    seq_suggest, seq_absorb = _sequential_rounds(seq, rounds)
+
+    ops = s * rounds
+    pool_total = pool_suggest + pool_absorb
+    seq_total = seq_suggest + seq_absorb
+    return {
+        "n_studies": s,
+        "n_max": n_max,
+        "n0": n0,
+        "rounds": rounds,
+        "pool_suggestions_per_sec": ops / pool_suggest,
+        "seq_suggestions_per_sec": ops / seq_suggest,
+        "pool_absorb_latency_us": 1e6 * pool_absorb / ops,
+        "seq_absorb_latency_us": 1e6 * seq_absorb / ops,
+        "pool_round_us": 1e6 * pool_total / rounds,
+        "seq_round_us": 1e6 * seq_total / rounds,
+        "speedup": seq_total / pool_total,
+    }
+
+
+def run(full: bool = False, json_path: str = JSON_PATH):
+    n_max = 256 if full else 128
+    n0 = 12 if full else 8
+    rounds = 8 if full else 5
+    records, out = [], []
+    for s in SIZES:
+        rec = _bench_size(s, n_max=n_max, n0=n0, rounds=rounds)
+        records.append(rec)
+        out.append(
+            f"pool_S{s},{rec['pool_round_us']:.0f},"
+            f"seq_round_us={rec['seq_round_us']:.0f} "
+            f"suggest_per_s={rec['pool_suggestions_per_sec']:.1f} "
+            f"absorb_us={rec['pool_absorb_latency_us']:.0f} "
+            f"speedup={rec['speedup']:.2f}x")
+    import jax
+    payload = {
+        "backend": jax.default_backend(),
+        "n_max": n_max,
+        "n0": n0,
+        "rounds": rounds,
+        "results": records,
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    out.append(f"pool_json,,path={json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   * bench_parallel — Tab. 4 (top-t parallel suggestions)
   * bench_substrate — one BO step per (mode x linalg implementation),
                       emits BENCH_substrate.json
+  * bench_pool     — multi-tenant StudyPool vs S sequential schedulers,
+                      emits BENCH_pool.json
 
 `python -m benchmarks.run [--full] [--only NAME]`.  The roofline analysis
 (§Roofline) is separate: `python -m benchmarks.roofline results/*.jsonl`
@@ -29,7 +31,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_cholesky, bench_lag, bench_levy,
-                            bench_nn_hpo, bench_parallel, bench_substrate)
+                            bench_nn_hpo, bench_parallel, bench_pool,
+                            bench_substrate)
     suites = {
         "cholesky": lambda: bench_cholesky.run(full=args.full),
         "levy": lambda: bench_levy.run(full=args.full),
@@ -37,6 +40,7 @@ def main() -> None:
         "nn_hpo": lambda: bench_nn_hpo.run(full=args.full),
         "parallel": lambda: bench_parallel.run(full=args.full),
         "substrate": lambda: bench_substrate.run(full=args.full),
+        "pool": lambda: bench_pool.run(full=args.full),
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -14,8 +14,10 @@ from repro.core.cholesky import (cholesky_naive, cholesky_xla, lazy_append_row,
                                  lazy_full_refactor, padded_trsv)
 from repro.core.gp import (GPCapacityError, GPConfig, LazyGPState, append,
                            append_batch, dense_posterior, ensure_capacity,
-                           init_state, log_marginal_likelihood, maybe_refit,
-                           posterior, refactor, refit_params)
+                           init_pool_state, init_state,
+                           log_marginal_likelihood, maybe_refit, posterior,
+                           refactor, refit_params, stack_states,
+                           unstack_state)
 from repro.core.kernels import KERNELS, KernelParams, gram, matern32, matern52, rbf
 from repro.core.levy import levy, levy_1d, levy_bounds, neg_levy
 
@@ -25,8 +27,9 @@ __all__ = [
     "KernelParams", "LazyGPState", "append", "append_batch", "cholesky_naive",
     "cholesky_xla", "dense_posterior", "ensure_capacity",
     "expected_improvement", "gram",
-    "init_state", "lazy_append_row", "lazy_full_refactor",
+    "init_pool_state", "init_state", "lazy_append_row", "lazy_full_refactor",
     "log_marginal_likelihood", "matern32", "matern52", "maybe_refit",
     "optimize_acquisition", "padded_trsv", "posterior", "rbf", "refactor",
-    "refit_params", "run_bo", "levy", "levy_1d", "levy_bounds", "neg_levy",
+    "refit_params", "run_bo", "stack_states", "unstack_state",
+    "levy", "levy_1d", "levy_bounds", "neg_levy",
 ]

@@ -95,7 +95,24 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
     top_t = 1 is standard sequential BO; top_t = t implements the paper's
     parallel suggestion of the t best distinct local maxima.  `implementation`
     selects the linalg substrate for the posterior solves inside the ascent.
+
+    Batched (DESIGN.md §7): a stacked state (leading study axis S) returns
+    `((S, top_t, d), (S, top_t))` — one vmapped dispatch suggests for every
+    study at once.  `key` may be a single key (split per study) or `(S,)`
+    stacked keys; `lo`/`hi` may be shared `(d,)` or per-study `(S, d)`.
     """
+    if state.is_batched:
+        n_studies = state.x_buf.shape[0]
+        keys = key if key.ndim == 2 else jax.random.split(key, n_studies)
+        lo = jnp.asarray(lo)
+        hi = jnp.asarray(hi)
+        return jax.vmap(
+            lambda st, k, l, h: optimize_acquisition(
+                st, kernel, l, h, k, cfg, top_t,
+                implementation=implementation),
+            in_axes=(0, 0,
+                     0 if lo.ndim == 2 else None,
+                     0 if hi.ndim == 2 else None))(state, keys, lo, hi)
     d = state.dim
     f_best = _f_best(state)
     width = hi - lo

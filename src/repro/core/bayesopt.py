@@ -41,6 +41,10 @@ class BOConfig:
     kernel: str = "matern52"
     mode: str = "lazy"            # "lazy" | "naive"
     lag: int = 0                  # lazy mode: full refit every `lag` appends
+    inv_refresh: int = 128        # fully-lazy mode (lag=0): rebuild factor +
+    # maintained inverse from the Gram every `inv_refresh` appends, under the
+    # current params — re-anchors incremental li_buf float32 drift (0 = never;
+    # lag > 0 supersedes it, matching StudyEngine; DESIGN.md §4)
     batch_size: int = 1           # t parallel suggestions (paper Sec. 3.4)
     noise2: float = 1e-6
     rho0: float = 0.25            # initial length scale (unit box); paper: 1.0
@@ -96,6 +100,7 @@ class BayesOpt:
                                 static_argnames=("top_t",))
         self._append_batch = jax.jit(self._append_batch_impl)
         self._refit = jax.jit(self._refit_impl)
+        self._reanchor = jax.jit(self._reanchor_impl)
 
     def _to_unit(self, x: Array) -> Array:
         return (x - self.lo) / (self.hi - self.lo)
@@ -119,6 +124,11 @@ class BayesOpt:
         params = gp_mod.refit_params(
             state, self.kernel, implementation=self.cfg.implementation)
         return gp_mod.refactor(state, self.kernel, params,
+                               implementation=self.cfg.implementation)
+
+    def _reanchor_impl(self, state):
+        # Params-preserving refactor: rebuild L and L^{-1} from the Gram.
+        return gp_mod.refactor(state, self.kernel,
                                implementation=self.cfg.implementation)
 
     # -- public API ---------------------------------------------------------
@@ -165,6 +175,12 @@ class BayesOpt:
             # Host-side lag check avoids tracing the refit when not due.
             if int(state.since_refit) >= self.cfg.lag:
                 state = self._refit(state)
+        elif self.cfg.inv_refresh > 0 and \
+                int(state.since_refit) >= self.cfg.inv_refresh:
+            # Fully-lazy drift guard: the maintained inverse factor li_buf
+            # accumulates bordered-update rounding; re-anchor it from the
+            # Gram without touching the kernel params.
+            state = self._reanchor(state)
         state = jax.block_until_ready(state)
         t3 = time.perf_counter()
 

@@ -103,14 +103,19 @@ def lazy_append_row(l_buf: Array, p_pad: Array, c: Array, n: Array,
     Returns (new l_buf, d) where d is the new diagonal entry.
 
     The paper's lemma (Sylvester inertia) guarantees c - q^T q > 0 in exact
-    arithmetic for PD K_{n+1}; float32 can undershoot so the substrate clamps
-    at `ops.CLAMP_EPS` — use `ops.padded_append_row` directly to observe the
-    clamp flag (the GP state machine counts it, DESIGN.md §6).
+    arithmetic for PD K_{n+1}; float32 can undershoot so the clamp floor is
+    `ops.CLAMP_EPS` (the GP state machine counts hits, DESIGN.md §6).
+
+    This is the *literal* solve-based Alg. 3 (q = L^{-1} p via triangular
+    substitution) kept as the benchmark baseline; the production state
+    machine appends through `ops.padded_append_row`/`ops.lazy_append`, which
+    compute the same q as a matvec against the maintained inverse factor
+    (DESIGN.md §4/§7).
     """
     assert n_max == l_buf.shape[0], (n_max, l_buf.shape)
-    l_new, d, _ = ops.padded_append_row(l_buf, p_pad, c, n,
-                                        implementation=implementation)
-    return l_new, d
+    q = ops.padded_trsv(l_buf, p_pad, implementation=implementation)
+    d = jnp.sqrt(jnp.maximum(c - q @ q, ops.CLAMP_EPS))
+    return ops.write_append_row(l_buf, q, d, n), d
 
 
 def lazy_append_block(l_buf: Array, p_block: Array, c_block: Array,

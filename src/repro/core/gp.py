@@ -9,13 +9,20 @@ Everything here is shape-static and jit-able; the BO loop compiles once.
 All linear algebra dispatches through the substrate (`repro.kernels.ops`) via
 the `implementation` knob ("auto" | "pallas" | "xla" | "ref", DESIGN.md §5);
 this module owns the padded-state policy only.
+
+**Batched study axis** (DESIGN.md §7): every transition here is
+rank-polymorphic.  A `LazyGPState` whose buffers carry a leading study axis
+— `x_buf (S, n_max, d)`, `n (S,)` int32, params leaves `(S,)` — represents S
+independent studies with *per-study* heterogeneous active counts, lag
+counters, and clamp telemetry; `append`/`append_batch`/`posterior`/
+`refactor`/`refit_params` detect the extra axis and vmap the single-study
+path, so one jitted program advances all S posteriors at once.  A single
+study is the S=1 degenerate case.  Build stacked states with
+`init_pool_state`/`stack_states`; slice views with `unstack_state`.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
@@ -46,11 +53,19 @@ def ensure_capacity(n: int, n_max: int, incoming: int = 1) -> None:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class LazyGPState:
-    """Padded, fixed-shape GP state (see DESIGN.md §4)."""
+    """Padded, fixed-shape GP state (see DESIGN.md §4).
+
+    May carry a leading study axis (DESIGN.md §7): all buffer shapes below
+    gain a leading S and the scalars become (S,) vectors.  `is_batched`
+    distinguishes the two ranks.
+    """
 
     x_buf: Array        # (n_max, d) observed points
     y_buf: Array        # (n_max,) observations
     l_buf: Array        # (n_max, n_max) identity-padded factor of K + noise I
+    li_buf: Array       # (n_max, n_max) identity-padded inverse factor L^{-1},
+    # maintained incrementally by the bordered-inverse append (DESIGN.md §4)
+    # so every posterior/append is matmul-only (batchable, MXU-friendly)
     alpha: Array        # (n_max,) (K + noise I)^{-1} (y - mean), zero-padded
     n: Array            # () int32 active count
     since_refit: Array  # () int32 appends since last full refactor
@@ -58,12 +73,20 @@ class LazyGPState:
     params: KernelParams
 
     @property
+    def is_batched(self) -> bool:
+        return self.x_buf.ndim == 3
+
+    @property
+    def n_studies(self) -> int:
+        return self.x_buf.shape[0] if self.is_batched else 1
+
+    @property
     def n_max(self) -> int:
-        return self.x_buf.shape[0]
+        return self.x_buf.shape[-2]
 
     @property
     def dim(self) -> int:
-        return self.x_buf.shape[1]
+        return self.x_buf.shape[-1]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +117,7 @@ def init_state(cfg: GPConfig, params: KernelParams | None = None) -> LazyGPState
         x_buf=jnp.zeros((cfg.n_max, cfg.dim), cfg.dtype),
         y_buf=jnp.zeros((cfg.n_max,), cfg.dtype),
         l_buf=jnp.eye(cfg.n_max, dtype=cfg.dtype),
+        li_buf=jnp.eye(cfg.n_max, dtype=cfg.dtype),
         alpha=jnp.zeros((cfg.n_max,), cfg.dtype),
         n=jnp.asarray(0, jnp.int32),
         since_refit=jnp.asarray(0, jnp.int32),
@@ -101,6 +125,40 @@ def init_state(cfg: GPConfig, params: KernelParams | None = None) -> LazyGPState
         params=KernelParams(*[jnp.asarray(v, cfg.dtype)
                               for v in (params.sigma2, params.rho, params.noise2)]),
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched study axis (DESIGN.md §7): stacked-state constructors and views.
+# ---------------------------------------------------------------------------
+
+def init_pool_state(cfg: GPConfig, n_studies: int,
+                    params: KernelParams | None = None) -> LazyGPState:
+    """Stacked state for `n_studies` independent studies (leading S axis).
+
+    Every study starts empty with identical kernel params; per-study params
+    diverge at lag events (`refit_params` on the stacked state returns
+    `(S,)`-leaved params).
+    """
+    if n_studies < 1:
+        raise ValueError(f"n_studies must be >= 1, got {n_studies}")
+    st = init_state(cfg, params)
+    return jax.tree.map(
+        lambda a: jnp.repeat(a[None], n_studies, axis=0), st)
+
+
+def stack_states(states: "list[LazyGPState]") -> LazyGPState:
+    """Stack single-study states into one batched state (shared n_max/dim)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_state(state: LazyGPState, study: int) -> LazyGPState:
+    """Single-study view of a stacked state (static index)."""
+    return jax.tree.map(lambda a: a[study], state)
+
+
+def _vmap_states(fn, state: LazyGPState, *batched_args):
+    """Apply the single-study transition `fn` across the study axis."""
+    return jax.vmap(fn)(state, *batched_args)
 
 
 def _active_mask(state: LazyGPState) -> Array:
@@ -116,11 +174,15 @@ def _ymean(state: LazyGPState) -> Array:
 
 def _recompute_alpha(state: LazyGPState,
                      implementation: str = "auto") -> Array:
-    """alpha = (K + noise I)^{-1} (y - mean) via two padded triangular solves."""
+    """alpha = (K + noise I)^{-1} (y - mean) = L^{-T} (L^{-1} r).
+
+    Two matvecs against the maintained inverse factor (padding-exact: rows
+    >= n of `li_buf` are identity against a zero-padded residual).
+    """
+    del implementation  # matmul-only against the maintained inverse
     resid = jnp.where(_active_mask(state), state.y_buf - _ymean(state), 0.0)
-    z = chol.padded_trsv(state.l_buf, resid, implementation=implementation)
-    return chol.padded_trsv(state.l_buf, z, trans=True,
-                            implementation=implementation)
+    z = state.li_buf @ resid
+    return jnp.where(_active_mask(state), z @ state.li_buf, 0.0)
 
 
 def _cov_column(state: LazyGPState, kernel: KernelFn, x_new: Array,
@@ -141,12 +203,13 @@ def _append_row_only(state: LazyGPState, kernel: KernelFn, x_new: Array,
     for posterior queries; `append_batch` does so once per batch.
     """
     p_pad, c = _cov_column(state, kernel, x_new, implementation)
-    l_buf, _, clamped = ops.padded_append_row(
-        state.l_buf, p_pad, c, state.n, implementation=implementation)
+    l_buf, li_buf, _, clamped = ops.padded_append_row(
+        state.l_buf, state.li_buf, p_pad, c, state.n,
+        implementation=implementation)
     x_buf = jax.lax.dynamic_update_slice(state.x_buf, x_new[None, :], (state.n, 0))
     y_buf = jax.lax.dynamic_update_slice(state.y_buf, y_new[None], (state.n,))
     return dataclasses.replace(
-        state, x_buf=x_buf, y_buf=y_buf, l_buf=l_buf,
+        state, x_buf=x_buf, y_buf=y_buf, l_buf=l_buf, li_buf=li_buf,
         n=state.n + 1, since_refit=state.since_refit + 1,
         clamp_count=state.clamp_count + clamped)
 
@@ -158,7 +221,15 @@ def append(state: LazyGPState, kernel: KernelFn, x_new: Array,
     Traced-shape safe: can run under jit with n as a traced value.  Uses the
     substrate's fused append — the row solve and the alpha refresh share one
     factor residency (two passes instead of three independent solves).
+
+    Batched: stacked state + `x_new (S, d)`, `y_new (S,)` appends one row to
+    every study in one dispatch (per-study heterogeneous n).
     """
+    if state.is_batched:
+        return _vmap_states(
+            lambda st, x, y: append(st, kernel, x, y,
+                                    implementation=implementation),
+            state, x_new, y_new)
     n_max = state.n_max
     p_pad, c = _cov_column(state, kernel, x_new, implementation)
     x_buf = jax.lax.dynamic_update_slice(state.x_buf, x_new[None, :], (state.n, 0))
@@ -167,11 +238,12 @@ def append(state: LazyGPState, kernel: KernelFn, x_new: Array,
     mask_new = jnp.arange(n_max) < n_new
     ymean = jnp.sum(jnp.where(mask_new, y_buf, 0.0)) / jnp.maximum(n_new, 1)
     resid = jnp.where(mask_new, y_buf - ymean, 0.0)
-    l_buf, alpha, _, clamped = ops.lazy_append(
-        state.l_buf, p_pad, c, resid, state.n, implementation=implementation)
+    l_buf, li_buf, alpha, _, clamped = ops.lazy_append(
+        state.l_buf, state.li_buf, p_pad, c, resid, state.n,
+        implementation=implementation)
     return dataclasses.replace(
-        state, x_buf=x_buf, y_buf=y_buf, l_buf=l_buf, alpha=alpha,
-        n=n_new, since_refit=state.since_refit + 1,
+        state, x_buf=x_buf, y_buf=y_buf, l_buf=l_buf, li_buf=li_buf,
+        alpha=alpha, n=n_new, since_refit=state.since_refit + 1,
         clamp_count=state.clamp_count + clamped)
 
 
@@ -189,7 +261,16 @@ def append_batch(state: LazyGPState, kernel: KernelFn, xs: Array,
     to t sequential `append` calls: alpha depends only on the final factor
     and residual, though the fused sequential path accumulates rounding
     differently than the final two-solve refresh.
+
+    Batched: stacked state + `xs (S, t, d)`, `ys (S, t)` absorbs t rows per
+    study in one dispatch.
     """
+    if state.is_batched:
+        return _vmap_states(
+            lambda st, x, y: append_batch(st, kernel, x, y,
+                                          implementation=implementation),
+            state, xs, ys)
+
     def body(i, st):
         return _append_row_only(st, kernel, xs[i], ys[i], implementation)
 
@@ -204,13 +285,22 @@ def posterior(state: LazyGPState, kernel: KernelFn, x_star: Array,
 
     mean = k_*^T alpha + ymean ; var = k_** - v^T v with v = L^{-1} k_*
     (paper Alg. 1 lines 3-6), on padded buffers.
+
+    Batched: stacked state + `x_star (S, m, d)` returns `(S, m)` mean/var.
     """
+    if state.is_batched:
+        return _vmap_states(
+            lambda st, xq: posterior(st, kernel, xq,
+                                     implementation=implementation),
+            state, x_star)
     k_star = ops.kernel_gram(kernel, state.x_buf, x_star, state.params,
                              implementation=implementation)   # (n_max, m)
     k_star = jnp.where(_active_mask(state)[:, None], k_star, 0.0)
     mean = k_star.T @ state.alpha + _ymean(state)
-    v = chol.padded_trsv(state.l_buf, k_star,
-                         implementation=implementation)       # (n_max, m)
+    # v = L^{-1} k_* as a matmul against the maintained inverse (exact on
+    # the padded buffers: k_* is zero beyond n).  Matmul-only keeps the EI
+    # ascent batchable over the study axis (DESIGN.md §7).
+    v = state.li_buf @ k_star                                 # (n_max, m)
     k_ss = kernel(x_star, x_star, state.params)
     var = jnp.maximum(jnp.diag(k_ss) - jnp.sum(v * v, axis=0), 1e-12)
     return mean, var
@@ -220,8 +310,10 @@ def log_marginal_likelihood(state: LazyGPState) -> Array:
     """log p(y | X) = -1/2 y^T alpha - sum log L_ii - n/2 log 2pi (Alg. 1 l.7).
 
     Identity padding contributes log(1) = 0 to the diagonal sum, so the padded
-    computation is exact.
+    computation is exact.  Batched: returns `(S,)` per-study LMLs.
     """
+    if state.is_batched:
+        return _vmap_states(log_marginal_likelihood, state)
     m = _active_mask(state)
     resid = jnp.where(m, state.y_buf - _ymean(state), 0.0)
     quad = resid @ state.alpha
@@ -240,14 +332,30 @@ def refactor(state: LazyGPState, kernel: KernelFn,
 
     Routed through the substrate's blocked factorization on the identity-
     padded Gram buffer.
+
+    Batched: refactors every study in one dispatch; `params`, if given, must
+    carry `(S,)` leaves (per-study hyper-parameters).
     """
+    if state.is_batched:
+        if params is None:
+            return _vmap_states(
+                lambda st: refactor(st, kernel,
+                                    implementation=implementation), state)
+        return _vmap_states(
+            lambda st, p: refactor(st, kernel, p,
+                                   implementation=implementation),
+            state, params)
     params = params or state.params
     st = dataclasses.replace(state, params=params)
     k_pad = ops.masked_gram(st.x_buf, st.n, kernel, params,
                             implementation=implementation)
     l_buf = chol.lazy_full_refactor(k_pad, st.n, n_max=st.n_max,
                                     implementation=implementation)
-    st = dataclasses.replace(st, l_buf=l_buf, since_refit=jnp.asarray(0, jnp.int32))
+    # Rebuild the maintained inverse from scratch (the one place a
+    # triangular solve runs; lag-amortized like the factorization itself).
+    li_buf = ops.padded_tri_inverse(l_buf, implementation=implementation)
+    st = dataclasses.replace(st, l_buf=l_buf, li_buf=li_buf,
+                             since_refit=jnp.asarray(0, jnp.int32))
     return dataclasses.replace(
         st, alpha=_recompute_alpha(st, implementation))
 
@@ -267,7 +375,13 @@ def refit_params(state: LazyGPState, kernel: KernelFn,
 
     The paper refits "at reasonable intervals"; a coarse grid is robust, jits
     to a fixed program, and costs l-amortized O(G n^3).
+
+    Batched: returns per-study `KernelParams` with `(S,)` leaves.
     """
+    if state.is_batched:
+        return _vmap_states(
+            lambda st: refit_params(st, kernel, rho_grid, sigma2_grid,
+                                    implementation=implementation), state)
     if rho_grid is None:
         # Unit-box length scales (inputs are normalized by the BO driver).
         rho_grid = jnp.asarray([0.05, 0.1, 0.2, 0.4, 0.8, 1.6],

@@ -1,0 +1,13 @@
+"""HPO orchestration: search spaces, the single-study scheduler, and the
+multi-tenant StudyPool — all sharing one batched suggest/absorb engine
+(DESIGN.md §7)."""
+from repro.hpo.engine import StudyEngine
+from repro.hpo.pool import SchedulerConfig, StudyPool, Trial
+from repro.hpo.scheduler import TrialScheduler
+from repro.hpo.space import (LENET_SPACE, LM_SPACE, RESNET_SPACE, Dim,
+                             SearchSpace)
+
+__all__ = [
+    "Dim", "LENET_SPACE", "LM_SPACE", "RESNET_SPACE", "SchedulerConfig",
+    "SearchSpace", "StudyEngine", "StudyPool", "Trial", "TrialScheduler",
+]

@@ -1,0 +1,193 @@
+"""The batched GP suggest/absorb engine shared by every HPO orchestrator.
+
+`StudyEngine` owns ONE stacked `LazyGPState` with a leading study axis
+(DESIGN.md §7) and the jitted closures that advance it.  It is the single
+suggest/absorb compute path: `TrialScheduler` drives it with S = 1 (the
+degenerate case) and `StudyPool` multiplexes S concurrent studies over the
+same closures — there is no separate single-study math anywhere above the
+policy layer.
+
+Dispatch shapes (all jitted once per configuration):
+
+  * `suggest_all`    — vmapped acquisition over every study: one program
+    advances S EI optimizations at once (the multi-tenant hot path).
+  * `suggest_at`     — dynamic-index one study out of the stack, run the
+    single-study acquisition (used for routed, per-study requests; `i` is
+    traced, so any study id hits the same compilation).
+  * `append_at`      — completion-order absorb routed to the owning study:
+    extract study i, fused O(n_max^2) lazy append, scatter back.
+  * `append_masked`  — one vmapped dispatch absorbing at most one new
+    observation per study (flagged), for draining a completion queue in
+    rounds instead of S sequential dispatches.
+  * `refit_at`       — lag-event hyper-parameter refit + refactor of a
+    single study (rare, O(G n^3); per-study lag counters decide when).
+
+Host-side per-study telemetry (`n`, `since_refit`, `clamp_count`) reads
+slice straight out of the stacked scalars.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import acquisition as acq_mod
+from repro.core import gp as gp_mod
+from repro.core.kernels import KERNELS
+
+Array = jax.Array
+
+
+def _index_state(state: gp_mod.LazyGPState, i: Array) -> gp_mod.LazyGPState:
+    """Single-study view at a *traced* index (dynamic gather per leaf)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False), state)
+
+
+def _write_state(state: gp_mod.LazyGPState, i: Array,
+                 sub: gp_mod.LazyGPState) -> gp_mod.LazyGPState:
+    """Scatter a single-study state back into the stack at a traced index."""
+    return jax.tree.map(
+        lambda a, v: jax.lax.dynamic_update_index_in_dim(a, v, i, axis=0),
+        state, sub)
+
+
+class StudyEngine:
+    """Stacked lazy-GP state + the jitted batched suggest/absorb closures.
+
+    `cfg` is duck-typed (SchedulerConfig works): needs n_max, kernel, lag,
+    rho0, noise2, implementation, acq.
+    """
+
+    def __init__(self, dim: int, cfg, n_studies: int):
+        if n_studies < 1:
+            raise ValueError(f"n_studies must be >= 1, got {n_studies}")
+        self.cfg = cfg
+        self.n_studies = n_studies
+        self.kernel = KERNELS[cfg.kernel]
+        self.gp_cfg = gp_mod.GPConfig(
+            n_max=cfg.n_max, dim=dim, kernel=cfg.kernel, lag=cfg.lag,
+            noise2=cfg.noise2, rho0=cfg.rho0,
+            implementation=cfg.implementation)
+        self.state = gp_mod.init_pool_state(self.gp_cfg, n_studies)
+        self._lo = jnp.zeros((dim,))
+        self._hi = jnp.ones((dim,))
+        # The substrate knob is a Python constant inside the jitted closures:
+        # one compilation per configured implementation.
+        impl = cfg.implementation
+
+        def suggest_one(st, key, top_t):
+            return acq_mod.optimize_acquisition(
+                st, self.kernel, self._lo, self._hi, key, cfg.acq, top_t,
+                implementation=impl)
+
+        def append_one(st, x, y):
+            return gp_mod.append(st, self.kernel, x, y, implementation=impl)
+
+        def masked_append_one(st, x, y, flag):
+            new = append_one(st, x, y)
+            return jax.tree.map(lambda o, n_: jnp.where(flag, n_, o), st, new)
+
+        def refit_one(st):
+            params = gp_mod.refit_params(st, self.kernel,
+                                         implementation=impl)
+            return gp_mod.refactor(st, self.kernel, params,
+                                   implementation=impl)
+
+        def reanchor_one(st):
+            # Fully-lazy drift guard: rebuild factor + maintained inverse
+            # from the Gram under the CURRENT params (no grid refit).
+            return gp_mod.refactor(st, self.kernel, implementation=impl)
+
+        self._suggest_all = jax.jit(
+            lambda state, keys, *, top_t: jax.vmap(
+                lambda st, k: suggest_one(st, k, top_t))(state, keys),
+            static_argnames=("top_t",))
+        self._suggest_at = jax.jit(
+            lambda state, i, key, *, top_t: suggest_one(
+                _index_state(state, i), key, top_t),
+            static_argnames=("top_t",))
+        self._append_at = jax.jit(
+            lambda state, i, x, y: _write_state(
+                state, i, append_one(_index_state(state, i), x, y)))
+        self._append_masked = jax.jit(jax.vmap(masked_append_one))
+        self._refit_at = jax.jit(
+            lambda state, i: _write_state(
+                state, i, refit_one(_index_state(state, i))))
+        self._reanchor_at = jax.jit(
+            lambda state, i: _write_state(
+                state, i, reanchor_one(_index_state(state, i))))
+
+    # -- per-study telemetry (host-side) ------------------------------------
+    def n(self, study: int) -> int:
+        return int(self.state.n[study])
+
+    def since_refit(self, study: int) -> int:
+        return int(self.state.since_refit[study])
+
+    def clamp_count(self, study: int) -> int:
+        return int(self.state.clamp_count[study])
+
+    def study_state(self, study: int) -> gp_mod.LazyGPState:
+        """Unstacked single-study view (static index)."""
+        return gp_mod.unstack_state(self.state, study)
+
+    # -- suggest ------------------------------------------------------------
+    def suggest(self, study: int, key: Array,
+                top_t: int = 1) -> tuple[Array, Array]:
+        """Top-t EI local maxima for one study: ((top_t, d), (top_t,))."""
+        return self._suggest_at(self.state, jnp.asarray(study, jnp.int32),
+                                key, top_t=top_t)
+
+    def suggest_all(self, keys: Array, top_t: int = 1) -> tuple[Array, Array]:
+        """Batched suggestion for every study: ((S, top_t, d), (S, top_t))."""
+        return self._suggest_all(self.state, keys, top_t=top_t)
+
+    # -- absorb -------------------------------------------------------------
+    def absorb(self, study: int, x, y) -> None:
+        """Routed completion-order absorb (+ per-study lag policy)."""
+        gp_mod.ensure_capacity(self.n(study), self.cfg.n_max)
+        self.state = self._append_at(
+            self.state, jnp.asarray(study, jnp.int32),
+            jnp.asarray(x, self.state.x_buf.dtype),
+            jnp.asarray(y, self.state.y_buf.dtype))
+        self._maybe_refit(study)
+
+    def absorb_round(self, flags, xs, ys) -> None:
+        """Masked batched absorb: at most one new observation per study.
+
+        `flags (S,)` bool selects which studies actually append; `xs (S, d)`
+        / `ys (S,)` carry the observations (ignored where flag is False).
+        One dispatch replaces up to S routed appends.
+        """
+        for s in range(self.n_studies):
+            if bool(flags[s]):
+                gp_mod.ensure_capacity(self.n(s), self.cfg.n_max)
+        self.state = self._append_masked(
+            self.state,
+            jnp.asarray(xs, self.state.x_buf.dtype),
+            jnp.asarray(ys, self.state.y_buf.dtype),
+            jnp.asarray(flags, bool))
+        for s in range(self.n_studies):
+            if bool(flags[s]):
+                self._maybe_refit(s)
+
+    def _maybe_refit(self, study: int) -> None:
+        """Per-study lag policy (host-side check; both events are rare).
+
+        lag > 0: full hyper-parameter refit + refactor every `lag` appends.
+        lag <= 0 (the paper's fully-lazy mode): no param refit, but every
+        `inv_refresh` appends the factor and its maintained inverse are
+        rebuilt from the Gram under the current params — re-anchoring the
+        float32 drift the incremental bordered-inverse updates accumulate
+        (DESIGN.md §4).  `refactor` resets `since_refit`, so one counter
+        drives both cadences.
+        """
+        if self.cfg.lag > 0:
+            if self.since_refit(study) >= self.cfg.lag:
+                self.state = self._refit_at(self.state,
+                                            jnp.asarray(study, jnp.int32))
+            return
+        inv_refresh = getattr(self.cfg, "inv_refresh", 0)
+        if inv_refresh > 0 and self.since_refit(study) >= inv_refresh:
+            self.state = self._reanchor_at(self.state,
+                                           jnp.asarray(study, jnp.int32))

@@ -1,0 +1,354 @@
+"""Multi-tenant StudyPool: S concurrent HPO studies on one accelerator.
+
+The paper's O(n^2) lazy append makes a *single* study cheap enough that the
+device idles between absorptions; the next scaling axis (ROADMAP: serve
+heavy traffic) is running **many concurrent studies**.  `StudyPool`
+multiplexes S studies over one `StudyEngine` (a stacked `LazyGPState`,
+DESIGN.md §7):
+
+  * **batched suggest** — `suggest_all` advances every study's EI
+    optimization in ONE jitted vmapped dispatch instead of S sequential
+    program launches (the multi-tenant throughput win, `bench_pool`).
+  * **completion-order absorb** — results are routed to the owning study as
+    they arrive (`absorb`), or drained in masked batched rounds
+    (`absorb_many`) of at most one observation per study per dispatch.
+  * **per-study everything** — trial ledgers, PRNG streams, capacity
+    guards, fault policy (retry / penalized pseudo-observation), lag
+    counters, and clamp telemetry are tracked per tenant; one study filling
+    up or crashing never corrupts a neighbor.
+  * **pool checkpointing** — the stacked GP state and every study's ledger
+    ride one atomic `checkpoint.store` snapshot; a restarted pool resumes
+    all S posteriors identically.
+
+`TrialScheduler` is the S = 1 degenerate case: it wraps a one-study pool,
+so the scheduler and the pool share exactly one suggest/absorb code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt_mod
+from repro.core import acquisition as acq_mod
+from repro.core import gp as gp_mod
+from repro.core.kernels import KernelParams
+from repro.hpo.engine import StudyEngine
+from repro.hpo.space import SearchSpace
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Shared study/pool configuration (one GP shape for every tenant)."""
+
+    n_max: int = 512
+    kernel: str = "matern52"
+    lag: int = 0                 # 0 = fully lazy (paper's main mode)
+    parallel: int = 1            # t (elastic; re-read each round)
+    rho0: float = 0.25
+    noise2: float = 1e-5
+    seed: int = 0
+    implementation: str = "auto"  # linalg substrate (auto|pallas|xla|ref)
+    failure_penalty: float | None = None  # None: drop; else pseudo-y
+    max_retries: int = 1
+    ckpt_dir: str | None = None
+    ckpt_every: int = 1          # absorptions between pool checkpoints; a
+    # many-tenant pool should raise this — every snapshot serializes the
+    # whole stacked state (2 S n_max^2 floats) plus all S ledgers
+    inv_refresh: int = 128       # fully-lazy mode (lag=0): rebuild the
+    # factor + maintained inverse from the Gram every `inv_refresh` appends
+    # per study, re-anchoring float32 drift without touching the kernel
+    # params (0 = never; lag > 0 supersedes it — see DESIGN.md §4)
+    acq: acq_mod.AcqConfig = dataclasses.field(
+        default_factory=lambda: acq_mod.AcqConfig(restarts=48,
+                                                  ascent_steps=20))
+
+
+@dataclasses.dataclass
+class Trial:
+    trial_id: int
+    unit: np.ndarray
+    hparams: dict
+    status: str = "pending"      # pending | running | done | failed
+    value: float | None = None
+    error: str | None = None
+    started: float = 0.0
+    finished: float = 0.0
+    retries: int = 0
+    clamp_count: int | None = None  # cumulative GP conditioning-floor hits
+    # at absorb time (ill-conditioning telemetry, DESIGN.md §6)
+
+
+@dataclasses.dataclass
+class StudyHandle:
+    """Host-side per-tenant record: ledger, id counter, PRNG streams."""
+
+    study_id: int
+    space: SearchSpace
+    name: str
+    trials: list[Trial] = dataclasses.field(default_factory=list)
+    next_id: int = 0
+    key: jax.Array | None = None
+    rng: np.random.Generator | None = None  # seed-trial stream; persistent
+    # so repeated seeding draws fresh points, never the same batch twice
+
+
+class StudyPool:
+    """S concurrent studies multiplexed over one batched lazy-GP engine.
+
+    All studies share the GP shape (`cfg.n_max`, `space.dim`) — the stacked
+    buffers are one rectangular block — but own independent posteriors,
+    ledgers, and fault state.  Spaces may differ per study as long as their
+    dimensionality matches.
+    """
+
+    def __init__(self, spaces: Sequence[SearchSpace], cfg: SchedulerConfig,
+                 names: Sequence[str] | None = None):
+        spaces = list(spaces)
+        if not spaces:
+            raise ValueError("StudyPool needs at least one study")
+        dims = {sp.dim for sp in spaces}
+        if len(dims) != 1:
+            raise ValueError(
+                f"all studies must share one dimensionality, got {dims} "
+                "(the stacked (S, n_max, d) buffers are rectangular)")
+        names = list(names) if names is not None else [
+            f"study{i}" for i in range(len(spaces))]
+        if len(names) != len(spaces):
+            raise ValueError("len(names) != len(spaces)")
+        self.cfg = cfg
+        self.engine = StudyEngine(spaces[0].dim, cfg, len(spaces))
+        self.studies = [
+            StudyHandle(i, sp, names[i],
+                        key=jax.random.PRNGKey(cfg.seed + i),
+                        rng=np.random.default_rng(cfg.seed + i))
+            for i, sp in enumerate(spaces)]
+        self._done_at_last_ckpt = 0
+        self._n_done = 0  # O(1) mirror of total_done() for the ckpt cadence
+
+    @property
+    def n_studies(self) -> int:
+        return len(self.studies)
+
+    # -- ledger -------------------------------------------------------------
+    def _make_trial(self, study_id: int, unit: np.ndarray) -> Trial:
+        h = self.studies[study_id]
+        tr = Trial(h.next_id, unit.astype(np.float32),
+                   h.space.to_hparams(unit))
+        h.next_id += 1
+        h.trials.append(tr)
+        return tr
+
+    def _split(self, study_id: int) -> jax.Array:
+        h = self.studies[study_id]
+        h.key, sub = jax.random.split(h.key)
+        return sub
+
+    def state(self, study_id: int) -> gp_mod.LazyGPState:
+        """Unstacked single-study GP view."""
+        return self.engine.study_state(study_id)
+
+    # -- suggest ------------------------------------------------------------
+    def seed_trials(self, study_id: int, n: int) -> list[Trial]:
+        h = self.studies[study_id]
+        return [self._make_trial(study_id, u)
+                for u in h.space.sample(h.rng, n)]
+
+    def suggest(self, study_id: int, t: int | None = None) -> list[Trial]:
+        """Top-t distinct EI local maxima from one study's posterior."""
+        t = t or self.cfg.parallel
+        if self.engine.n(study_id) == 0:
+            return self.seed_trials(study_id, t)
+        units, _ = self.engine.suggest(study_id, self._split(study_id),
+                                       top_t=t)
+        return [self._make_trial(study_id, np.asarray(u)) for u in units]
+
+    def suggest_all(self, t: int = 1,
+                    studies: Sequence[int] | None = None
+                    ) -> dict[int, list[Trial]]:
+        """Batched suggestion round: ONE vmapped dispatch for all studies.
+
+        Studies still empty of observations get random seed trials instead
+        (host-side); everyone else shares the single batched EI program.
+        Returns {study_id: [t trials]} for the requested studies (default
+        all).
+        """
+        ids = list(studies) if studies is not None else \
+            list(range(self.n_studies))
+        need_ei = {s for s in ids if self.engine.n(s) > 0}
+        units_all = None
+        if need_ei:
+            # Only the studies actually being suggested for advance their
+            # PRNG streams; the rest ride the batch with a dummy key (their
+            # lane computes alongside but the result is discarded).
+            dummy = jnp.zeros_like(jax.random.PRNGKey(0))
+            keys = jnp.stack([self._split(s) if s in need_ei else dummy
+                              for s in range(self.n_studies)])
+            units_all = np.asarray(
+                self.engine.suggest_all(keys, top_t=t)[0])
+        out: dict[int, list[Trial]] = {}
+        for s in ids:
+            if s in need_ei:
+                out[s] = [self._make_trial(s, u) for u in units_all[s]]
+            else:
+                out[s] = self.seed_trials(s, t)
+        return out
+
+    # -- absorb -------------------------------------------------------------
+    def absorb(self, study_id: int, trial: Trial, value: float) -> None:
+        """Completion-order absorb routed to the owning study."""
+        gp_mod.ensure_capacity(self.engine.n(study_id), self.cfg.n_max)
+        trial.status = "done"
+        trial.value = float(value)
+        trial.finished = time.time()
+        self.engine.absorb(study_id, jnp.asarray(trial.unit),
+                           jnp.asarray(value, jnp.float32))
+        trial.clamp_count = self.engine.clamp_count(study_id)
+        self._n_done += 1
+        self._maybe_checkpoint()
+
+    def absorb_many(self,
+                    events: Sequence[tuple[int, Trial, float]]) -> None:
+        """Drain a completion queue in masked batched rounds.
+
+        Events may arrive in any completion order and any per-study
+        multiplicity; each round takes at most one event per study and runs
+        ONE vmapped masked append, so k completions across S studies cost
+        ceil(max per-study count) dispatches instead of k.
+        """
+        queue = list(events)
+        dim = self.engine.gp_cfg.dim
+        # Capacity-check the WHOLE queue (per-study multiplicity included)
+        # BEFORE mutating any ledger: a GPCapacityError from one full study
+        # must not leave a neighbor's trial marked done without its
+        # observation absorbed, nor silently drop later-round events — the
+        # drain is all-or-nothing with respect to capacity.
+        counts: dict[int, int] = {}
+        for sid, _, _ in queue:
+            counts[sid] = counts.get(sid, 0) + 1
+        for sid, c in counts.items():
+            gp_mod.ensure_capacity(self.engine.n(sid), self.cfg.n_max,
+                                   incoming=c)
+        while queue:
+            round_events: dict[int, tuple[Trial, float]] = {}
+            rest = []
+            for sid, tr, val in queue:
+                if sid in round_events:
+                    rest.append((sid, tr, val))
+                else:
+                    round_events[sid] = (tr, val)
+            queue = rest
+            flags = np.zeros((self.n_studies,), bool)
+            xs = np.zeros((self.n_studies, dim), np.float32)
+            ys = np.zeros((self.n_studies,), np.float32)
+            for sid, (tr, val) in round_events.items():
+                flags[sid] = True
+                xs[sid] = tr.unit
+                ys[sid] = float(val)
+                tr.status = "done"
+                tr.value = float(val)
+                tr.finished = time.time()
+            self.engine.absorb_round(flags, xs, ys)
+            for sid, (tr, _) in round_events.items():
+                tr.clamp_count = self.engine.clamp_count(sid)
+            self._n_done += len(round_events)
+        self._maybe_checkpoint()
+
+    def record_failure(self, study_id: int, trial: Trial,
+                       error: str) -> Trial | None:
+        """Failed trial: retry (fresh suggestion) or penalize the region."""
+        trial.status = "failed"
+        trial.error = error
+        trial.finished = time.time()
+        if self.cfg.failure_penalty is not None:
+            # Pseudo-observation keeps EI away from a crashing region.
+            gp_mod.ensure_capacity(self.engine.n(study_id), self.cfg.n_max)
+            self.engine.absorb(study_id, jnp.asarray(trial.unit),
+                               jnp.asarray(self.cfg.failure_penalty,
+                                           jnp.float32))
+            trial.clamp_count = self.engine.clamp_count(study_id)
+        if trial.retries < self.cfg.max_retries:
+            nxt = self.suggest(study_id, 1)[0]
+            nxt.retries = trial.retries + 1
+            return nxt
+        return None
+
+    # -- inspection ---------------------------------------------------------
+    def best(self, study_id: int) -> Trial | None:
+        done = [t for t in self.studies[study_id].trials
+                if t.status == "done"]
+        return max(done, key=lambda t: t.value) if done else None
+
+    def history(self, study_id: int) -> list[dict]:
+        return [dataclasses.asdict(t) | {"unit": t.unit.tolist()}
+                for t in self.studies[study_id].trials]
+
+    def total_done(self) -> int:
+        return sum(t.status == "done"
+                   for h in self.studies for t in h.trials)
+
+    # -- checkpointing (the whole pool rides one atomic snapshot) -----------
+    def _maybe_checkpoint(self) -> None:
+        """Snapshot every `ckpt_every` absorptions (each snapshot serializes
+        the full stacked state + every ledger, so many-tenant pools batch)."""
+        if not self.cfg.ckpt_dir:
+            return
+        if self._n_done - self._done_at_last_ckpt >= max(1, self.cfg.ckpt_every):
+            self.checkpoint()
+
+    def checkpoint(self) -> str | None:
+        if not self.cfg.ckpt_dir:
+            return None
+        self._done_at_last_ckpt = self._n_done
+        meta = {
+            "n_studies": self.n_studies,
+            "studies": json.dumps([
+                {"study_id": h.study_id, "name": h.name,
+                 "next_id": h.next_id, "trials": self.history(h.study_id),
+                 # per-study PRNG streams ride the snapshot so a restored
+                 # pool never re-draws batches it already drew pre-crash
+                 "key": np.asarray(h.key).tolist(),
+                 "rng_state": h.rng.bit_generator.state}
+                for h in self.studies]),
+        }
+        return ckpt_mod.save(self.cfg.ckpt_dir, self._n_done,
+                             dataclasses.asdict(self.engine.state),
+                             metadata=meta)
+
+    def restore(self) -> bool:
+        if not self.cfg.ckpt_dir:
+            return False
+        out = ckpt_mod.restore_latest(self.cfg.ckpt_dir,
+                                      dataclasses.asdict(self.engine.state))
+        if out is None:
+            return False
+        _, tree, meta = out
+        if int(meta.get("n_studies", -1)) != self.n_studies:
+            raise ValueError(
+                f"checkpoint holds {meta.get('n_studies')} studies, "
+                f"pool has {self.n_studies}")
+        tree["params"] = KernelParams(**tree["params"])
+        self.engine.state = gp_mod.LazyGPState(**tree)
+        for rec in json.loads(meta["studies"]):
+            h = self.studies[rec["study_id"]]
+            h.name = rec["name"]
+            h.next_id = int(rec["next_id"])
+            if "key" in rec:
+                h.key = jnp.asarray(np.asarray(rec["key"], np.uint32))
+            if "rng_state" in rec:
+                h.rng = np.random.default_rng()
+                h.rng.bit_generator.state = rec["rng_state"]
+            h.trials = [
+                Trial(t["trial_id"], np.asarray(t["unit"], np.float32),
+                      t["hparams"], t["status"], t["value"], t["error"],
+                      t["started"], t["finished"], t["retries"],
+                      t.get("clamp_count"))
+                for t in rec["trials"]]
+        self._n_done = self.total_done()
+        self._done_at_last_ckpt = self._n_done
+        return True

@@ -13,64 +13,34 @@ commute under the frozen kernel.  This scheduler turns that into the
     observation; the scheduler re-suggests from the posterior (optionally
     recording a penalized pseudo-observation so EI avoids a crashing
     region), and the GP state checkpoints with the trial ledger so a
-    restarted controller resumes with the identical posterior.
+    restarted controller resumes with the identical posterior — and does
+    NOT re-run its random seed trials.
   * **elasticity** — the parallel width t is re-read every round, so the
     suggestion batch tracks however many pod-slices are currently healthy.
   * **lag policy** — every `lag` absorbed results, kernel params are refit
     and the factor rebuilt (paper Fig. 6), amortizing the O(n^3) cost.
+
+Since the batched-study refactor (DESIGN.md §7) the scheduler is the S = 1
+degenerate case of `repro.hpo.pool.StudyPool`: suggest/absorb/fault/
+checkpoint all delegate to a one-study pool, so the scheduler and the
+multi-tenant pool share exactly one suggest/absorb code path (the
+`StudyEngine` jitted closures).  This module keeps only the objective
+execution loop (threads, retries, elastic width).
 """
 from __future__ import annotations
 
-import dataclasses
-import json
-import os
 import time
 import traceback
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import acquisition as acq_mod
 from repro.core import gp as gp_mod
-from repro.core.kernels import KERNELS
+from repro.hpo.pool import SchedulerConfig, StudyPool, Trial
 from repro.hpo.space import SearchSpace
-from repro import checkpoint as ckpt_mod
 
-
-@dataclasses.dataclass(frozen=True)
-class SchedulerConfig:
-    n_max: int = 512
-    kernel: str = "matern52"
-    lag: int = 0                 # 0 = fully lazy (paper's main mode)
-    parallel: int = 1            # t (elastic; re-read each round)
-    rho0: float = 0.25
-    noise2: float = 1e-5
-    seed: int = 0
-    implementation: str = "auto"  # linalg substrate (auto|pallas|xla|ref)
-    failure_penalty: float | None = None  # None: drop; else pseudo-y
-    max_retries: int = 1
-    ckpt_dir: str | None = None
-    acq: acq_mod.AcqConfig = dataclasses.field(
-        default_factory=lambda: acq_mod.AcqConfig(restarts=48,
-                                                  ascent_steps=20))
-
-
-@dataclasses.dataclass
-class Trial:
-    trial_id: int
-    unit: np.ndarray
-    hparams: dict
-    status: str = "pending"      # pending | running | done | failed
-    value: float | None = None
-    error: str | None = None
-    started: float = 0.0
-    finished: float = 0.0
-    retries: int = 0
-    clamp_count: int | None = None  # cumulative GP conditioning-floor hits
-    # at absorb time (ill-conditioning telemetry, DESIGN.md §6)
+__all__ = ["SchedulerConfig", "Trial", "TrialScheduler"]
 
 
 class TrialScheduler:
@@ -79,137 +49,45 @@ class TrialScheduler:
     def __init__(self, space: SearchSpace, cfg: SchedulerConfig):
         self.space = space
         self.cfg = cfg
-        self.kernel = KERNELS[cfg.kernel]
-        gcfg = gp_mod.GPConfig(n_max=cfg.n_max, dim=space.dim,
-                               kernel=cfg.kernel, noise2=cfg.noise2,
-                               rho0=cfg.rho0,
-                               implementation=cfg.implementation)
-        self.state = gp_mod.init_state(gcfg)
-        self.trials: list[Trial] = []
-        self._next_id = 0
-        self._key = jax.random.PRNGKey(cfg.seed)
-        self._lo = jnp.zeros((space.dim,))
-        self._hi = jnp.ones((space.dim,))
-        self._suggest = jax.jit(self._suggest_impl,
-                                static_argnames=("top_t",))
-        # The substrate knob is a Python constant inside the jitted closures:
-        # one compilation per configured implementation.
-        self._append = jax.jit(
-            lambda st, x, y: gp_mod.append(
-                st, self.kernel, x, y,
-                implementation=self.cfg.implementation))
-        self._refit = jax.jit(self._refit_impl)
+        self.pool = StudyPool([space], cfg, names=["study0"])
 
-    # ------------------------------------------------------------------
-    def _suggest_impl(self, state, key, *, top_t):
-        return acq_mod.optimize_acquisition(
-            state, self.kernel, self._lo, self._hi, key, self.cfg.acq, top_t,
-            implementation=self.cfg.implementation)
+    # -- delegation to the shared one-study pool ----------------------------
+    @property
+    def state(self) -> gp_mod.LazyGPState:
+        return self.pool.state(0)
 
-    def _refit_impl(self, state):
-        params = gp_mod.refit_params(
-            state, self.kernel, implementation=self.cfg.implementation)
-        return gp_mod.refactor(state, self.kernel, params,
-                               implementation=self.cfg.implementation)
+    @property
+    def trials(self) -> list[Trial]:
+        return self.pool.studies[0].trials
 
-    def _split(self):
-        self._key, sub = jax.random.split(self._key)
-        return sub
-
-    # ------------------------------------------------------------------
     def seed_trials(self, n: int) -> list[Trial]:
-        rng = np.random.default_rng(self.cfg.seed)
-        units = self.space.sample(rng, n)
-        return [self._make_trial(u) for u in units]
+        return self.pool.seed_trials(0, n)
 
     def suggest(self, t: int | None = None) -> list[Trial]:
         """Top-t distinct EI local maxima from the current posterior."""
-        t = t or self.cfg.parallel
-        if int(self.state.n) == 0:
-            return self.seed_trials(t)
-        units, _ = self._suggest(self.state, self._split(), top_t=t)
-        return [self._make_trial(np.asarray(u)) for u in units]
+        return self.pool.suggest(0, t)
 
     def _make_trial(self, unit: np.ndarray) -> Trial:
-        tr = Trial(self._next_id, unit.astype(np.float32),
-                   self.space.to_hparams(unit))
-        self._next_id += 1
-        self.trials.append(tr)
-        return tr
+        return self.pool._make_trial(0, unit)
 
-    # ------------------------------------------------------------------
     def absorb(self, trial: Trial, value: float) -> None:
         """O(n^2) row append (order-independent under the frozen kernel)."""
-        gp_mod.ensure_capacity(int(self.state.n), self.cfg.n_max)
-        trial.status = "done"
-        trial.value = float(value)
-        trial.finished = time.time()
-        self.state = self._append(self.state, jnp.asarray(trial.unit),
-                                  jnp.asarray(value, jnp.float32))
-        trial.clamp_count = int(self.state.clamp_count)
-        if self.cfg.lag > 0 and int(self.state.since_refit) >= self.cfg.lag:
-            self.state = self._refit(self.state)
-        self._maybe_checkpoint()
+        self.pool.absorb(0, trial, value)
 
     def record_failure(self, trial: Trial, error: str) -> Trial | None:
         """Failed trial: retry (fresh suggestion) or penalize the region."""
-        trial.status = "failed"
-        trial.error = error
-        trial.finished = time.time()
-        if self.cfg.failure_penalty is not None:
-            # Pseudo-observation keeps EI away from a crashing region.
-            gp_mod.ensure_capacity(int(self.state.n), self.cfg.n_max)
-            self.state = self._append(
-                self.state, jnp.asarray(trial.unit),
-                jnp.asarray(self.cfg.failure_penalty, jnp.float32))
-            trial.clamp_count = int(self.state.clamp_count)
-        if trial.retries < self.cfg.max_retries:
-            nxt = self.suggest(1)[0]
-            nxt.retries = trial.retries + 1
-            return nxt
-        return None
+        return self.pool.record_failure(0, trial, error)
 
-    # ------------------------------------------------------------------
     def best(self) -> Trial | None:
-        done = [t for t in self.trials if t.status == "done"]
-        return max(done, key=lambda t: t.value) if done else None
+        return self.pool.best(0)
 
     def history(self) -> list[dict]:
-        return [dataclasses.asdict(t) | {"unit": t.unit.tolist()}
-                for t in self.trials]
-
-    # ------------------------------------------------------------------
-    def _maybe_checkpoint(self):
-        if not self.cfg.ckpt_dir:
-            return
-        n_done = sum(t.status == "done" for t in self.trials)
-        ckpt_mod.save(self.cfg.ckpt_dir, n_done,
-                      dataclasses.asdict(self.state),
-                      metadata={"trials": json.dumps(self.history()),
-                                "next_id": self._next_id})
+        return self.pool.history(0)
 
     def restore(self) -> bool:
-        if not self.cfg.ckpt_dir:
-            return False
-        out = ckpt_mod.restore_latest(self.cfg.ckpt_dir,
-                                      dataclasses.asdict(self.state))
-        if out is None:
-            return False
-        _, tree, meta = out
-        from repro.core.kernels import KernelParams
-        tree["params"] = KernelParams(**tree["params"])
-        self.state = gp_mod.LazyGPState(**tree)
-        self._next_id = int(meta["next_id"])
-        self.trials = []
-        for rec in json.loads(meta["trials"]):
-            tr = Trial(rec["trial_id"], np.asarray(rec["unit"], np.float32),
-                       rec["hparams"], rec["status"], rec["value"],
-                       rec["error"], rec["started"], rec["finished"],
-                       rec["retries"], rec.get("clamp_count"))
-            self.trials.append(tr)
-        return True
+        return self.pool.restore()
 
-    # ------------------------------------------------------------------
+    # -- objective execution loop -------------------------------------------
     def run(self, objective: Callable[[dict], float], budget: int,
             n_seed: int = 1, executor: ThreadPoolExecutor | None = None,
             parallel: Callable[[], int] | None = None) -> Trial | None:
@@ -217,37 +95,60 @@ class TrialScheduler:
 
         `parallel` is an optional callable re-read each round — the elastic
         width (e.g. the number of currently-healthy pod slices).
+
+        `budget` counts observations absorbed in THIS call (seed trials
+        included), in both sequential and parallel modes: a resumed run
+        absorbs `budget` *more* on top of the restored posterior.
+
+        A scheduler resumed from a checkpoint (`restore()`, state.n > 0)
+        does NOT run its random seed trials again: the restored posterior
+        already contains them, so seeding would absorb duplicate points and
+        skew the ledger.  Resumed runs go straight to EI suggestions.
         """
         own_pool = executor is None and self.cfg.parallel > 1
         pool = executor or (ThreadPoolExecutor(self.cfg.parallel)
                             if own_pool else None)
         width_fn = parallel or (lambda: self.cfg.parallel)
-
-        def launch(pool, trial):
-            trial.status = "running"
-            trial.started = time.time()
-            fut = pool.submit(objective, trial.hparams)
-            fut.trial = trial
-            return fut
+        resumed = int(self.state.n) > 0 or \
+            any(t.status == "done" for t in self.trials)
 
         try:
             if pool is None:
                 # Sequential mode (t = 1).
-                for tr in self.seed_trials(n_seed):
-                    self._run_one(objective, tr)
-                while sum(t.status == "done" for t in self.trials) < budget:
+                done0 = sum(t.status == "done" for t in self.trials)
+                if not resumed:
+                    # Seeds count toward the per-call budget, so never seed
+                    # past it.
+                    for tr in self.seed_trials(min(n_seed, budget)):
+                        self._run_one(objective, tr)
+                while sum(t.status == "done"
+                          for t in self.trials) - done0 < budget:
                     tr = self.suggest(1)[0]
                     self._run_one(objective, tr)
                 return self.best()
 
-            pending: set[Future] = set()
-            for tr in self.seed_trials(max(n_seed, 1)):
-                pending.add(launch(pool, tr))
+            inflight: dict[Future, Trial] = {}
+
+            def launch(trial: Trial) -> None:
+                trial.status = "running"
+                trial.started = time.time()
+                inflight[pool.submit(objective, trial.hparams)] = trial
+
+            if not resumed:
+                for tr in self.seed_trials(min(max(n_seed, 1), budget)):
+                    launch(tr)
             absorbed = 0
             while absorbed < budget:
-                done, pending = wait(pending, return_when=FIRST_COMPLETED)
+                width = max(1, width_fn())
+                while len(inflight) < width and \
+                        absorbed + len(inflight) < budget:
+                    for tr in self.suggest(1):
+                        launch(tr)
+                if not inflight:
+                    break
+                done, _ = wait(inflight, return_when=FIRST_COMPLETED)
                 for fut in done:       # async absorption, completion order
-                    tr = fut.trial
+                    tr = inflight.pop(fut)
                     try:
                         val = float(fut.result())
                         if not np.isfinite(val):
@@ -257,16 +158,12 @@ class TrialScheduler:
                         retry = self.record_failure(
                             tr, f"{type(e).__name__}: {e}")
                         if retry is not None:
-                            pending.add(launch(pool, retry))
+                            launch(retry)
                     else:
                         # Scheduler-side errors (capacity, checkpoint IO)
                         # propagate: they are not trial faults to retry.
                         self.absorb(tr, val)
                         absorbed += 1
-                width = max(1, width_fn())
-                while len(pending) < width and absorbed + len(pending) < budget:
-                    for tr in self.suggest(1):
-                        pending.add(launch(pool, tr))
             return self.best()
         finally:
             if own_pool and pool is not None:

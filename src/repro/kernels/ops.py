@@ -21,13 +21,32 @@ Two families of entry points:
     through — no direct `solve_triangular` / dense-Cholesky call sites exist
     above this module.
 
-`lazy_append` is the fused paper-Alg. 3 step: the row solve and the alpha
-refresh share one factor residency (a single two-column forward solve plus
-one backward solve) instead of three independent full solves.
+The padded-state ops are **rank-polymorphic over a leading study axis**
+(DESIGN.md §7): stacked `(S, n_max, …)` buffers with a per-study active
+count `n (S,)` dispatch through `jax.vmap` of the single-study path, so one
+jitted program advances S independent factors at once.  The Pallas kernels
+batch through `pallas_call`'s native batching rule (the study axis becomes a
+grid dimension) and the custom VJPs vmap with them, so the batched path is
+differentiable on every substrate.
+
+**The appends are matmul-based against a maintained inverse factor.**  The
+steady-state transitions (`padded_append_row`, `lazy_append`) take the
+identity-padded inverse `li_buf = L^{-1}` alongside the factor and compute
+the paper's row solve as the matvec `q = L^{-1} p`, updating the inverse
+with the closed-form bordered-inverse row
+`L'^{-1} = [[L^{-1}, 0], [-(1/d) q^T L^{-1}, 1/d]]` — O(n_max^2) like the
+paper's solve, but expressed entirely as matmuls.  This is what makes the
+batched study axis fast everywhere: batched triangular solves lower
+pathologically on some backends (XLA CPU runs them ~100x slower per element
+than the unbatched LAPACK call), while batched matmuls hit the native GEMM
+path on every backend (and the MXU on TPU).  Triangular solves survive only
+in the rare lag-event refactorization (`padded_tri_inverse`) and in the
+`trsv` entry points the tests and the naive baselines exercise.
+
+`lazy_append` is the fused paper-Alg. 3 step: row append + inverse update +
+alpha refresh in four matvec passes over one factor residency.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -172,7 +191,13 @@ def padded_trsv(l_buf: Array, b: Array, *, trans: bool = False,
     >= n have zeros left of a unit diagonal), which is the invariant every
     padded GP solve relies on.  Same dispatch as `trsv`; named separately so
     call sites document which shape contract they use.
+
+    Batched form: `l_buf (S, n_max, n_max)` with `b (S, n_max)` or
+    `(S, n_max, r)` solves S independent systems in one dispatch.
     """
+    if l_buf.ndim == 3:
+        return jax.vmap(lambda l, rhs: padded_trsv(
+            l, rhs, trans=trans, implementation=implementation))(l_buf, b)
     return trsv(l_buf, b, trans=trans, implementation=implementation)
 
 
@@ -182,7 +207,13 @@ def padded_cholesky(k_pad: Array, implementation: str = "auto") -> Array:
     The identity padding is SPD, and the factor of a block-diagonal
     [[K, 0], [0, I]] matrix is [[L, 0], [0, I]] — so factoring the padded
     buffer directly yields the identity-padded factor the lazy state stores.
+
+    Batched form: `k_pad (S, n_max, n_max)` factors S buffers in one
+    dispatch.
     """
+    if k_pad.ndim == 3:
+        return jax.vmap(lambda k: padded_cholesky(
+            k, implementation=implementation))(k_pad)
     return cholesky(k_pad, implementation=implementation)
 
 
@@ -210,7 +241,15 @@ def masked_gram(x_buf: Array, n: Array, kernel_fn, params,
     Rows/cols >= n are replaced by the identity so `padded_cholesky` of the
     result is the identity-padded factor (the lag-event refactorization
     input).  `n` may be traced; the output shape is always (n_max, n_max).
+
+    Batched form: `x_buf (S, n_max, d)` with per-study `n (S,)` and `params`
+    whose leaves carry a leading `(S,)` axis builds S padded Grams in one
+    dispatch.
     """
+    if x_buf.ndim == 3:
+        return jax.vmap(lambda xb, nn, pp: masked_gram(
+            xb, nn, kernel_fn, pp,
+            implementation=implementation))(x_buf, n, params)
     n_max = x_buf.shape[0]
     k = kernel_gram(kernel_fn, x_buf, x_buf, params,
                     implementation=implementation)
@@ -221,68 +260,103 @@ def masked_gram(x_buf: Array, n: Array, kernel_fn, params,
     return jnp.where(active, k, eye)
 
 
-def _write_append_row(l_buf: Array, q: Array, d: Array, n: Array) -> Array:
-    """Replace row n of the padded factor with [q^T, d, 0, ...]."""
-    n_max = l_buf.shape[0]
+def write_append_row(buf: Array, q: Array, d: Array, n: Array) -> Array:
+    """Replace row n of a padded triangular buffer with [q^T, d, 0, ...]."""
+    n_max = buf.shape[0]
     row = jnp.where(jnp.arange(n_max) < n, q, 0.0).at[n].set(d)
-    return jax.lax.dynamic_update_slice(l_buf, row[None, :], (n, 0))
+    return jax.lax.dynamic_update_slice(buf, row[None, :], (n, 0))
 
 
-def padded_append_row(l_buf: Array, p_pad: Array, c: Array, n: Array,
-                      *, implementation: str = "auto"
-                      ) -> tuple[Array, Array, Array]:
-    """Paper Alg. 3 row append on the padded factor, O(n_max^2).
+def padded_tri_inverse(l_buf: Array, *,
+                       implementation: str = "auto") -> Array:
+    """Identity-padded inverse of the identity-padded factor: `L^{-1}`.
+
+    Solving `L X = I` on the padded buffer yields `[[L^{-1}, 0], [0, I]]`
+    directly (the identity block is self-inverse).  One O(n_max^3) solve —
+    only runs at refactor events; the appends maintain the inverse
+    incrementally in O(n_max^2).
+
+    Batched form: `(S, n_max, n_max)` inverts every study in one dispatch.
+    """
+    if l_buf.ndim == 3:
+        return jax.vmap(lambda l: padded_tri_inverse(
+            l, implementation=implementation))(l_buf)
+    eye = jnp.eye(l_buf.shape[0], dtype=l_buf.dtype)
+    return padded_trsv(l_buf, eye, implementation=implementation)
+
+
+def padded_append_row(l_buf: Array, li_buf: Array, p_pad: Array, c: Array,
+                      n: Array, *, implementation: str = "auto"
+                      ) -> tuple[Array, Array, Array, Array]:
+    """Paper Alg. 3 row append on the padded factor + inverse, O(n_max^2).
+
+    The row solve is the matvec `q = L^{-1} p` against the maintained
+    inverse, and the inverse grows by the closed-form bordered row
+    `[-(1/d) q^T L^{-1}, 1/d]` — no triangular solve anywhere, so the op
+    batches over a study axis at native GEMM speed (see module docstring).
 
     Args:
       l_buf: (n_max, n_max) identity-padded factor of K_n + noise I.
+      li_buf: (n_max, n_max) identity-padded inverse factor L^{-1}.
       p_pad: (n_max,) new covariance column k(X, x_new), zero beyond n.
       c: scalar k(x_new, x_new) + noise.
       n: active count (traced int32); the new row lands at index n.
 
-    Returns (l_new, d, clamped) where `clamped` is 1 iff d^2 hit the
-    CLAMP_EPS conditioning floor (float32 breakdown — see DESIGN.md §6).
+    Returns (l_new, li_new, d, clamped) where `clamped` is 1 iff d^2 hit
+    the CLAMP_EPS conditioning floor (float32 breakdown — DESIGN.md §6).
+
+    Batched form: `(S, n_max, n_max)` factors/inverses with `(S, n_max)`
+    columns, `(S,)` self-covariances and per-study `n (S,)` append one row
+    per study in one dispatch.
     """
-    q = padded_trsv(l_buf, p_pad, implementation=implementation)
+    del implementation  # matmul-only: no substrate dispatch below this line
+    if l_buf.ndim == 3:
+        return jax.vmap(lambda l, li, p, cc, nn: padded_append_row(
+            l, li, p, cc, nn))(l_buf, li_buf, p_pad, c, n)
+    # Rows >= n of li are identity and p is zero there, so q is exact and
+    # already zero beyond the active block.
+    q = li_buf @ p_pad
     d2 = c - q @ q
     clamped = (d2 < CLAMP_EPS).astype(jnp.int32)
     d = jnp.sqrt(jnp.maximum(d2, CLAMP_EPS))
-    return _write_append_row(l_buf, q, d, n), d, clamped
+    l_new = write_append_row(l_buf, q, d, n)
+    # Bordered inverse: row n of L'^{-1} is [-(1/d) q^T L^{-1}, 1/d].
+    r = -(q @ li_buf) / d
+    li_new = write_append_row(li_buf, r, 1.0 / d, n)
+    return l_new, li_new, d, clamped
 
 
-def lazy_append(l_buf: Array, p_pad: Array, c: Array, resid: Array, n: Array,
-                *, implementation: str = "auto"
-                ) -> tuple[Array, Array, Array, Array]:
-    """Fused Alg. 3 append: row solve + alpha refresh in two factor passes.
+def lazy_append(l_buf: Array, li_buf: Array, p_pad: Array, c: Array,
+                resid: Array, n: Array, *, implementation: str = "auto"
+                ) -> tuple[Array, Array, Array, Array, Array]:
+    """Fused Alg. 3 append: row + inverse update + alpha refresh, O(n_max^2).
 
-    The unfused path costs three independent O(n_max^2) solves per append
-    (q = L^{-1}p, then z = L'^{-1}r and alpha = L'^{-T}z on the new factor).
-    Because the new factor L' differs from L only in row n, the forward
-    solves for q and z[:n] coincide on the old factor — so both ride one
-    two-column `trsv` (one factor residency), row n of z is a scalar fix-up
-    z_n = (r_n - q.z)/d, and only the backward alpha solve touches L'.
+    Four matvec passes per observation — `q = L^{-1} p`, the bordered
+    inverse row `-(1/d) q^T L^{-1}`, and the alpha refresh
+    `alpha = L'^{-T} (L'^{-1} r)` as two matvecs against the new inverse.
+    All GEMM traffic: the op batches over a study axis with no pathological
+    batched-triangular-solve lowering on any backend.
 
     Args:
       resid: (n_max,) residual y - mean *including* the new observation at
         row n, zero beyond row n.
 
-    Returns (l_new, alpha, d, clamped).
+    Returns (l_new, li_new, alpha, d, clamped).
+
+    Batched form: stacked `(S, n_max, …)` operands with per-study `n (S,)`
+    run S fused appends in one dispatch (heterogeneous active counts are
+    fine — each study's row lands at its own index).
     """
+    del implementation  # matmul-only: no substrate dispatch below this line
+    if l_buf.ndim == 3:
+        return jax.vmap(lambda l, li, p, cc, r, nn: lazy_append(
+            l, li, p, cc, r, nn))(l_buf, li_buf, p_pad, c, resid, n)
     n_max = l_buf.shape[0]
     idx = jnp.arange(n_max)
-    below = idx < n
-    # One forward pass over the old factor for both right-hand sides.
-    rhs = jnp.stack([p_pad, jnp.where(below, resid, 0.0)], axis=1)
-    qz = padded_trsv(l_buf, rhs, implementation=implementation)
-    q = jnp.where(below, qz[:, 0], 0.0)
-    z = jnp.where(below, qz[:, 1], 0.0)
-    d2 = c - q @ q
-    clamped = (d2 < CLAMP_EPS).astype(jnp.int32)
-    d = jnp.sqrt(jnp.maximum(d2, CLAMP_EPS))
-    l_new = _write_append_row(l_buf, q, d, n)
-    # Row n of the forward solve against the *new* factor: L'[n] = [q^T, d].
-    z_n = (resid[n] - q @ z) / d
-    z_full = jnp.where(idx == n, z_n, z)
-    # One backward pass over the new factor.
-    alpha = padded_trsv(l_new, z_full, trans=True,
-                        implementation=implementation)
-    return l_new, jnp.where(idx <= n, alpha, 0.0), d, clamped
+    l_new, li_new, d, clamped = padded_append_row(l_buf, li_buf, p_pad, c, n)
+    # alpha = (K' + noise I)^{-1} r = L'^{-T} (L'^{-1} r); rows/cols >= n+1
+    # of the padded inverse are identity against a zero-padded residual, so
+    # the padded matvecs are exact and alpha is zero beyond the new row.
+    z = li_new @ resid
+    alpha = z @ li_new           # == li_new.T @ z
+    return l_new, li_new, jnp.where(idx <= n, alpha, 0.0), d, clamped

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.hpo.scheduler import SchedulerConfig, TrialScheduler
-from repro.hpo.space import LM_SPACE, RESNET_SPACE, SearchSpace, Dim
+from repro.hpo.space import LM_SPACE, RESNET_SPACE
 
 
 def quad_objective(hp: dict) -> float:
@@ -135,6 +135,61 @@ def test_gp_state_checkpoint_restore():
         # restarted controller can continue suggesting + absorbing
         best = sched2.run(quad_objective, budget=n_before + 2, n_seed=0)
         assert best is not None
+
+
+def test_restore_resume_identical_state_no_duplicate_seeds():
+    """A restored scheduler resumes the exact posterior + ledger and must
+    NOT re-run its random seed trials (they are already in the GP)."""
+    with tempfile.TemporaryDirectory() as d:
+        cfg = SchedulerConfig(n_max=32, seed=7, ckpt_dir=d)
+        s1 = TrialScheduler(RESNET_SPACE, cfg)
+        s1.run(quad_objective, budget=5, n_seed=3)
+        n_before = int(s1.state.n)
+        ledger_before = [(t.trial_id, t.status, t.value) for t in s1.trials]
+
+        s2 = TrialScheduler(RESNET_SPACE, cfg)
+        assert s2.restore()
+        # identical posterior
+        assert int(s2.state.n) == n_before
+        np.testing.assert_allclose(np.asarray(s2.state.alpha),
+                                   np.asarray(s1.state.alpha), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(s2.state.l_buf),
+                                   np.asarray(s1.state.l_buf), rtol=1e-6)
+        # identical trial ledger
+        assert [(t.trial_id, t.status, t.value)
+                for t in s2.trials] == ledger_before
+
+        # resume with the same n_seed: the resumed run must go straight to
+        # EI suggestions, not absorb the seed batch a second time (budget
+        # counts absorptions per run() call, same as the parallel path)
+        s2.run(quad_objective, budget=2, n_seed=3)
+        assert int(s2.state.n) == n_before + 2
+        seed_units = {tuple(t.unit.tolist()) for t in s1.trials[:3]}
+        new_trials = s2.trials[len(ledger_before):]
+        assert len(new_trials) == 2
+        assert all(tuple(t.unit.tolist()) not in seed_units
+                   for t in new_trials), "seed trials were re-run on resume"
+
+
+def test_restore_resume_parallel_path_no_duplicate_seeds():
+    """Same contract through the thread-pool (parallel) run path."""
+    with tempfile.TemporaryDirectory() as d:
+        cfg = SchedulerConfig(n_max=32, seed=8, parallel=2, ckpt_dir=d)
+        s1 = TrialScheduler(RESNET_SPACE, cfg)
+        s1.run(quad_objective, budget=4, n_seed=2)
+
+        s2 = TrialScheduler(RESNET_SPACE, cfg)
+        assert s2.restore()
+        n_restored = int(s2.state.n)
+        ledger_len = len(s2.trials)
+        s2.run(quad_objective, budget=2, n_seed=2)
+        # parallel path counts absorptions per run: exactly 2 more, and the
+        # new trials are EI suggestions, not a re-seeded random batch
+        assert int(s2.state.n) == n_restored + 2
+        seed_units = {tuple(t.unit.tolist()) for t in s1.trials[:2]}
+        new_trials = s2.trials[ledger_len:]
+        assert all(tuple(t.unit.tolist()) not in seed_units
+                   for t in new_trials), "seed trials were re-run on resume"
 
 
 def test_suggestions_within_bounds_and_distinct():

@@ -197,6 +197,100 @@ def test_deferred_alpha_batch_matches_sequential(implementation):
 
 
 # ---------------------------------------------------------------------------
+# Batched study axis (DESIGN.md §7): stacked states match independent runs
+# ---------------------------------------------------------------------------
+def _hetero_stack(implementation, n0s=(3, 5, 7), d=3, n_max=16):
+    """Stacked state over studies with heterogeneous active counts."""
+    singles = [
+        _seed_state(jax.random.PRNGKey(20 + i), n0, d, n_max,
+                    implementation=implementation)[0]
+        for i, n0 in enumerate(n0s)]
+    return gp_mod.stack_states(singles), singles
+
+
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_batched_append_matches_independent(implementation):
+    """One vmapped append over S studies (per-study n) == S single appends."""
+    stacked, singles = _hetero_stack(implementation)
+    key = jax.random.PRNGKey(77)
+    xs = jax.random.uniform(key, (len(singles), 3), minval=-2.0, maxval=2.0)
+    ys = jnp.tanh(xs.sum(-1))
+    got = append(stacked, matern52, xs, ys, implementation=implementation)
+    assert got.is_batched and got.n_studies == len(singles)
+    for i, st in enumerate(singles):
+        want = append(st, matern52, xs[i], ys[i],
+                      implementation=implementation)
+        view = gp_mod.unstack_state(got, i)
+        assert int(view.n) == int(want.n)
+        np.testing.assert_allclose(np.asarray(view.l_buf),
+                                   np.asarray(want.l_buf), rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(view.alpha),
+                                   np.asarray(want.alpha), rtol=1e-4,
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_batched_posterior_and_refactor_match_independent(implementation):
+    stacked, singles = _hetero_stack(implementation)
+    key = jax.random.PRNGKey(78)
+    xq = jax.random.uniform(key, (len(singles), 4, 3), minval=-2.0,
+                            maxval=2.0)
+    m, v = posterior(stacked, matern52, xq, implementation=implementation)
+    assert m.shape == v.shape == (len(singles), 4)
+    ref = refactor(stacked, matern52, implementation=implementation)
+    for i, st in enumerate(singles):
+        mi, vi = posterior(st, matern52, xq[i],
+                           implementation=implementation)
+        np.testing.assert_allclose(np.asarray(m[i]), np.asarray(mi),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(v[i]), np.asarray(vi),
+                                   rtol=1e-3, atol=1e-5)
+        ri = refactor(st, matern52, implementation=implementation)
+        np.testing.assert_allclose(
+            np.asarray(gp_mod.unstack_state(ref, i).l_buf),
+            np.asarray(ri.l_buf), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_batched_suggest_matches_independent(implementation):
+    """Vmapped acquisition over the stack == per-study optimization under
+    the same keys (the StudyPool suggest_all contract)."""
+    from repro.core.acquisition import AcqConfig, optimize_acquisition
+    stacked, singles = _hetero_stack(implementation)
+    cfg = AcqConfig(restarts=8, ascent_steps=5)
+    lo, hi = jnp.zeros(3), jnp.ones(3)
+    keys = jax.random.split(jax.random.PRNGKey(5), len(singles))
+    pts, vals = optimize_acquisition(stacked, matern52, lo, hi, keys, cfg,
+                                     2, implementation=implementation)
+    assert pts.shape == (len(singles), 2, 3)
+    for i, st in enumerate(singles):
+        pi, vi = optimize_acquisition(st, matern52, lo, hi, keys[i], cfg,
+                                      2, implementation=implementation)
+        np.testing.assert_allclose(np.asarray(pts[i]), np.asarray(pi),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(vals[i]), np.asarray(vi),
+                                   rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_batched_append_batch_matches_independent(implementation):
+    stacked, singles = _hetero_stack(implementation, n0s=(2, 4), n_max=32)
+    key = jax.random.PRNGKey(79)
+    xs = jax.random.uniform(key, (2, 3, 3), minval=-2.0, maxval=2.0)
+    ys = jnp.sin(xs.sum(-1))
+    got = append_batch(stacked, matern52, xs, ys,
+                       implementation=implementation)
+    for i, st in enumerate(singles):
+        want = append_batch(st, matern52, xs[i], ys[i],
+                            implementation=implementation)
+        np.testing.assert_allclose(
+            np.asarray(gp_mod.unstack_state(got, i).alpha),
+            np.asarray(want.alpha), rtol=1e-4, atol=1e-5)
+        assert int(got.n[i]) == int(want.n)
+
+
+# ---------------------------------------------------------------------------
 # Conditioning telemetry (the d^2 clamp counter)
 # ---------------------------------------------------------------------------
 def test_clamp_counter_increments_on_degenerate_append():
