@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
                       emits BENCH_substrate.json
   * bench_pool     — multi-tenant StudyPool vs S sequential schedulers,
                       emits BENCH_pool.json
+  * bench_shard    — device-mesh suggest-round scaling at 1/2/4/8 devices,
+                      emits BENCH_shard.json
 
 `python -m benchmarks.run [--full] [--only NAME]`.  The roofline analysis
 (§Roofline) is separate: `python -m benchmarks.roofline results/*.jsonl`
@@ -32,7 +34,7 @@ def main() -> None:
 
     from benchmarks import (bench_cholesky, bench_lag, bench_levy,
                             bench_nn_hpo, bench_parallel, bench_pool,
-                            bench_substrate)
+                            bench_shard, bench_substrate)
     suites = {
         "cholesky": lambda: bench_cholesky.run(full=args.full),
         "levy": lambda: bench_levy.run(full=args.full),
@@ -41,6 +43,7 @@ def main() -> None:
         "parallel": lambda: bench_parallel.run(full=args.full),
         "substrate": lambda: bench_substrate.run(full=args.full),
         "pool": lambda: bench_pool.run(full=args.full),
+        "shard": lambda: bench_shard.run(full=args.full),
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

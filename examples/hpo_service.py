@@ -1,16 +1,18 @@
 """Multi-tenant HPO service: a request-driven suggest/report loop over a
 StudyPool (the ROADMAP's "serve heavy traffic" shape, in miniature).
 
-    python examples/hpo_service.py [--studies 8] [--budget 12] [--workers 8]
+    python examples/hpo_service.py [--studies 8] [--budget 12] [--workers 8] \
+        [--mesh auto]   # shard the suggest path over a device mesh (§8)
 
 S tenants run concurrent HPO studies against one batched lazy-GP engine:
-each service round issues ONE vmapped `suggest_all` dispatch for every
-tenant with an open request, hands the suggestions to worker threads (the
-"trainers"), and drains completions in masked batched `absorb_many` rounds
-routed to the owning study — results are absorbed in completion order, so a
-slow tenant never blocks a fast one.  With --ckpt-dir the whole pool rides
-one atomic checkpoint and a second invocation resumes every tenant's
-posterior.
+each service round issues ONE fused `advance_round` dispatch — the masked
+absorb of every drained completion AND the batched suggest for every
+tenant with an open request run in a single jitted program with donated
+state buffers (DESIGN.md §8).  Suggestions go to worker threads (the
+"trainers"); results are absorbed in completion order, so a slow tenant
+never blocks a fast one.  With --mesh the suggest path shards over a
+device mesh; with --ckpt-dir the whole pool rides one atomic checkpoint
+and a second invocation resumes every tenant's posterior.
 
 Each tenant optimizes its own synthetic objective (a shifted smooth bowl on
 the unit cube, distinct optimum per tenant) so per-study convergence is
@@ -51,10 +53,16 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--implementation", default="auto",
                     choices=["auto", "pallas", "xla", "ref"])
+    ap.add_argument("--mesh", default="none",
+                    help="device mesh for the batched suggest path "
+                         "(DESIGN.md §8): none | auto | SxR (e.g. 4x2). "
+                         "On CPU, export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 first")
     args = ap.parse_args()
 
     cfg = SchedulerConfig(n_max=args.budget + 8, seed=0,
                           implementation=args.implementation,
+                          mesh=args.mesh,
                           ckpt_dir=args.ckpt_dir)
     pool = StudyPool([RESNET_SPACE] * args.studies, cfg,
                      names=[f"tenant{i}" for i in range(args.studies)])
@@ -69,18 +77,27 @@ def main():
     suggested = 0
     with ThreadPoolExecutor(args.workers) as workers:
         inflight = {}   # Future -> (study_id, Trial)
+        events = []     # drained completions awaiting absorption
 
         def open_requests():
-            """Tenants below budget with no trial in flight this round."""
+            """Tenants below budget with no trial in flight this round
+            (counting completions about to be absorbed)."""
             busy = {sid for sid, _ in inflight.values()}
+            incoming: dict[int, int] = {}
+            for sid, _, _ in events:
+                incoming[sid] = incoming.get(sid, 0) + 1
             return [s for s in range(args.studies)
-                    if pool.engine.n(s) < args.budget and s not in busy]
+                    if s not in busy
+                    and pool.engine.n(s) + incoming.get(s, 0) < args.budget]
 
         while True:
             ready = open_requests()
-            if ready:
-                # ONE batched dispatch serves every open suggest request.
-                suggestions = pool.suggest_all(t=1, studies=ready)
+            if events or ready:
+                # ONE fused dispatch absorbs every drained completion and
+                # serves every open suggest request (advance_round; tenants
+                # at budget absorb without drawing a new trial).
+                suggestions = pool.advance_round(events, studies=ready)
+                events = []
                 for sid, trs in suggestions.items():
                     tr = trs[0]
                     tr.status = "running"
@@ -91,7 +108,6 @@ def main():
             if not inflight:
                 break
             done, _ = wait(inflight, return_when=FIRST_COMPLETED)
-            events = []
             for fut in done:            # completion order, any tenant mix
                 sid, tr = inflight.pop(fut)
                 try:
@@ -102,8 +118,6 @@ def main():
                     if retry is not None:
                         fut2 = workers.submit(objectives[sid], retry.unit)
                         inflight[fut2] = (sid, retry)
-            if events:
-                pool.absorb_many(events)   # masked batched rounds
 
     elapsed = time.perf_counter() - t0
     total = sum(pool.engine.n(s) for s in range(args.studies))

@@ -88,8 +88,9 @@ def _f_best(state: gp_mod.LazyGPState) -> Array:
 def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
                          lo: Array, hi: Array, key: Array,
                          cfg: AcqConfig, top_t: int = 1,
-                         *, implementation: str = "auto"
-                         ) -> tuple[Array, Array]:
+                         *, implementation: str = "auto",
+                         restart_axis: str | None = None,
+                         restart_shards: int = 1) -> tuple[Array, Array]:
     """Return (points (top_t, d), acq values (top_t,)), best first.
 
     top_t = 1 is standard sequential BO; top_t = t implements the paper's
@@ -100,6 +101,14 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
     `((S, top_t, d), (S, top_t))` — one vmapped dispatch suggests for every
     study at once.  `key` may be a single key (split per study) or `(S,)`
     stacked keys; `lo`/`hi` may be shared `(d,)` or per-study `(S, d)`.
+
+    Sharded (DESIGN.md §8): inside a `shard_map` whose mesh carries a
+    `restart_axis` of size `restart_shards`, each shard ascends only its
+    R/restart_shards slice of the seeds and an `all_gather` reassembles the
+    full (R,) candidate set before dedup — every shard then computes the
+    identical result (replicated outputs).  Seeds are generated from the
+    full `key` on every shard and sliced by `axis_index`, so the sharded
+    ascent sees exactly the seeds the unsharded path would.
     """
     if state.is_batched:
         n_studies = state.x_buf.shape[0]
@@ -109,10 +118,15 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
         return jax.vmap(
             lambda st, k, l, h: optimize_acquisition(
                 st, kernel, l, h, k, cfg, top_t,
-                implementation=implementation),
+                implementation=implementation, restart_axis=restart_axis,
+                restart_shards=restart_shards),
             in_axes=(0, 0,
                      0 if lo.ndim == 2 else None,
                      0 if hi.ndim == 2 else None))(state, keys, lo, hi)
+    if cfg.restarts % restart_shards:
+        raise ValueError(
+            f"restart shards ({restart_shards}) must divide "
+            f"cfg.restarts ({cfg.restarts})")
     d = state.dim
     f_best = _f_best(state)
     width = hi - lo
@@ -131,8 +145,26 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
             return jnp.clip(x + cfg.lr * width * g, lo, hi)
         return jax.lax.fori_loop(0, cfg.ascent_steps, step, x)
 
-    finals = jax.vmap(ascend)(seeds)                    # (R, d)
-    vals = jax.vmap(value)(finals)                      # (R,)
+    if restart_axis is not None and restart_shards > 1:
+        # Ascend only this shard's contiguous slice of the seeds, then
+        # reassemble: all_gather(tiled) concatenates in axis-index order,
+        # restoring the exact unsharded restart order.
+        r_local = cfg.restarts // restart_shards
+        idx = jax.lax.axis_index(restart_axis)
+        local = jax.lax.dynamic_slice_in_dim(seeds, idx * r_local, r_local)
+        finals = jax.vmap(ascend)(local)                # (R/shards, d)
+        vals = jax.vmap(value)(finals)                  # (R/shards,)
+        finals = jax.lax.all_gather(finals, restart_axis, tiled=True)
+        vals = jax.lax.all_gather(vals, restart_axis, tiled=True)
+    else:
+        finals = jax.vmap(ascend)(seeds)                # (R, d)
+        vals = jax.vmap(value)(finals)                  # (R,)
+
+    if top_t == 1:
+        # Fast path: the greedy dedup below returns the plain argmax when
+        # only one suggestion is requested, so skip its R-iteration loop.
+        best = jnp.argmax(vals)
+        return finals[best][None, :], vals[best][None]
 
     # Spatial dedup: greedy pick best, suppress all restarts within radius.
     order = jnp.argsort(-vals)

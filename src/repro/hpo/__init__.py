@@ -1,6 +1,7 @@
 """HPO orchestration: search spaces, the single-study scheduler, and the
 multi-tenant StudyPool — all sharing one batched suggest/absorb engine
-(DESIGN.md §7)."""
+(DESIGN.md §7), optionally sharded over a device mesh via `repro.hpo.mesh`
+(DESIGN.md §8, `SchedulerConfig.mesh`)."""
 from repro.hpo.engine import StudyEngine
 from repro.hpo.pool import SchedulerConfig, StudyPool, Trial
 from repro.hpo.scheduler import TrialScheduler

@@ -19,20 +19,38 @@ Dispatch shapes (all jitted once per configuration):
   * `append_masked`  — one vmapped dispatch absorbing at most one new
     observation per study (flagged), for draining a completion queue in
     rounds instead of S sequential dispatches.
+  * `advance_all`    — the fused serving round: masked absorb of last
+    round's completions + batched suggest from the updated posteriors in
+    ONE jitted program (state buffers donated, so the stacked factors are
+    updated in place instead of copied every round).
   * `refit_at`       — lag-event hyper-parameter refit + refactor of a
     single study (rare, O(G n^3); per-study lag counters decide when).
 
-Host-side per-study telemetry (`n`, `since_refit`, `clamp_count`) reads
-slice straight out of the stacked scalars.
+**Device mesh** (DESIGN.md §8): with `cfg.mesh` set ("auto" or "SxR"),
+the stacked state is placed on a (study x restart) `jax.sharding.Mesh`
+(`repro.hpo.mesh`) and the batched closures (`suggest_all`,
+`append_masked`, `advance_all`) become `shard_map` programs — studies
+split across devices, restarts split within a study when shards remain.
+`mesh="none"` (default) is the degenerate unsharded case of the same
+closures; the routed single-study paths (`suggest_at`/`append_at`/
+`refit_at`) stay plain jit and read the sharded state through GSPMD.
+
+Host-side per-study telemetry: `n` and `since_refit` are mirrored in host
+numpy arrays (they evolve deterministically with the appends the engine
+itself dispatches), so capacity guards and the lag policy never sync the
+device state; `clamp_count` is data-dependent and reads the device
+(`clamp_counts()` fetches all studies in one transfer).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import acquisition as acq_mod
 from repro.core import gp as gp_mod
 from repro.core.kernels import KERNELS
+from repro.hpo import mesh as mesh_mod
 
 Array = jax.Array
 
@@ -55,7 +73,7 @@ class StudyEngine:
     """Stacked lazy-GP state + the jitted batched suggest/absorb closures.
 
     `cfg` is duck-typed (SchedulerConfig works): needs n_max, kernel, lag,
-    rho0, noise2, implementation, acq.
+    rho0, noise2, implementation, acq; optionally mesh (default "none").
     """
 
     def __init__(self, dim: int, cfg, n_studies: int):
@@ -68,17 +86,26 @@ class StudyEngine:
             n_max=cfg.n_max, dim=dim, kernel=cfg.kernel, lag=cfg.lag,
             noise2=cfg.noise2, rho0=cfg.rho0,
             implementation=cfg.implementation)
-        self.state = gp_mod.init_pool_state(self.gp_cfg, n_studies)
+        self.mesh = mesh_mod.build(getattr(cfg, "mesh", "none"),
+                                   n_studies, cfg.acq.restarts)
+        self.state = self.place(gp_mod.init_pool_state(self.gp_cfg,
+                                                       n_studies))
         self._lo = jnp.zeros((dim,))
         self._hi = jnp.ones((dim,))
         # The substrate knob is a Python constant inside the jitted closures:
-        # one compilation per configured implementation.
+        # one compilation per configured implementation.  Likewise the mesh:
+        # the shard_map wrapping happens at trace time, once per top_t.
         impl = cfg.implementation
+        hpo_mesh = self.mesh
+        r_shards = hpo_mesh.restart_shards if hpo_mesh else 1
+        r_axis = mesh_mod.RESTART_AXIS if r_shards > 1 else None
 
-        def suggest_one(st, key, top_t):
+        def suggest_one(st, key, top_t, sharded):
             return acq_mod.optimize_acquisition(
                 st, self.kernel, self._lo, self._hi, key, cfg.acq, top_t,
-                implementation=impl)
+                implementation=impl,
+                restart_axis=r_axis if sharded else None,
+                restart_shards=r_shards if sharded else 1)
 
         def append_one(st, x, y):
             return gp_mod.append(st, self.kernel, x, y, implementation=impl)
@@ -86,6 +113,13 @@ class StudyEngine:
         def masked_append_one(st, x, y, flag):
             new = append_one(st, x, y)
             return jax.tree.map(lambda o, n_: jnp.where(flag, n_, o), st, new)
+
+        def advance_one(st, x, y, flag, key, top_t, sharded):
+            # Fused serving round: masked absorb, then suggest from the
+            # updated posterior — one program residency for both.
+            st = masked_append_one(st, x, y, flag)
+            units, vals = suggest_one(st, key, top_t, sharded)
+            return st, units, vals
 
         def refit_one(st):
             params = gp_mod.refit_params(st, self.kernel,
@@ -98,18 +132,48 @@ class StudyEngine:
             # from the Gram under the CURRENT params (no grid refit).
             return gp_mod.refactor(st, self.kernel, implementation=impl)
 
-        self._suggest_all = jax.jit(
-            lambda state, keys, *, top_t: jax.vmap(
-                lambda st, k: suggest_one(st, k, top_t))(state, keys),
-            static_argnames=("top_t",))
+        if hpo_mesh is None:
+            self._suggest_all = jax.jit(
+                lambda state, keys, *, top_t: jax.vmap(
+                    lambda st, k: suggest_one(st, k, top_t, False))(state,
+                                                                    keys),
+                static_argnames=("top_t",))
+            self._append_masked = jax.jit(jax.vmap(masked_append_one))
+            self._advance_all = jax.jit(
+                lambda state, xs, ys, flags, keys, *, top_t: jax.vmap(
+                    lambda st, x, y, f, k: advance_one(
+                        st, x, y, f, k, top_t, False))(state, xs, ys,
+                                                       flags, keys),
+                static_argnames=("top_t",), donate_argnums=(0,))
+        else:
+            # Sharded variants: studies split over the mesh's study axis,
+            # restarts split over the restart axis inside each suggest.
+            self._suggest_all = jax.jit(
+                lambda state, keys, *, top_t: hpo_mesh.shard(
+                    lambda st, ks: jax.vmap(
+                        lambda s, k: suggest_one(s, k, top_t, True))(st, ks),
+                    n_in=2)(state, keys),
+                static_argnames=("top_t",))
+            self._append_masked = jax.jit(hpo_mesh.shard(
+                lambda st, x, y, f: jax.vmap(masked_append_one)(st, x, y, f),
+                n_in=4))
+            self._advance_all = jax.jit(
+                lambda state, xs, ys, flags, keys, *, top_t: hpo_mesh.shard(
+                    lambda st, x, y, f, k: jax.vmap(
+                        lambda s, x_, y_, f_, k_: advance_one(
+                            s, x_, y_, f_, k_, top_t, True))(st, x, y, f, k),
+                    n_in=5)(state, xs, ys, flags, keys),
+                static_argnames=("top_t",), donate_argnums=(0,))
+        # Routed single-study paths: plain jit; with a mesh active the
+        # sharded state flows through GSPMD's auto-partitioner (these are
+        # the rare paths — lag events and per-study routing).
         self._suggest_at = jax.jit(
             lambda state, i, key, *, top_t: suggest_one(
-                _index_state(state, i), key, top_t),
+                _index_state(state, i), key, top_t, False),
             static_argnames=("top_t",))
         self._append_at = jax.jit(
             lambda state, i, x, y: _write_state(
                 state, i, append_one(_index_state(state, i), x, y)))
-        self._append_masked = jax.jit(jax.vmap(masked_append_one))
         self._refit_at = jax.jit(
             lambda state, i: _write_state(
                 state, i, refit_one(_index_state(state, i))))
@@ -117,15 +181,42 @@ class StudyEngine:
             lambda state, i: _write_state(
                 state, i, reanchor_one(_index_state(state, i))))
 
+    def place(self, state: gp_mod.LazyGPState) -> gp_mod.LazyGPState:
+        """Put a stacked state onto the configured mesh (identity if none)."""
+        return self.mesh.place(state) if self.mesh else state
+
+    # -- state + host-side counter mirrors ----------------------------------
+    # `n` and `since_refit` evolve deterministically (+1 per append, refits
+    # reset since_refit), so the engine mirrors them in host numpy arrays:
+    # the hot paths (capacity guards, lag policy, the pool's seed-vs-EI
+    # routing) never sync the device state — on a sharded mesh a single
+    # `int(state.n[s])` read is a cross-device gather, and S of them per
+    # round would dominate the round itself.  Assigning `engine.state`
+    # re-syncs the mirrors from the device (restore, tests, prefill).
+
+    @property
+    def state(self) -> gp_mod.LazyGPState:
+        return self._state
+
+    @state.setter
+    def state(self, st: gp_mod.LazyGPState) -> None:
+        self._state = st
+        self._n_host = np.asarray(st.n).copy()
+        self._sr_host = np.asarray(st.since_refit).copy()
+
     # -- per-study telemetry (host-side) ------------------------------------
     def n(self, study: int) -> int:
-        return int(self.state.n[study])
+        return int(self._n_host[study])
 
     def since_refit(self, study: int) -> int:
-        return int(self.state.since_refit[study])
+        return int(self._sr_host[study])
 
     def clamp_count(self, study: int) -> int:
         return int(self.state.clamp_count[study])
+
+    def clamp_counts(self) -> np.ndarray:
+        """All studies' conditioning-floor counters in one transfer."""
+        return np.asarray(self.state.clamp_count)
 
     def study_state(self, study: int) -> gp_mod.LazyGPState:
         """Unstacked single-study view (static index)."""
@@ -146,11 +237,13 @@ class StudyEngine:
     def absorb(self, study: int, x, y) -> None:
         """Routed completion-order absorb (+ per-study lag policy)."""
         gp_mod.ensure_capacity(self.n(study), self.cfg.n_max)
-        self.state = self._append_at(
+        self._state = self._append_at(
             self.state, jnp.asarray(study, jnp.int32),
-            jnp.asarray(x, self.state.x_buf.dtype),
-            jnp.asarray(y, self.state.y_buf.dtype))
-        self._maybe_refit(study)
+            jnp.asarray(x, jnp.float32),
+            jnp.asarray(y, jnp.float32))
+        self._n_host[study] += 1
+        self._sr_host[study] += 1
+        self._refit_flagged([study])
 
     def absorb_round(self, flags, xs, ys) -> None:
         """Masked batched absorb: at most one new observation per study.
@@ -159,35 +252,70 @@ class StudyEngine:
         / `ys (S,)` carry the observations (ignored where flag is False).
         One dispatch replaces up to S routed appends.
         """
-        for s in range(self.n_studies):
-            if bool(flags[s]):
-                gp_mod.ensure_capacity(self.n(s), self.cfg.n_max)
-        self.state = self._append_masked(
+        flags = np.asarray(flags, bool)
+        flagged = np.flatnonzero(flags)
+        for s in flagged:
+            gp_mod.ensure_capacity(self.n(s), self.cfg.n_max)
+        self._state = self._append_masked(
             self.state,
-            jnp.asarray(xs, self.state.x_buf.dtype),
-            jnp.asarray(ys, self.state.y_buf.dtype),
-            jnp.asarray(flags, bool))
-        for s in range(self.n_studies):
-            if bool(flags[s]):
-                self._maybe_refit(s)
+            jnp.asarray(xs, jnp.float32),
+            jnp.asarray(ys, jnp.float32),
+            jnp.asarray(flags))
+        self._n_host[flagged] += 1
+        self._sr_host[flagged] += 1
+        self._refit_flagged(flagged)
 
-    def _maybe_refit(self, study: int) -> None:
-        """Per-study lag policy (host-side check; both events are rare).
+    # -- fused serving round ------------------------------------------------
+    def advance(self, flags, xs, ys, keys,
+                top_t: int = 1) -> tuple[Array, Array]:
+        """Masked absorb + batched suggest in ONE jitted dispatch.
+
+        Absorbs at most one flagged observation per study (exactly like
+        `absorb_round`), then suggests top-t points for EVERY study from
+        the updated posteriors, returning `((S, top_t, d), (S, top_t))`.
+        This is the serving-loop hot path: one program per round instead of
+        an absorb dispatch + a suggest dispatch, with the stacked state
+        buffers donated (updated in place, not copied).
+
+        The previous `self.state` is consumed by donation — callers must
+        not hold references to its buffers across this call.
+        """
+        flags = np.asarray(flags, bool)
+        flagged = np.flatnonzero(flags)
+        for s in flagged:
+            gp_mod.ensure_capacity(self.n(s), self.cfg.n_max)
+        self._state, units, vals = self._advance_all(
+            self.state,
+            jnp.asarray(xs, jnp.float32),
+            jnp.asarray(ys, jnp.float32),
+            jnp.asarray(flags), keys, top_t=top_t)
+        self._n_host[flagged] += 1
+        self._sr_host[flagged] += 1
+        self._refit_flagged(flagged)
+        return units, vals
+
+    def _refit_flagged(self, flagged) -> None:
+        """Apply the per-study lag policy after an absorb (host mirrors).
 
         lag > 0: full hyper-parameter refit + refactor every `lag` appends.
         lag <= 0 (the paper's fully-lazy mode): no param refit, but every
         `inv_refresh` appends the factor and its maintained inverse are
         rebuilt from the Gram under the current params — re-anchoring the
         float32 drift the incremental bordered-inverse updates accumulate
-        (DESIGN.md §4).  `refactor` resets `since_refit`, so one counter
-        drives both cadences.
+        (DESIGN.md §4).  Both events are rare O(n_max^3) dispatches; the
+        check itself reads only the host-side counter mirrors.
         """
-        if self.cfg.lag > 0:
-            if self.since_refit(study) >= self.cfg.lag:
-                self.state = self._refit_at(self.state,
-                                            jnp.asarray(study, jnp.int32))
-            return
+        lag = self.cfg.lag
         inv_refresh = getattr(self.cfg, "inv_refresh", 0)
-        if inv_refresh > 0 and self.since_refit(study) >= inv_refresh:
-            self.state = self._reanchor_at(self.state,
-                                           jnp.asarray(study, jnp.int32))
+        if lag <= 0 and inv_refresh <= 0:
+            return
+        for s in flagged:
+            if lag > 0:
+                if self.since_refit(s) >= lag:
+                    self._state = self._refit_at(
+                        self.state, jnp.asarray(s, jnp.int32))
+                    self._sr_host[s] = 0
+            elif self.since_refit(s) >= inv_refresh:
+                self._state = self._reanchor_at(
+                    self.state, jnp.asarray(s, jnp.int32))
+                self._sr_host[s] = 0

@@ -12,6 +12,12 @@ DESIGN.md §7):
   * **completion-order absorb** — results are routed to the owning study as
     they arrive (`absorb`), or drained in masked batched rounds
     (`absorb_many`) of at most one observation per study per dispatch.
+  * **fused serving rounds** — `advance_round` absorbs the last round's
+    completions AND suggests the next batch in ONE jitted program with
+    donated state buffers (the request-driven service hot path).
+  * **device mesh** — with `cfg.mesh` set, the batched rounds run as
+    `shard_map` programs over a (study x restart) mesh (DESIGN.md §8);
+    `mesh="none"` is the degenerate single-device case of the same code.
   * **per-study everything** — trial ledgers, PRNG streams, capacity
     guards, fault policy (retry / penalized pseudo-observation), lag
     counters, and clamp telemetry are tracked per tenant; one study filling
@@ -54,6 +60,12 @@ class SchedulerConfig:
     noise2: float = 1e-5
     seed: int = 0
     implementation: str = "auto"  # linalg substrate (auto|pallas|xla|ref)
+    mesh: str = "none"           # device mesh for the batched suggest path
+    # (DESIGN.md §8): "none" = single program on one device (default);
+    # "auto" = factor all visible devices into study x restart shards;
+    # "SxR" (e.g. "4x2") = explicit shard counts.  Threaded to StudyEngine
+    # exactly like `implementation`; "none" is the degenerate case of the
+    # same closures.
     failure_penalty: float | None = None  # None: drop; else pseudo-y
     max_retries: int = 1
     ckpt_dir: str | None = None
@@ -149,6 +161,22 @@ class StudyPool:
         h.key, sub = jax.random.split(h.key)
         return sub
 
+    def _split_many(self, ids: Sequence[int]) -> np.ndarray:
+        """Advance several studies' PRNG streams in ONE vmapped dispatch.
+
+        Returns the subkeys as a host `(len(ids), 2)` uint32 array; values
+        are bit-identical to per-study `_split` calls (threefry is
+        elementwise), so batched and routed suggest paths draw the same
+        streams.
+        """
+        if not ids:
+            return np.zeros((0, 2), np.uint32)
+        stacked = jnp.stack([self.studies[s].key for s in ids])
+        new = np.asarray(jax.vmap(jax.random.split)(stacked))
+        for j, s in enumerate(ids):
+            self.studies[s].key = jnp.asarray(new[j, 0])
+        return new[:, 1]
+
     def state(self, study_id: int) -> gp_mod.LazyGPState:
         """Unstacked single-study GP view."""
         return self.engine.study_state(study_id)
@@ -168,6 +196,28 @@ class StudyPool:
                                        top_t=t)
         return [self._make_trial(study_id, np.asarray(u)) for u in units]
 
+    def _check_capacity(self,
+                        events: Sequence[tuple[int, Trial, float]]) -> None:
+        """All-or-nothing capacity contract: validate the WHOLE queue
+        (per-study multiplicity included) BEFORE mutating any ledger, so a
+        `GPCapacityError` from one full study never leaves a neighbor's
+        trial marked done without its observation absorbed."""
+        counts: dict[int, int] = {}
+        for sid, _, _ in events:
+            counts[sid] = counts.get(sid, 0) + 1
+        for sid, c in counts.items():
+            gp_mod.ensure_capacity(self.engine.n(sid), self.cfg.n_max,
+                                   incoming=c)
+
+    def _staged_keys(self, ei_ids: Sequence[int]) -> jax.Array:
+        """(S, 2) key batch: fresh subkeys for `ei_ids` (their streams
+        advance, one batched split), dummy zeros for everyone else (their
+        lane computes alongside but the result is discarded)."""
+        subs = self._split_many(list(ei_ids))
+        keys_np = np.zeros((self.n_studies, 2), np.uint32)
+        keys_np[list(ei_ids)] = subs
+        return jnp.asarray(keys_np)
+
     def suggest_all(self, t: int = 1,
                     studies: Sequence[int] | None = None
                     ) -> dict[int, list[Trial]]:
@@ -180,23 +230,87 @@ class StudyPool:
         """
         ids = list(studies) if studies is not None else \
             list(range(self.n_studies))
-        need_ei = {s for s in ids if self.engine.n(s) > 0}
+        need_ei = sorted(s for s in ids if self.engine.n(s) > 0)
+        ei_set = set(need_ei)
         units_all = None
         if need_ei:
-            # Only the studies actually being suggested for advance their
-            # PRNG streams; the rest ride the batch with a dummy key (their
-            # lane computes alongside but the result is discarded).
-            dummy = jnp.zeros_like(jax.random.PRNGKey(0))
-            keys = jnp.stack([self._split(s) if s in need_ei else dummy
-                              for s in range(self.n_studies)])
-            units_all = np.asarray(
-                self.engine.suggest_all(keys, top_t=t)[0])
+            units_all = np.asarray(self.engine.suggest_all(
+                self._staged_keys(need_ei), top_t=t)[0])
         out: dict[int, list[Trial]] = {}
         for s in ids:
-            if s in need_ei:
+            if s in ei_set:
                 out[s] = [self._make_trial(s, u) for u in units_all[s]]
             else:
                 out[s] = self.seed_trials(s, t)
+        return out
+
+    def advance_round(self, events: Sequence[tuple[int, Trial, float]],
+                      t: int = 1,
+                      studies: Sequence[int] | None = None
+                      ) -> dict[int, list[Trial]]:
+        """Fused serving round: absorb completions + suggest in ONE dispatch.
+
+        The hot path of a request-driven service (`examples/hpo_service.py`,
+        `benchmarks/bench_shard.py`): one jitted program absorbs at most
+        one completed trial per study and suggests the next t points from
+        the updated posteriors (state buffers donated — no copy of the
+        stacked factors per round).  Suggestions are materialized as ledger
+        trials only for `studies` (default all) — e.g. tenants that hit
+        their budget absorb results without drawing new trials.  Events
+        beyond one per study fall back to an `absorb_many` drain first;
+        studies still empty after the absorb get host-side seed trials
+        instead of their EI lane's output, exactly like `suggest_all`.
+        Rounds with nothing to absorb skip the absorb half and delegate to
+        `suggest_all`; rounds with nobody to suggest for delegate to
+        `absorb_many`.
+        """
+        ids = list(studies) if studies is not None else \
+            list(range(self.n_studies))
+        if not events:
+            return self.suggest_all(t=t, studies=ids)
+        if not ids:
+            self.absorb_many(events)
+            return {}
+        first: dict[int, tuple[Trial, float]] = {}
+        overflow = []
+        for sid, tr, val in events:
+            if sid in first:
+                overflow.append((sid, tr, val))
+            else:
+                first[sid] = (tr, val)
+        self._check_capacity(events)
+        if overflow:
+            self.absorb_many(overflow)
+        dim = self.engine.gp_cfg.dim
+        flags = np.zeros((self.n_studies,), bool)
+        xs = np.zeros((self.n_studies, dim), np.float32)
+        ys = np.zeros((self.n_studies,), np.float32)
+        for sid, (tr, val) in first.items():
+            flags[sid] = True
+            xs[sid] = tr.unit
+            ys[sid] = float(val)
+            tr.status = "done"
+            tr.value = float(val)
+            tr.finished = time.time()
+        # Studies that will still be empty after this absorb get seed
+        # trials; only requested non-seed studies advance their streams.
+        need_seed = {s for s in ids
+                     if self.engine.n(s) == 0 and not flags[s]}
+        ei_ids = [s for s in ids if s not in need_seed]
+        units, _ = self.engine.advance(flags, xs, ys,
+                                       self._staged_keys(ei_ids), top_t=t)
+        units = np.asarray(units)
+        clamps = self.engine.clamp_counts()       # one transfer for all S
+        for sid, (tr, _) in first.items():
+            tr.clamp_count = int(clamps[sid])
+        self._n_done += len(first)
+        out: dict[int, list[Trial]] = {}
+        for s in ids:
+            if s in need_seed:
+                out[s] = self.seed_trials(s, t)
+            else:
+                out[s] = [self._make_trial(s, u) for u in units[s]]
+        self._maybe_checkpoint()
         return out
 
     # -- absorb -------------------------------------------------------------
@@ -223,17 +337,7 @@ class StudyPool:
         """
         queue = list(events)
         dim = self.engine.gp_cfg.dim
-        # Capacity-check the WHOLE queue (per-study multiplicity included)
-        # BEFORE mutating any ledger: a GPCapacityError from one full study
-        # must not leave a neighbor's trial marked done without its
-        # observation absorbed, nor silently drop later-round events — the
-        # drain is all-or-nothing with respect to capacity.
-        counts: dict[int, int] = {}
-        for sid, _, _ in queue:
-            counts[sid] = counts.get(sid, 0) + 1
-        for sid, c in counts.items():
-            gp_mod.ensure_capacity(self.engine.n(sid), self.cfg.n_max,
-                                   incoming=c)
+        self._check_capacity(queue)
         while queue:
             round_events: dict[int, tuple[Trial, float]] = {}
             rest = []
@@ -254,8 +358,9 @@ class StudyPool:
                 tr.value = float(val)
                 tr.finished = time.time()
             self.engine.absorb_round(flags, xs, ys)
+            clamps = self.engine.clamp_counts()   # one transfer for all S
             for sid, (tr, _) in round_events.items():
-                tr.clamp_count = self.engine.clamp_count(sid)
+                tr.clamp_count = int(clamps[sid])
             self._n_done += len(round_events)
         self._maybe_checkpoint()
 
@@ -333,7 +438,9 @@ class StudyPool:
                 f"checkpoint holds {meta.get('n_studies')} studies, "
                 f"pool has {self.n_studies}")
         tree["params"] = KernelParams(**tree["params"])
-        self.engine.state = gp_mod.LazyGPState(**tree)
+        # Re-place on the configured device mesh: a restored pool resumes
+        # with the same sharding layout the closures were built for.
+        self.engine.state = self.engine.place(gp_mod.LazyGPState(**tree))
         for rec in json.loads(meta["studies"]):
             h = self.studies[rec["study_id"]]
             h.name = rec["name"]

@@ -1,31 +1,29 @@
-"""HPO trial scheduler — the paper's parallel lazy-GP loop, production shape.
+"""HPO trial scheduler: the single-study objective execution loop.
 
 The paper's Sec. 3.4 insight: with O(n^2) GP updates, synchronization stops
 being the bottleneck, so you can (a) suggest the top-t EI local maxima and
 train t models concurrently, and (b) absorb results as *row appends* that
-commute under the frozen kernel.  This scheduler turns that into the
-1000-node orchestration contract:
+commute under the frozen kernel.
 
-  * **async absorption** — results are appended in *completion* order; a
-    straggler never blocks the GP or the next suggestion round (suggestions
-    can be issued from the current posterior at any time).
-  * **fault tolerance** — a failed trial (node crash, NaN loss) produces no
-    observation; the scheduler re-suggests from the posterior (optionally
-    recording a penalized pseudo-observation so EI avoids a crashing
-    region), and the GP state checkpoints with the trial ledger so a
-    restarted controller resumes with the identical posterior — and does
-    NOT re-run its random seed trials.
+`TrialScheduler` is the S = 1 degenerate case of
+`repro.hpo.pool.StudyPool` (DESIGN.md §7): suggest, absorb, fault policy,
+lag policy, and checkpointing all delegate to a one-study pool, so the
+scheduler and the multi-tenant pool share exactly one suggest/absorb code
+path — the `StudyEngine` jitted closures, sharded over a device mesh when
+`SchedulerConfig.mesh` is set (DESIGN.md §8).  What lives HERE is only the
+objective execution loop wrapped around that pool:
+
+  * **async absorption** — `run` feeds completed futures to the pool in
+    *completion* order; a straggler never blocks the GP or the next
+    suggestion round.
+  * **fault handling** — a failed trial (exception, non-finite loss) is
+    routed to the pool's retry/penalty policy; scheduler-side errors
+    (capacity, checkpoint IO) propagate instead of masquerading as trial
+    faults.
   * **elasticity** — the parallel width t is re-read every round, so the
-    suggestion batch tracks however many pod-slices are currently healthy.
-  * **lag policy** — every `lag` absorbed results, kernel params are refit
-    and the factor rebuilt (paper Fig. 6), amortizing the O(n^3) cost.
-
-Since the batched-study refactor (DESIGN.md §7) the scheduler is the S = 1
-degenerate case of `repro.hpo.pool.StudyPool`: suggest/absorb/fault/
-checkpoint all delegate to a one-study pool, so the scheduler and the
-multi-tenant pool share exactly one suggest/absorb code path (the
-`StudyEngine` jitted closures).  This module keeps only the objective
-execution loop (threads, retries, elastic width).
+    suggestion batch tracks however many workers are currently healthy.
+  * **resume** — a scheduler restored from a pool checkpoint goes straight
+    to EI suggestions; it never re-runs its random seed trials.
 """
 from __future__ import annotations
 

@@ -11,15 +11,42 @@ back, so callers never see alignment constraints.
 
 Two families of entry points:
 
-  * Active-shape ops (`matern52_gram`, `trsv`, `cholesky`, `chol_append`,
-    `gp_posterior_solve`) take exact (n, …) arrays.
-  * Padded-state ops (`padded_trsv`, `padded_cholesky`, `masked_gram`,
-    `padded_append_row`, `lazy_append`) understand the identity-padded
-    (n_max, n_max) buffers of DESIGN.md §3: the active top-left (n, n) block
-    is real data, the remainder is the identity, and right-hand sides are
-    zero beyond the active block.  These are what `repro.core` dispatches
-    through — no direct `solve_triangular` / dense-Cholesky call sites exist
-    above this module.
+  * Active-shape ops take exact (n, …) arrays.
+  * Padded-state ops understand the identity-padded (n_max, n_max) buffers
+    of DESIGN.md §3: the active top-left (n, n) block is real data, the
+    remainder is the identity, and right-hand sides are zero beyond the
+    active block.  These are what `repro.core` dispatches through — no
+    direct `solve_triangular` / dense-Cholesky call sites exist above this
+    module.
+
+The full dispatch surface (P = real Pallas kernel; x = served by the
+implementation; ref column = the jnp oracle in `ref.py`; "batched" = accepts
+a leading study axis per DESIGN.md §7):
+
+  op                 | shape contract    | pallas | xla | ref | batched | see
+  -------------------|-------------------|--------|-----|-----|---------|------
+  matern52_gram      | (n,d)x(m,d) exact |   P    |  x  |  x  | via gram | §6
+  trsv               | (n,n),(n[,r])     |   P    |  x  |  x  | no*      | §6
+  cholesky           | (n,n) SPD         |   P    |  x  |  x  | no*      | §6
+  chol_append        | active factor     |   P    |  x  |  x  | no*      | §6
+  gp_posterior_solve | active factor     |   P    |  x  |  x  | no*      | §6
+  kernel_gram        | any kernel fn     |   P†   |  x  |  x  | yes      | §6
+  masked_gram        | padded buffers    |   P†   |  x  |  x  | yes      | §3
+  padded_trsv        | padded buffers    |   P    |  x  |  x  | yes      | §3
+  padded_cholesky    | padded buffers    |   P    |  x  |  x  | yes      | §3
+  padded_tri_inverse | padded buffers    |   P    |  x  |  x  | yes      | §4
+  padded_append_row  | padded buffers    |   ‡    |  ‡  |  ‡  | yes      | §4,§7
+  lazy_append        | padded buffers    |   ‡    |  ‡  |  ‡  | yes      | §4,§7
+
+  *  active-shape ops serve the tests and naive baselines; the batched hot
+     path runs exclusively on the padded-state ops below them.
+  †  Pallas gram build applies when the kernel fn opts in via its
+     `pallas_gram` attribute (Matérn-2.5 does); other kernels fall back to
+     their own jnp formulation under every implementation.
+  ‡  matmul-only against the maintained inverse factor: mathematically the
+     same on every substrate (no dispatch below the entry point), which is
+     what keeps the batched/sharded study axis on the native GEMM path
+     (DESIGN.md §7/§8).
 
 The padded-state ops are **rank-polymorphic over a leading study axis**
 (DESIGN.md §7): stacked `(S, n_max, …)` buffers with a per-study active

@@ -1,0 +1,312 @@
+"""Device-mesh suggest path (DESIGN.md §8): spec parsing, placement, parity.
+
+The load-bearing contract: `mesh="none"` and every sharded mesh spec are
+the SAME computation — `suggest_all`, `absorb_round`, and the fused
+`advance` must agree to float32 tolerance on every substrate.  On a
+single device the `"1x1"` spec still exercises the full shard_map code
+path, so the parity tests run everywhere; multi-shard specs are covered
+when the suite runs under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI mesh job).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.acquisition import AcqConfig
+from repro.hpo import mesh as mesh_mod
+from repro.hpo.pool import SchedulerConfig, StudyPool
+from repro.hpo.space import RESNET_SPACE
+
+N_DEVICES = len(jax.devices())
+IMPLEMENTATIONS = ["xla", "ref", "pallas"]
+
+multi_device = pytest.mark.skipif(
+    N_DEVICES < 2,
+    reason="needs >= 2 devices (run with "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _cfg(mesh: str, implementation: str = "auto", **kw) -> SchedulerConfig:
+    kw.setdefault("n_max", 16)
+    kw.setdefault("acq", AcqConfig(restarts=8, ascent_steps=4))
+    return SchedulerConfig(seed=0, mesh=mesh, implementation=implementation,
+                           **kw)
+
+
+def _pool(mesh: str, n_studies: int = 4, **kw) -> StudyPool:
+    return StudyPool([RESNET_SPACE] * n_studies, _cfg(mesh, **kw))
+
+
+def _drive(pool: StudyPool, rounds: int = 3) -> list[np.ndarray]:
+    """Run fused advance rounds with a deterministic objective; collect
+    every round's suggested units."""
+    seen = []
+    out = pool.advance_round([])                       # seeds every study
+    for _ in range(rounds):
+        events = [(s, out[s][0],
+                   float(-np.sum((out[s][0].unit - 0.3 - 0.1 * s) ** 2)))
+                  for s in range(pool.n_studies)]
+        out = pool.advance_round(events)
+        seen.append(np.stack([out[s][0].unit for s in range(pool.n_studies)]))
+    return seen
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing and mesh construction
+# ---------------------------------------------------------------------------
+def test_parse_spec():
+    assert mesh_mod.parse_spec("none") is None
+    assert mesh_mod.parse_spec("") is None
+    assert mesh_mod.parse_spec("auto") == "auto"
+    assert mesh_mod.parse_spec("4x2") == (4, 2)
+    assert mesh_mod.parse_spec("8") == (8, 1)
+    with pytest.raises(ValueError, match="mesh spec"):
+        mesh_mod.parse_spec("4x2x1")
+    with pytest.raises(ValueError, match="mesh spec"):
+        mesh_mod.parse_spec("fast")
+
+
+def test_build_none_and_auto_single_device():
+    assert mesh_mod.build("none", 4, 8) is None
+    # auto on one device degenerates to the unsharded path
+    assert mesh_mod.build("auto", 4, 8,
+                          devices=jax.devices()[:1]) is None
+
+
+def test_build_explicit_1x1():
+    m = mesh_mod.build("1x1", 4, 8)
+    assert m is not None and m.n_devices == 1
+    assert m.mesh.axis_names == (mesh_mod.STUDY_AXIS, mesh_mod.RESTART_AXIS)
+
+
+def test_build_rejects_non_divisible_and_oversized():
+    with pytest.raises(ValueError, match="divide n_studies"):
+        mesh_mod.build("3x1", 4, 8, devices=jax.devices() * 4)
+    with pytest.raises(ValueError, match="divide acq.restarts"):
+        mesh_mod.build("1x3", 4, 8, devices=jax.devices() * 4)
+    with pytest.raises(ValueError, match="devices"):
+        mesh_mod.build(f"{N_DEVICES + 1}x1", N_DEVICES + 1, 8)
+
+
+@multi_device
+def test_build_auto_factors_devices():
+    m = mesh_mod.build("auto", 4, 8)
+    assert m is not None
+    assert 4 % m.study_shards == 0
+    assert 8 % m.restart_shards == 0
+    assert m.n_devices <= N_DEVICES
+
+
+# ---------------------------------------------------------------------------
+# Parity: mesh=none == sharded, per substrate (acceptance criterion)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_sharded_path_matches_unsharded_per_substrate(implementation):
+    """`mesh="1x1"` runs the full shard_map path on one device; its rounds
+    must match `mesh="none"` bit-for-tolerance on every substrate."""
+    a = _pool("none", implementation=implementation)
+    b = _pool("1x1", implementation=implementation)
+    got_a = _drive(a)
+    got_b = _drive(b)
+    for ua, ub in zip(got_a, got_b):
+        np.testing.assert_allclose(ua, ub, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(a.engine.state.l_buf),
+                               np.asarray(b.engine.state.l_buf),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.engine.state.alpha),
+                               np.asarray(b.engine.state.alpha),
+                               rtol=1e-4, atol=1e-5)
+
+
+@multi_device
+@pytest.mark.parametrize("spec", ["2x1", "1x2", "2x2"])
+def test_multi_shard_parity(spec):
+    """Study sharding, restart sharding, and both at once reproduce the
+    unsharded rounds (the all_gather reassembles the exact restart set)."""
+    a = _pool("none")
+    b = _pool(spec)
+    for ua, ub in zip(_drive(a), _drive(b)):
+        np.testing.assert_allclose(ua, ub, atol=2e-5)
+
+
+@multi_device
+def test_sharded_state_is_actually_sharded():
+    pool = _pool("2x1")
+    shards = pool.engine.state.l_buf.sharding
+    assert shards.is_fully_replicated is False
+
+
+def test_advance_matches_absorb_plus_suggest():
+    """The fused round == absorb_round then suggest_all (same keys)."""
+    a = _pool("none", n_studies=3)
+    b = _pool("none", n_studies=3)
+    out_a = a.advance_round([])
+    out_b = b.advance_round([])
+    events_a = [(s, out_a[s][0], 0.1 * s) for s in range(3)]
+    events_b = [(s, out_b[s][0], 0.1 * s) for s in range(3)]
+    # fused path
+    fused = a.advance_round(events_a)
+    # split path: masked absorb, then batched suggest with the same stream
+    b.absorb_many(events_b)
+    split = b.suggest_all(t=1)
+    for s in range(3):
+        np.testing.assert_allclose(fused[s][0].unit, split[s][0].unit,
+                                   atol=2e-5)
+    np.testing.assert_allclose(np.asarray(a.engine.state.l_buf),
+                               np.asarray(b.engine.state.l_buf),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# advance_round semantics (ledger, seeding, multiplicity, capacity)
+# ---------------------------------------------------------------------------
+def test_advance_round_seeds_empty_studies_then_suggests():
+    pool = _pool("none", n_studies=2)
+    out = pool.advance_round([])
+    assert set(out) == {0, 1}
+    # no observations yet: these are seed trials, pending in the ledger
+    assert all(tr.status == "pending" for trs in out.values() for tr in trs)
+    assert pool.engine.n(0) == 0
+    events = [(0, out[0][0], 1.0)]          # only study 0 completes
+    out2 = pool.advance_round(events)
+    assert out[0][0].status == "done" and out[0][0].value == 1.0
+    assert pool.engine.n(0) == 1 and pool.engine.n(1) == 0
+    # study 0 suggestion now comes from EI; study 1 is re-seeded
+    assert len(out2[0]) == 1 and len(out2[1]) == 1
+
+
+def test_advance_round_drains_multiplicity_overflow():
+    pool = _pool("none", n_studies=2)
+    out = pool.advance_round([])
+    extra = pool.seed_trials(0, 2)
+    events = [(0, out[0][0], 0.5), (0, extra[0], 0.6), (0, extra[1], 0.7)]
+    pool.advance_round(events)
+    assert pool.engine.n(0) == 3
+    assert [t.status for t in pool.studies[0].trials[:1]] == ["done"]
+    done_vals = sorted(t.value for t in pool.studies[0].trials
+                       if t.status == "done")
+    assert done_vals == [0.5, 0.6, 0.7]
+
+
+def test_advance_round_studies_filter_absorbs_without_suggesting():
+    """Tenants at budget absorb their completion but draw no new trial."""
+    pool = _pool("none", n_studies=3)
+    out = pool.advance_round([])
+    events = [(s, out[s][0], 0.2 * s) for s in range(3)]
+    out2 = pool.advance_round(events, studies=[0, 2])
+    assert set(out2) == {0, 2}
+    assert all(pool.engine.n(s) == 1 for s in range(3))   # all absorbed
+    # study 1 got no new trial: its only ledger entry is the done seed
+    assert [t.status for t in pool.studies[1].trials] == ["done"]
+    # absorb-only round (no suggest targets) also works
+    e2 = [(0, out2[0][0], 0.9)]
+    assert pool.advance_round(e2, studies=[]) == {}
+    assert pool.engine.n(0) == 2
+
+
+def test_advance_round_capacity_is_all_or_nothing():
+    from repro.core.gp import GPCapacityError
+    pool = _pool("none", n_studies=2, n_max=2)
+    out = pool.advance_round([])
+    e0 = [(0, out[0][0], 0.1), (1, out[1][0], 0.2)]
+    out = pool.advance_round(e0)
+    overfull = [(0, out[0][0], 0.3), (0, pool.seed_trials(0, 1)[0], 0.4),
+                (1, out[1][0], 0.5)]
+    with pytest.raises(GPCapacityError):
+        pool.advance_round(overfull)
+    # nothing was absorbed, no trial marked done by the failed round
+    assert pool.engine.n(0) == 1 and pool.engine.n(1) == 1
+    assert all(t.status != "done" for t in pool.studies[1].trials[1:])
+
+
+def test_advance_round_prng_stream_matches_suggest_all():
+    """advance_round's batched key split draws the same per-study stream
+    as suggest_all, so fused and unfused serving loops are reproducible."""
+    a = _pool("none", n_studies=3)
+    b = _pool("none", n_studies=3)
+    oa = a.advance_round([])
+    ob = b.suggest_all(t=1)
+    for s in range(3):
+        np.testing.assert_allclose(oa[s][0].unit, ob[s][0].unit)
+    ea = [(s, oa[s][0], float(s)) for s in range(3)]
+    eb = [(s, ob[s][0], float(s)) for s in range(3)]
+    oa2 = a.advance_round(ea)
+    b.absorb_many(eb)
+    ob2 = b.suggest_all(t=1)
+    for s in range(3):
+        np.testing.assert_allclose(oa2[s][0].unit, ob2[s][0].unit, atol=2e-5)
+
+
+def test_engine_counter_mirrors_track_device_state():
+    """The host mirrors of n/since_refit must agree with the device state
+    through fused rounds, routed absorbs, and external state assignment."""
+    pool = _pool("none", n_studies=2)
+    out = pool.advance_round([])
+    pool.advance_round([(s, out[s][0], 0.1) for s in range(2)])
+    pool.absorb(1, pool.seed_trials(1, 1)[0], 0.2)
+    eng = pool.engine
+    np.testing.assert_array_equal(
+        np.asarray([eng.n(0), eng.n(1)]), np.asarray(eng.state.n))
+    np.testing.assert_array_equal(
+        np.asarray([eng.since_refit(0), eng.since_refit(1)]),
+        np.asarray(eng.state.since_refit))
+    # external assignment re-syncs
+    eng.state = eng.state
+    assert eng.n(0) == int(eng.state.n[0])
+
+
+def test_checkpoint_restore_with_mesh(tmp_path):
+    """A pool restored onto a mesh resumes the identical posterior."""
+    cfg = dict(n_studies=2, ckpt_dir=str(tmp_path))
+    a = _pool("1x1", **cfg)
+    out = a.advance_round([])
+    a.advance_round([(s, out[s][0], 0.3 * (s + 1)) for s in range(2)])
+    a.checkpoint()
+    b = _pool("1x1", **cfg)
+    assert b.restore()
+    assert b.engine.n(0) == a.engine.n(0) == 1
+    np.testing.assert_allclose(np.asarray(a.engine.state.l_buf),
+                               np.asarray(b.engine.state.l_buf))
+    # restored pool continues the same PRNG streams
+    sa = a.suggest_all(t=1)
+    sb = b.suggest_all(t=1)
+    for s in range(2):
+        np.testing.assert_allclose(sa[s][0].unit, sb[s][0].unit, atol=2e-5)
+
+
+def test_lag_refit_triggers_through_advance():
+    """The per-study lag policy still fires on the fused path."""
+    pool = _pool("none", n_studies=2, lag=2,
+                 acq=AcqConfig(restarts=4, ascent_steps=2))
+    out = pool.advance_round([])
+    for _ in range(3):
+        events = [(s, out[s][0], float(np.random.default_rng(0).uniform()))
+                  for s in range(2)]
+        out = pool.advance_round(events)
+    # 3 absorbs with lag=2: a refit fired and reset the counter below 2
+    assert pool.engine.since_refit(0) < 2
+    assert int(pool.engine.state.since_refit[0]) == pool.engine.since_refit(0)
+
+
+def test_bad_mesh_spec_rejected_at_pool_construction():
+    # restarts=8 not divisible by 3 (or, on a 1-device host, too few
+    # devices) — either way the pool must refuse the spec up front.
+    with pytest.raises(ValueError, match="divide|devices"):
+        _pool("1x3")
+
+
+@multi_device
+def test_suggest_all_sharded_matches_unsharded_direct():
+    """Engine-level suggest_all parity under real multi-device sharding."""
+    a = _pool("none")
+    b = _pool("2x2" if N_DEVICES >= 4 else "2x1")
+    out_a = _drive(a, rounds=1)
+    out_b = _drive(b, rounds=1)
+    np.testing.assert_allclose(out_a[0], out_b[0], atol=2e-5)
+    keys = jnp.stack([jax.random.PRNGKey(7)] * 4)
+    ua, va = a.engine.suggest_all(keys, top_t=2)
+    ub, vb = b.engine.suggest_all(keys, top_t=2)
+    np.testing.assert_allclose(np.asarray(ua), np.asarray(ub), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,79 @@
+"""`hpo/space.py`: unit-cube round-trips on linear and log dimensions.
+
+The GP only ever sees the unit cube; these tests pin the contract that
+`to_unit` and `to_value` invert each other (including at the box edges),
+that out-of-range unit coordinates clamp instead of extrapolating, and
+that the preset spaces map named hyper-parameters consistently.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.hpo.space import (LENET_SPACE, LM_SPACE, RESNET_SPACE, Dim,
+                             SearchSpace)
+
+LIN = Dim("momentum", 0.0, 0.99)
+LOG = Dim("lr", 1e-4, 1e-1, "log")
+
+
+@pytest.mark.parametrize("dim", [LIN, LOG], ids=["linear", "log"])
+@pytest.mark.parametrize("u", [0.0, 0.25, 0.5, 0.75, 1.0])
+def test_unit_value_round_trip(dim, u):
+    v = dim.to_value(u)
+    assert dim.lo <= v <= dim.hi or math.isclose(v, dim.lo) \
+        or math.isclose(v, dim.hi)
+    assert dim.to_unit(v) == pytest.approx(u, abs=1e-12)
+
+
+@pytest.mark.parametrize("dim", [LIN, LOG], ids=["linear", "log"])
+def test_edges_map_exactly(dim):
+    assert dim.to_value(0.0) == pytest.approx(dim.lo, rel=1e-12)
+    assert dim.to_value(1.0) == pytest.approx(dim.hi, rel=1e-12)
+    assert dim.to_unit(dim.lo) == pytest.approx(0.0, abs=1e-12)
+    assert dim.to_unit(dim.hi) == pytest.approx(1.0, abs=1e-12)
+
+
+@pytest.mark.parametrize("dim", [LIN, LOG], ids=["linear", "log"])
+def test_out_of_range_unit_clamps(dim):
+    """EI ascent output is clipped to [0,1], but to_value must still be
+    safe against float spill beyond the box."""
+    assert dim.to_value(-0.25) == pytest.approx(dim.to_value(0.0))
+    assert dim.to_value(1.25) == pytest.approx(dim.to_value(1.0))
+
+
+def test_log_dim_is_geometric():
+    mid = LOG.to_value(0.5)
+    assert mid == pytest.approx(math.sqrt(LOG.lo * LOG.hi), rel=1e-9)
+
+
+def test_value_unit_round_trip_on_values():
+    for v in (1e-4, 3e-4, 1e-3, 0.05, 1e-1):
+        assert LOG.to_value(LOG.to_unit(v)) == pytest.approx(v, rel=1e-9)
+    for v in (0.0, 0.1, 0.42, 0.99):
+        assert LIN.to_value(LIN.to_unit(v)) == pytest.approx(v, abs=1e-12)
+
+
+@pytest.mark.parametrize("space", [LENET_SPACE, RESNET_SPACE, LM_SPACE],
+                         ids=["lenet", "resnet", "lm"])
+def test_space_hparams_round_trip(space):
+    rng = np.random.default_rng(0)
+    u = rng.uniform(size=space.dim).astype(np.float32)
+    hp = space.to_hparams(u)
+    assert list(hp) == space.names
+    back = space.to_unit(hp)
+    np.testing.assert_allclose(back, u, atol=1e-5)
+
+
+def test_space_sample_shape_dtype_and_range():
+    rng = np.random.default_rng(1)
+    s = RESNET_SPACE.sample(rng, 7)
+    assert s.shape == (7, RESNET_SPACE.dim)
+    assert s.dtype == np.float32
+    assert (s >= 0.0).all() and (s <= 1.0).all()
+
+
+def test_custom_space_dim_property():
+    sp = SearchSpace((LIN, LOG))
+    assert sp.dim == 2
+    assert sp.names == ["momentum", "lr"]
