@@ -1,0 +1,136 @@
+"""Serving-gateway benchmark: coalesced ask–tell vs per-client dispatches.
+
+The gateway claim (DESIGN.md §9): under concurrent ask–tell traffic, one
+fused `advance_round` per coalescing tick beats serving each client with
+its own routed suggest + absorb dispatches, because per-study device work
+is tiny (the paper's O(n^2) append) and program-launch overhead dominates.
+This bench measures exactly that at 16 concurrent clients:
+
+  * **coalesced**  — a `StudyGateway` with one slot per client: each round,
+    all 16 asks coalesce into ONE fused dispatch (absorb last round's 16
+    tells + suggest 16 next points), driven by asyncio clients.
+  * **serialized** — the same `StudyPool` shape served naively: every
+    client's ask is its own routed `suggest` dispatch and every tell its
+    own routed `absorb` dispatch (2 x 16 programs per round).
+
+Both sides run identical GP shapes, acquisition budgets, observation
+counts, and substrate.  Emits `name,us_per_call,derived` CSV rows for
+`benchmarks.run` and writes `BENCH_serve.json` with suggestions/sec both
+ways, the speedup (the acceptance floor is >= 2x), and gateway tick
+telemetry.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.acquisition import AcqConfig
+from repro.hpo.gateway import GatewayConfig, StudyGateway
+from repro.hpo.pool import SchedulerConfig, StudyPool
+from repro.hpo.space import RESNET_SPACE
+
+JSON_PATH = "BENCH_serve.json"
+
+CLIENTS = 16
+
+
+def _objective(sid: int, unit: np.ndarray) -> float:
+    c = 0.2 + 0.6 * (sid % 7) / 7.0
+    return float(-np.sum((np.asarray(unit) - c) ** 2))
+
+
+def _cfg(n_max: int, ckpt_dir: str | None = None) -> SchedulerConfig:
+    # Small acquisition budget: the bench measures serving overhead, not
+    # ascent quality.  Identical on both sides.
+    return SchedulerConfig(n_max=n_max, seed=0, ckpt_dir=ckpt_dir,
+                           ckpt_every=10 ** 9,
+                           acq=AcqConfig(restarts=16, ascent_steps=8))
+
+
+def _bench_coalesced(d: str, n_max: int, warmup: int,
+                     rounds: int) -> tuple[float, dict]:
+    gw = StudyGateway(RESNET_SPACE, _cfg(n_max, d),
+                      GatewayConfig(slots=CLIENTS))
+    sids = [gw.create_study() for _ in range(CLIENTS)]
+
+    async def round_all():
+        trials = await asyncio.gather(*(gw.ask(s) for s in sids))
+        for s, tr in zip(sids, trials):
+            gw.tell(s, tr, _objective(s, tr.unit))
+        await gw.drain()
+
+    async def main():
+        for _ in range(warmup):
+            await round_all()
+        gw.stats.clear()   # telemetry from measured ticks only: the first
+        # warmup tick is the jit compile (~seconds) and would own the p95
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            await round_all()
+        dt = time.perf_counter() - t0
+        await gw.aclose()
+        return dt
+
+    dt = asyncio.run(main())
+    return dt, gw.summary()
+
+
+def _bench_serialized(n_max: int, warmup: int, rounds: int) -> float:
+    pool = StudyPool([RESNET_SPACE] * CLIENTS, _cfg(n_max))
+
+    def round_all():
+        # one routed suggest + one routed absorb PER CLIENT: the naive
+        # service loop the gateway's coalescing replaces
+        trials = [pool.suggest(s, 1)[0] for s in range(CLIENTS)]
+        for s, tr in enumerate(trials):
+            pool.absorb(s, tr, _objective(s, tr.unit))
+
+    for _ in range(warmup):
+        round_all()
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        round_all()
+    return time.perf_counter() - t0
+
+
+def run(full: bool = False, json_path: str = JSON_PATH):
+    n_max = 128
+    warmup, rounds = (3, 12) if full else (2, 8)
+    with tempfile.TemporaryDirectory() as d:
+        co_s, summary = _bench_coalesced(d, n_max, warmup, rounds)
+    ser_s = _bench_serialized(n_max, warmup, rounds)
+    ops = CLIENTS * rounds
+    rec = {
+        "clients": CLIENTS,
+        "n_max": n_max,
+        "rounds": rounds,
+        "coalesced_suggestions_per_sec": ops / co_s,
+        "serialized_suggestions_per_sec": ops / ser_s,
+        "coalesced_round_ms": 1e3 * co_s / rounds,
+        "serialized_round_ms": 1e3 * ser_s / rounds,
+        "speedup": ser_s / co_s,
+        "mean_coalesce_width": summary["mean_coalesce_width"],
+        "p50_tick_ms": summary["p50_tick_ms"],
+        "p95_tick_ms": summary["p95_tick_ms"],
+    }
+    import jax
+    payload = {"backend": jax.default_backend(), "results": [rec]}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return [
+        f"serve_coalesced,{1e6 * co_s / ops:.0f},"
+        f"suggest_per_s={rec['coalesced_suggestions_per_sec']:.1f} "
+        f"width={rec['mean_coalesce_width']:.1f}",
+        f"serve_serialized,{1e6 * ser_s / ops:.0f},"
+        f"suggest_per_s={rec['serialized_suggestions_per_sec']:.1f}",
+        f"serve_speedup,,{rec['speedup']:.2f}x_at_{CLIENTS}_clients",
+        f"serve_json,,path={json_path}",
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
                       emits BENCH_pool.json
   * bench_shard    — device-mesh suggest-round scaling at 1/2/4/8 devices,
                       emits BENCH_shard.json
+  * bench_serve    — coalesced ask–tell gateway vs per-client dispatches
+                      at 16 concurrent clients, emits BENCH_serve.json
 
 `python -m benchmarks.run [--full] [--only NAME]`.  The roofline analysis
 (§Roofline) is separate: `python -m benchmarks.roofline results/*.jsonl`
@@ -34,7 +36,7 @@ def main() -> None:
 
     from benchmarks import (bench_cholesky, bench_lag, bench_levy,
                             bench_nn_hpo, bench_parallel, bench_pool,
-                            bench_shard, bench_substrate)
+                            bench_serve, bench_shard, bench_substrate)
     suites = {
         "cholesky": lambda: bench_cholesky.run(full=args.full),
         "levy": lambda: bench_levy.run(full=args.full),
@@ -44,6 +46,7 @@ def main() -> None:
         "substrate": lambda: bench_substrate.run(full=args.full),
         "pool": lambda: bench_pool.run(full=args.full),
         "shard": lambda: bench_shard.run(full=args.full),
+        "serve": lambda: bench_serve.run(full=args.full),
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

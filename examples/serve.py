@@ -1,70 +1,143 @@
-"""Batched serving: prefill a prompt batch, then decode with a KV cache.
+"""Async ask–tell HPO serving: many clients, one coalesced gateway.
 
-    python examples/serve.py [--arch granite-3-2b] [--batch 4] [--new 32]
+    python examples/serve.py [--studies 12] [--slots 4] [--budget 8] \
+        [--coalesce-ms 2] [--ckpt-dir /tmp/gw]
 
-Uses each arch's real serve path: KV caches for attention stacks, latent
-caches for MLA, recurrent states for Mamba2/xLSTM — the same `prefill` /
-`decode_step` the multi-pod dry-run lowers at 32k/500k.
+The ROADMAP's "serve heavy traffic" shape end-to-end (DESIGN.md §9): N
+asynchronous clients each run their own HPO study through the gateway's
+`ask`/`tell` API.  Concurrent asks coalesce into ONE fused batched round
+per tick; with `--slots` below `--studies` the pool serves more logical
+studies than resident GP slots, transparently evicting idle studies to
+per-study checkpoints and restoring them on their next ask.  With
+--ckpt-dir pointing at a persistent directory a second invocation restores
+the whole gateway and every tenant resumes exactly where it stopped.
+
+Each client optimizes its own synthetic objective (a shifted smooth bowl on
+the unit cube, distinct optimum per tenant) with a touch of simulated
+training latency, so the final report shows per-study convergence plus the
+gateway's serving telemetry (coalesce width, tick latency, evictions).
 """
 import argparse
+import asyncio
 import sys
+import tempfile
 import time
+
+import numpy as np
 
 sys.path.insert(0, "src")
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
+from repro.core import GPCapacityError  # noqa: E402
+from repro.core.acquisition import AcqConfig  # noqa: E402
+from repro.hpo.gateway import GatewayConfig, StudyGateway  # noqa: E402
+from repro.hpo.pool import SchedulerConfig  # noqa: E402
+from repro.hpo.space import RESNET_SPACE  # noqa: E402
 
-from repro.configs import get_config  # noqa: E402
-from repro.models import decode_step, init_params, prefill  # noqa: E402
+
+def make_objective(sid: int, latency: float):
+    center = 0.15 + 0.7 * ((sid * 0.37) % 1.0)
+
+    async def objective(unit: np.ndarray) -> float:
+        await asyncio.sleep(latency * (1.0 + 0.5 * ((sid + 1) % 3)))
+        return float(-np.sum((np.asarray(unit) - center) ** 2))
+
+    return objective
+
+
+async def client(gw: StudyGateway, sid: int, budget: int, latency: float):
+    objective = make_objective(sid, latency)
+    for _ in range(budget):
+        try:
+            trial = await gw.ask(sid)
+        except GPCapacityError as e:
+            # a resumed study can hit its n_max (the buffers are sized at
+            # construction and shape-checked on restore) — report cleanly
+            # instead of crashing the whole serving loop
+            print(f"  {gw.study_info(sid)['name']}: full ({e})")
+            break
+        value = await objective(trial.unit)
+        gw.tell(sid, trial, value)
+    await gw.drain()
+
+
+async def serve(args, ckpt_dir: str) -> None:
+    cfg = SchedulerConfig(n_max=args.budget + 8, seed=0,
+                          implementation=args.implementation,
+                          ckpt_dir=ckpt_dir, ckpt_every=10 ** 9,
+                          acq=AcqConfig(restarts=16, ascent_steps=8))
+    gw = StudyGateway(RESNET_SPACE, cfg,
+                      GatewayConfig(slots=args.slots,
+                                    coalesce_ms=args.coalesce_ms))
+    # A fresh directory returns False; an INCOMPATIBLE checkpoint (e.g. a
+    # --slots or --budget change reshaping the pool) raises ValueError —
+    # let it surface rather than silently starting fresh over the old
+    # tenants' history.
+    restored = gw.restore()
+    if restored:
+        sids = gw.study_ids()
+        print("resumed gateway: " + ", ".join(
+            "{name} n={n_obs}".format(**gw.study_info(s)) for s in sids))
+    else:
+        sids = [gw.create_study(name=f"tenant{i}")
+                for i in range(args.studies)]
+
+    served_before = gw.summary()["asks_served"]   # lifetime totals ride
+    # the checkpoint registry: report only THIS invocation's traffic
+    t0 = time.perf_counter()
+    await asyncio.gather(*(client(gw, s, args.budget, args.latency)
+                           for s in sids))
+    elapsed = time.perf_counter() - t0
+    summary = gw.summary()
+    served = summary["asks_served"] - served_before
+    gw.checkpoint()
+    await gw.aclose()
+
+    total = sum(gw.study_info(s)["n_obs"] for s in sids)
+    print(f"\nserved {served} suggestions "
+          f"({total} absorbed total) for {len(sids)} tenants on "
+          f"{args.slots} slots in {elapsed:.2f}s "
+          f"({served / max(elapsed, 1e-9):.1f} suggestions/s)")
+    print(f"ticks={summary['ticks']} "
+          f"mean_coalesce_width={summary['mean_coalesce_width']:.1f} "
+          f"p50_tick={summary['p50_tick_ms']:.1f}ms "
+          f"p95_tick={summary['p95_tick_ms']:.1f}ms "
+          f"evictions={summary['evictions']} "
+          f"restores={summary['restores']}")
+    for s in sids:
+        info = gw.study_info(s)
+        slot = "evicted" if not info["resident"] else f"slot {info['slot']}"
+        line = f"  {info['name']}: n={info['n_obs']} ({slot}"
+        if info["evictions"]:
+            line += f", {info['evictions']} evictions"
+        line += ")"
+        if info["best_value"] is not None:
+            line += f" best={info['best_value']:+.4f}"
+        print(line)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-2b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--studies", type=int, default=12,
+                    help="concurrent logical studies (clients)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="resident GP slots (< studies exercises eviction)")
+    ap.add_argument("--budget", type=int, default=8,
+                    help="observations per study")
+    ap.add_argument("--latency", type=float, default=0.01,
+                    help="simulated per-trial train time (s)")
+    ap.add_argument("--coalesce-ms", type=float, default=0.0,
+                    help="tick gathering window")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="persistent dir: a 2nd run resumes every tenant")
+    ap.add_argument("--implementation", default="auto",
+                    choices=["auto", "pallas", "xla", "ref"])
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=True)
-    if not cfg.supports_decode:
-        raise SystemExit(f"{args.arch} is encoder-only: no decode path")
-    key = jax.random.PRNGKey(0)
-    params, _ = init_params(cfg, key)
-    max_len = args.prompt_len + args.new
-
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-
-    jit_prefill = jax.jit(lambda p, t: prefill(p, cfg, t, max_len))
-    jit_decode = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t),
-                         donate_argnums=(1,))
-
-    t0 = time.perf_counter()
-    logits, cache = jax.block_until_ready(jit_prefill(params, prompts))
-    t_prefill = time.perf_counter() - t0
-
-    toks = []
-    key_s = key
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    t0 = time.perf_counter()
-    for i in range(args.new):
-        toks.append(tok)
-        logits, cache = jit_decode(params, cache, tok)
-        key_s = jax.random.fold_in(key_s, i)
-        tok = jax.random.categorical(
-            key_s, logits[:, -1] / args.temperature)[:, None].astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    out = jnp.concatenate(toks, axis=1)
-    print(f"arch={cfg.name}  prefill {args.batch}x{args.prompt_len} tokens "
-          f"in {1e3 * t_prefill:.1f} ms")
-    print(f"decoded {args.batch}x{args.new} tokens in {1e3 * t_decode:.1f} ms"
-          f"  ({args.batch * args.new / t_decode:.0f} tok/s, incl. compile)")
-    print("sampled ids (seq 0):", out[0].tolist())
+    if args.ckpt_dir:
+        asyncio.run(serve(args, args.ckpt_dir))
+    else:
+        with tempfile.TemporaryDirectory() as d:
+            asyncio.run(serve(args, d))
 
 
 if __name__ == "__main__":

@@ -1,5 +1,10 @@
 """Atomic checkpoint store (fault-tolerance substrate)."""
-from repro.checkpoint.store import (committed_steps, latest_step, restore,
-                                    restore_latest, save)
-__all__ = ["committed_steps", "latest_step", "restore", "restore_latest",
-           "save"]
+from repro.checkpoint.store import (committed_steps, drop_studies,
+                                    latest_step, list_studies,
+                                    prune_studies, restore,
+                                    restore_latest, restore_study, save,
+                                    save_study, study_dir)
+__all__ = ["committed_steps", "drop_studies", "latest_step",
+           "list_studies",
+           "prune_studies", "restore", "restore_latest", "restore_study",
+           "save", "save_study", "study_dir"]

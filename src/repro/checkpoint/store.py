@@ -136,6 +136,15 @@ def restore(ckpt_dir: str, step: int, like: PyTree,
         if str(arr.dtype) != saved_dtype:
             arr = arr.view(np.dtype(getattr(ml_dtypes, saved_dtype, None)
                                     or saved_dtype))
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            # names alone don't catch a resized buffer (e.g. a pool rebuilt
+            # with a different n_max): restoring it would silently clamp
+            # out-of-bounds appends onto the last row instead of erroring
+            raise ValueError(
+                f"checkpoint shape mismatch at {names[i]}: saved "
+                f"{tuple(arr.shape)}, expected {tuple(np.shape(ref))} "
+                "(was the state rebuilt with a different n_max, dim, or "
+                "number of studies?)")
         if hasattr(ref, "dtype") and arr.dtype != ref.dtype:
             arr = arr.astype(ref.dtype)
         new_leaves.append(arr)
@@ -149,3 +158,83 @@ def restore_latest(ckpt_dir: str, like: PyTree,
         return None
     tree, meta = restore(ckpt_dir, step, like, shard_id)
     return step, tree, meta
+
+
+# ---------------------------------------------------------------------------
+# Per-study partial snapshots (the gateway's eviction store, DESIGN.md §9).
+#
+# A whole-pool snapshot serializes the full stacked state; evicting ONE
+# study must not.  Each study gets its own step-versioned directory under
+# `ckpt_dir/studies/<study>/` using the exact same atomic save/restore
+# protocol (COMMITTED marker, keep-N gc), so partial snapshots coexist with
+# whole-pool `step_*` snapshots in one checkpoint root: the pool-level gc
+# only touches `step_*` entries and never descends into `studies/`.
+# ---------------------------------------------------------------------------
+
+def study_dir(ckpt_dir: str, study: str) -> str:
+    if "/" in study or study.startswith("."):
+        raise ValueError(f"bad study key {study!r}")
+    return os.path.join(ckpt_dir, "studies", study)
+
+
+def save_study(ckpt_dir: str, study: str, version: int, tree: PyTree,
+               metadata: dict | None = None) -> str:
+    """Atomically snapshot one study at `version` (monotonic per study).
+
+    No garbage collection happens here: a whole-pool snapshot's registry
+    references exact versions, so versions may only be pruned once a newer
+    pool snapshot commits (`prune_studies`) — otherwise a crash after two
+    evictions of the same study would leave the registry pointing at a
+    gc'd version.
+    """
+    return save(study_dir(ckpt_dir, study), version, tree,
+                metadata=metadata, keep=10 ** 9)
+
+
+def restore_study(ckpt_dir: str, study: str, like: PyTree,
+                  version: int | None = None
+                  ) -> tuple[int, PyTree, dict] | None:
+    """One study's committed snapshot: exact `version`, or latest if None.
+
+    Crash recovery MUST pass the version its registry recorded — snapshots
+    written after that registry was checkpointed contain future state.
+    """
+    d = study_dir(ckpt_dir, study)
+    if version is None:
+        return restore_latest(d, like)
+    if version not in committed_steps(d):
+        return None
+    tree, meta = restore(d, version, like)
+    return version, tree, meta
+
+
+def prune_studies(ckpt_dir: str, keep_from: dict[str, int]) -> None:
+    """Drop per-study snapshot versions below each study's floor.
+
+    Called after a whole-pool snapshot commits: its registry references
+    `keep_from[study]`, so everything older is unreachable from the latest
+    recovery point."""
+    for study, floor in keep_from.items():
+        d = study_dir(ckpt_dir, study)
+        for s in committed_steps(d):
+            if s < floor:
+                shutil.rmtree(os.path.join(d, f"step_{s:09d}"),
+                              ignore_errors=True)
+
+
+def drop_studies(ckpt_dir: str, studies: list[str]) -> None:
+    """Delete whole per-study snapshot directories (closed tenants).
+
+    Like `prune_studies`, only call this AFTER a whole-pool snapshot that
+    no longer references the studies has committed — a crash before that
+    commit restores a registry that still expects them on disk."""
+    for study in studies:
+        shutil.rmtree(study_dir(ckpt_dir, study), ignore_errors=True)
+
+
+def list_studies(ckpt_dir: str) -> list[str]:
+    root = os.path.join(ckpt_dir, "studies")
+    if not os.path.isdir(root):
+        return []
+    return sorted(d for d in os.listdir(root)
+                  if committed_steps(os.path.join(root, d)))

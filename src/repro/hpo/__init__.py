@@ -1,14 +1,17 @@
-"""HPO orchestration: search spaces, the single-study scheduler, and the
-multi-tenant StudyPool — all sharing one batched suggest/absorb engine
-(DESIGN.md §7), optionally sharded over a device mesh via `repro.hpo.mesh`
-(DESIGN.md §8, `SchedulerConfig.mesh`)."""
+"""HPO orchestration: search spaces, the single-study scheduler, the
+multi-tenant StudyPool, and the async ask–tell StudyGateway — all sharing
+one batched suggest/absorb engine (DESIGN.md §7), optionally sharded over a
+device mesh via `repro.hpo.mesh` (DESIGN.md §8, `SchedulerConfig.mesh`);
+the gateway serving semantics are DESIGN.md §9."""
 from repro.hpo.engine import StudyEngine
+from repro.hpo.gateway import GatewayConfig, StudyGateway
 from repro.hpo.pool import SchedulerConfig, StudyPool, Trial
 from repro.hpo.scheduler import TrialScheduler
 from repro.hpo.space import (LENET_SPACE, LM_SPACE, RESNET_SPACE, Dim,
                              SearchSpace)
 
 __all__ = [
-    "Dim", "LENET_SPACE", "LM_SPACE", "RESNET_SPACE", "SchedulerConfig",
-    "SearchSpace", "StudyEngine", "StudyPool", "Trial", "TrialScheduler",
+    "Dim", "GatewayConfig", "LENET_SPACE", "LM_SPACE", "RESNET_SPACE",
+    "SchedulerConfig", "SearchSpace", "StudyEngine", "StudyGateway",
+    "StudyPool", "Trial", "TrialScheduler",
 ]

@@ -180,6 +180,10 @@ class StudyEngine:
         self._reanchor_at = jax.jit(
             lambda state, i: _write_state(
                 state, i, reanchor_one(_index_state(state, i))))
+        # Slot-level state swap (the gateway's evict/restore hook): scatter a
+        # single-study state into the stack at a traced index — any slot hits
+        # the same compilation, so serving-time restores never re-trace.
+        self._load_at = jax.jit(_write_state)
 
     def place(self, state: gp_mod.LazyGPState) -> gp_mod.LazyGPState:
         """Put a stacked state onto the configured mesh (identity if none)."""
@@ -221,6 +225,25 @@ class StudyEngine:
     def study_state(self, study: int) -> gp_mod.LazyGPState:
         """Unstacked single-study view (static index)."""
         return gp_mod.unstack_state(self.state, study)
+
+    # -- slot-level state swap (gateway evict/restore, DESIGN.md §9) --------
+    def load_slot(self, slot: int, sub: gp_mod.LazyGPState) -> None:
+        """Swap a single-study state INTO stack slot `slot`.
+
+        One jitted scatter at a traced index (no re-trace per slot); the
+        host mirrors are patched for that slot only, so loading a study
+        never syncs the other S-1 lanes off the device.  The write is
+        elementwise, so the restored lane is bitwise-identical to the
+        exported one — the evict/restore-exactness contract.
+        """
+        self._state = self.place(self._load_at(
+            self.state, jnp.asarray(slot, jnp.int32), sub))
+        self._n_host[slot] = int(sub.n)
+        self._sr_host[slot] = int(sub.since_refit)
+
+    def reset_slot(self, slot: int) -> None:
+        """Blank a slot for a new tenant (fresh empty single-study state)."""
+        self.load_slot(slot, gp_mod.init_state(self.gp_cfg))
 
     # -- suggest ------------------------------------------------------------
     def suggest(self, study: int, key: Array,

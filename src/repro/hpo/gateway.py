@@ -1,0 +1,806 @@
+"""Async ask–tell serving gateway: many concurrent clients, one fused round.
+
+`StudyGateway` is the traffic-facing layer of the stack (DESIGN.md §9): it
+multiplexes an unbounded population of *logical* studies onto one
+`StudyPool`/`StudyEngine` with a fixed number of resident *slots* in the
+stacked `(S, …)` state.  Three mechanisms make that serve:
+
+  * **coalescing tick** — concurrent `ask()`s (and queued `tell()`s) are
+    gathered for a configurable window and served by ONE fused
+    `pool.advance_round` dispatch: the masked absorb of every queued
+    completion and the batched EI suggest for every asking study run in a
+    single jitted program per tick, not one program per caller.
+  * **slot lifecycle** — `create_study` registers a logical study without
+    claiming a slot; the first `ask` allocates one (free-list).  When slots
+    run out, the least-recently-used *idle* resident study (nothing in
+    flight, nothing queued) is evicted to a per-study partial snapshot
+    (`checkpoint.save_study`) and transparently restored on its next `ask`
+    — the pool serves more logical studies than resident slots.  Eviction
+    is exact: the slot swap is an elementwise scatter and the vmapped lanes
+    are independent, so an evicted-and-restored study produces bitwise-
+    identical suggestions to one that stayed resident (test-enforced).
+  * **admission control** — bounded ask queue, per-study in-flight caps,
+    and a capacity-aware reject: an `ask` whose eventual `tell` could not
+    fit the study's `(n_max, …)` buffers is refused up front with
+    `GPCapacityError` (the same error the absorb path raises), never after
+    the client has already trained a model.
+
+`tell` routes through the existing masked-absorb path (`advance_round` /
+`absorb_many`), so the all-or-nothing capacity contract and the per-study
+PRNG persistence of PRs 1–3 carry over unchanged; per-study random streams
+are seeded by *logical* id, so what a tenant is suggested never depends on
+which slot it lands in.
+
+The gateway is asyncio-native and single-threaded: `ask` is a coroutine,
+`tell` a plain enqueue, and one background ticker task drives the rounds.
+Synchronous callers (tests, benchmarks) can instead call `tick()` directly
+for deterministic control.  Telemetry per tick (coalesce width, queue
+depth, latency, evictions) accumulates in `gateway.stats`.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import time
+from collections import deque
+
+import numpy as np
+
+from repro import checkpoint as ckpt_mod
+from repro.core.gp import GPCapacityError
+from repro.hpo.pool import SchedulerConfig, StudyPool, Trial
+from repro.hpo.space import Dim, SearchSpace
+
+__all__ = ["GatewayConfig", "StudyGateway"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GatewayConfig:
+    """Serving-layer knobs (the GP/pool shape comes from SchedulerConfig)."""
+
+    slots: int = 8            # resident studies (the stacked S axis)
+    coalesce_ms: float = 0.0  # tick gathering window; 0 = one event-loop
+    # yield (everything already enqueued by runnable clients coalesces)
+    max_batch: int = 0        # asks served per tick (0 = no cap)
+    max_queue: int = 1024     # queued asks across all studies (admission)
+    max_inflight: int = 4     # per-study suggestions outstanding (ask - tell)
+    stats_window: int = 4096  # per-tick telemetry records retained
+    ckpt_every_ticks: int = 0  # whole-gateway snapshot cadence (0 = only
+    # explicit checkpoint() calls).  The pool's own per-absorb cadence is
+    # disabled under a gateway: a bare pool snapshot has no gateway
+    # registry and could shadow a restorable one.
+
+
+@dataclasses.dataclass
+class _Logical:
+    """Gateway-side record of one logical study (resident or evicted)."""
+
+    sid: int
+    name: str
+    space: SearchSpace
+    seed: int
+    slot: int | None = None   # resident slot, None = evicted / never placed
+    n_obs: int = 0            # absorbed observations (survives eviction)
+    best_value: float | None = None  # max told value (residency-independent
+    # — the resident ledger leaves with the study on eviction)
+    inflight: int = 0         # suggestions handed out, not yet told back
+    pending_asks: int = 0
+    pending_tells: int = 0
+    last_tick: int = 0        # LRU stamp
+    version: int = 0          # eviction snapshot counter (monotonic)
+    evicted_ever: bool = False
+
+
+class StudyGateway:
+    """Asynchronous ask–tell front end over one multi-tenant StudyPool."""
+
+    def __init__(self, template_space: SearchSpace, cfg: SchedulerConfig,
+                 gw: GatewayConfig | None = None):
+        self.gw = gw or GatewayConfig()
+        if self.gw.slots < 1:
+            raise ValueError("GatewayConfig.slots must be >= 1")
+        if cfg.ckpt_dir is None:
+            # Eviction needs somewhere to put the partial snapshots; the
+            # whole-pool cadence can still be disabled via ckpt_every.
+            raise ValueError(
+                "StudyGateway needs SchedulerConfig.ckpt_dir (the eviction "
+                "store for per-study partial snapshots)")
+        self.cfg = cfg
+        self._template_space = template_space  # default for create_study;
+        # slot 0's handle can't serve as the template — reset/import
+        # overwrite it with whatever tenant lands there
+        # The pool's per-absorb snapshot cadence is disabled: its snapshots
+        # would lack the gateway registry (see GatewayConfig.ckpt_every_ticks
+        # for the gateway-level cadence).
+        self.pool = StudyPool(
+            [template_space] * self.gw.slots,
+            dataclasses.replace(cfg, ckpt_every=10 ** 9))
+        self._free: list[int] = list(range(self.gw.slots - 1, -1, -1))
+        self._owner: list[int | None] = [None] * self.gw.slots
+        self._studies: dict[int, _Logical] = {}
+        self._closed_sids: set[int] = set()   # tombstones: closed studies
+        # leave the registry (and, at the next checkpoint commit, the
+        # eviction store) so tenant churn doesn't grow either unboundedly
+        self._closed_gc: list[str] = []       # snapshot dirs to drop at
+        # the next checkpoint COMMIT (never before — a crash must restore
+        # a registry whose studies are all still on disk)
+        self._next_sid = 0
+        self._asks: deque[tuple[int, asyncio.Future | None]] = deque()
+        self._tells: list[tuple[int, Trial, float]] = []
+        self._tick_count = 0
+        self.stats: deque[dict] = deque(maxlen=self.gw.stats_window)
+        # lifetime counters: the stats deque is a WINDOW (stats_window
+        # ticks) — run totals must not silently shrink past it
+        self._totals = {"asks_served": 0, "absorbed": 0,
+                        "evictions": 0, "restores": 0}
+        self._wake: asyncio.Event | None = None
+        self._tick_done: asyncio.Event | None = None  # pulsed per tick
+        # attempt so drain() waiters re-check instead of busy-polling
+        self._ticker: asyncio.Task | None = None
+        self._closed = False
+        self._restores_this_tick = 0
+        self._evictions_this_tick = 0
+        self._retry_absorb = False
+        # Tells that can never be absorbed (study at capacity) land here
+        # instead of poisoning the queue forever; the trial records the
+        # error.
+        self.dead_tells: list[tuple[int, Trial, float]] = []
+
+    # -- lifecycle ----------------------------------------------------------
+    def create_study(self, space: SearchSpace | None = None,
+                     name: str | None = None) -> int:
+        """Register a logical study; no slot is claimed until its first ask.
+
+        Random streams are seeded `cfg.seed + logical_id`, so two gateways
+        with the same creation order serve identical suggestion streams
+        regardless of slot churn.
+        """
+        space = space if space is not None else self._template_space
+        if space.dim != self.pool.engine.gp_cfg.dim:
+            raise ValueError(
+                f"space dim {space.dim} != gateway dim "
+                f"{self.pool.engine.gp_cfg.dim} (the stacked buffers are "
+                "rectangular)")
+        sid = self._next_sid
+        self._next_sid += 1
+        self._studies[sid] = _Logical(
+            sid, name if name is not None else f"study{sid}", space,
+            seed=self.cfg.seed + sid)
+        return sid
+
+    def close_study(self, sid: int) -> None:
+        """Release a study's slot and drop it from the registry.  Refuses
+        while work is in flight.  Its snapshots are deleted at the next
+        checkpoint commit (not before: a crash must restore a registry
+        whose studies are all still on disk)."""
+        log = self._require(sid)
+        if log.inflight or log.pending_asks or log.pending_tells:
+            raise RuntimeError(
+                f"study {sid} has work in flight "
+                f"(inflight={log.inflight}, asks={log.pending_asks}, "
+                f"tells={log.pending_tells}); tell or drain first")
+        if log.slot is not None:
+            self._owner[log.slot] = None
+            self._free.append(log.slot)
+            log.slot = None
+        self._closed_sids.add(sid)
+        if log.evicted_ever:
+            self._closed_gc.append(self._study_key(log))
+        del self._studies[sid]
+        if self._wake is not None:
+            self._wake.set()  # the freed slot may unblock a deferred ask
+
+    def _require(self, sid: int) -> _Logical:
+        if sid in self._closed_sids:
+            raise RuntimeError(f"study {sid} is closed")
+        log = self._studies.get(sid)
+        if log is None:
+            raise KeyError(f"unknown study id {sid}")
+        return log
+
+    # -- admission control --------------------------------------------------
+    def _admit_ask(self, log: _Logical) -> None:
+        if self._closed:
+            raise RuntimeError("gateway is shut down")
+        if len(self._asks) >= self.gw.max_queue:
+            raise GPCapacityError(
+                f"gateway ask queue full ({self.gw.max_queue} queued); "
+                "backpressure — retry after the next tick")
+        if log.inflight + log.pending_asks >= self.gw.max_inflight:
+            raise GPCapacityError(
+                f"study {log.sid} ({log.name}) already has "
+                f"{self.gw.max_inflight} suggestions in flight; tell() "
+                "results back before asking again")
+        # Capacity-aware reject: every outstanding suggestion implies a
+        # future observation.  Refuse the ask now rather than fail the tell
+        # after the client has spent a training run on it.
+        committed = (log.n_obs + log.inflight + log.pending_asks
+                     + log.pending_tells)
+        if committed + 1 > self.cfg.n_max:
+            raise GPCapacityError(
+                f"study {log.sid} ({log.name}): n={log.n_obs} absorbed + "
+                f"{committed - log.n_obs} outstanding would exceed "
+                f"n_max={self.cfg.n_max}")
+
+    # -- ask / tell ---------------------------------------------------------
+    async def ask(self, sid: int) -> Trial:
+        """Request one suggestion; resolves at the next coalesced tick."""
+        log = self._require(sid)
+        self._admit_ask(log)
+        loop = asyncio.get_running_loop()
+        self._ensure_ticker(loop)
+        fut: asyncio.Future = loop.create_future()
+        self._asks.append((sid, fut))
+        log.pending_asks += 1
+        self._wake.set()
+        return await fut
+
+    def ask_nowait(self, sid: int) -> None:
+        """Queue an ask without a future (drive with `tick()`; the
+        suggestion lands in the study's ledger).  For sync callers/tests."""
+        log = self._require(sid)
+        self._admit_ask(log)
+        self._asks.append((sid, None))
+        log.pending_asks += 1
+        if self._wake is not None:
+            self._wake.set()
+
+    def _check_unit(self, trial: Trial) -> None:
+        """Validate a told trial's unit vector at the caller, not inside
+        the fused round: a malformed unit raising mid-dispatch would abort
+        the whole coalesced tick for every study in it."""
+        unit = np.asarray(trial.unit)
+        dim = self.pool.engine.gp_cfg.dim
+        if unit.shape != (dim,):
+            raise ValueError(
+                f"trial unit shape {unit.shape} != ({dim},)")
+        if not np.all(np.isfinite(unit)) or unit.min() < 0.0 \
+                or unit.max() > 1.0:
+            raise ValueError(
+                f"trial unit must be finite in [0, 1]^{dim}, got {unit}")
+
+    def tell(self, sid: int, trial: Trial, value: float) -> None:
+        """Report a result; absorbed by the next tick's fused round.
+
+        Rejected at the caller (never inside the fused round, where one bad
+        input would abort the whole tick): wrong-dim units, non-finite
+        values (report divergence via `tell_failure` instead — a NaN row
+        would silently poison the posterior), and replays of a trial that
+        already resolved (each suggestion takes exactly one tell)."""
+        log = self._require(sid)
+        if trial.status not in ("pending", "running"):
+            raise RuntimeError(
+                f"trial {trial.trial_id} of study {sid} was already told "
+                f"({trial.status}); each suggestion takes exactly one tell")
+        self._check_unit(trial)
+        value = float(value)
+        if not np.isfinite(value):
+            raise ValueError(
+                f"non-finite objective value {value!r}; report crashes "
+                "and divergence via tell_failure()")
+        # "told" blocks a same-window replay (the absorb flips it to
+        # "done" once the append commits)
+        trial.status = "told"
+        self._tells.append((sid, trial, value))
+        log.pending_tells += 1
+        log.inflight = max(0, log.inflight - 1)
+        if self._wake is not None:
+            self._wake.set()
+
+    def tell_failure(self, sid: int, trial: Trial, error: str) -> None:
+        """Report a failed trial.  The ledger records the fault; with
+        `cfg.failure_penalty` set, a penalty pseudo-observation is queued
+        through the same coalesced absorb path (keeping EI away from the
+        crashing region).  Retry policy is the client's: ask again."""
+        log = self._require(sid)
+        if self.cfg.failure_penalty is not None:
+            self._check_unit(trial)
+        trial.status = "failed"
+        trial.error = error
+        trial.finished = time.time()
+        log.inflight = max(0, log.inflight - 1)
+        if self.cfg.failure_penalty is not None:
+            penalty = Trial(trial.trial_id, trial.unit, trial.hparams)
+            # the error tag marks this as a pseudo-observation: it enters
+            # the GP through the normal absorb path but must never be
+            # reported as the study's best (failure_penalty=0.0 would beat
+            # every genuine negative objective)
+            penalty.error = f"failure penalty ({error})"
+            self._tells.append((sid, penalty, self.cfg.failure_penalty))
+            log.pending_tells += 1
+        if self._wake is not None:
+            # wake even without a penalty tell: the freed in-flight budget
+            # may make this study evictable and unblock a deferred ask
+            self._wake.set()
+
+    # -- slot residency / eviction ------------------------------------------
+    def _study_key(self, log: _Logical) -> str:
+        return f"study{log.sid:06d}"
+
+    def _evictable(self, log: _Logical) -> bool:
+        return (log.slot is not None and not log.inflight
+                and not log.pending_asks and not log.pending_tells)
+
+    def _evict_lru(self) -> int:
+        """Evict the least-recently-used *idle* resident study, returning
+        its slot.  Studies with anything in flight or queued this tick are
+        never candidates (their pending counters pin them resident)."""
+        # scan the SLOT map, not the whole logical registry: candidates
+        # are resident by definition, so this is O(slots) regardless of
+        # how many logical studies have ever been created
+        candidates = [self._studies[sid] for sid in self._owner
+                      if sid is not None
+                      and self._evictable(self._studies[sid])]
+        if not candidates:
+            raise GPCapacityError(
+                f"all {self.gw.slots} slots are busy (studies with work in "
+                "flight cannot be evicted); raise GatewayConfig.slots or "
+                "tell() outstanding results back")
+        victim = min(candidates, key=lambda l: (l.last_tick, l.sid))
+        return self._evict(victim)
+
+    def _evict(self, log: _Logical) -> int:
+        """Snapshot one resident study to the eviction store, free its slot.
+
+        The snapshot commits BEFORE any bookkeeping changes: a failed write
+        raises with the study still resident and serving (and any prior
+        committed snapshot still the restore target)."""
+        slot = log.slot
+        snap = self.pool.export_study(slot)
+        ckpt_mod.save_study(self.cfg.ckpt_dir, self._study_key(log),
+                            log.version + 1, snap["tree"],
+                            metadata={"handle": json.dumps(snap["meta"]),
+                                      "sid": log.sid, "n_obs": log.n_obs})
+        log.version += 1
+        log.slot = None
+        log.evicted_ever = True
+        self._owner[slot] = None
+        # lifetime total counts here, not at tick commit: the snapshot is
+        # a durable side effect even if the tick later aborts
+        self._evictions_this_tick += 1
+        self._totals["evictions"] += 1
+        return slot
+
+    def _ensure_resident(self, sid: int) -> int:
+        """Give study `sid` a slot: free-list pop, else LRU eviction; then
+        restore-on-demand from its latest partial snapshot (or a blank
+        state if it never held one)."""
+        log = self._require(sid)
+        if log.slot is not None:
+            return log.slot
+        slot = self._free.pop() if self._free else self._evict_lru()
+        if log.evicted_ever:
+            like = dataclasses.asdict(self.pool.engine.study_state(slot))
+            # version-exact: after a crash/restore, snapshots NEWER than the
+            # registry's version exist (written by the lost timeline) and
+            # must not leak future state into the recovered one
+            out = ckpt_mod.restore_study(self.cfg.ckpt_dir,
+                                         self._study_key(log), like,
+                                         version=log.version)
+            if out is None:
+                raise RuntimeError(
+                    f"study {sid} was evicted but snapshot version "
+                    f"{log.version} is not committed under "
+                    f"{self.cfg.ckpt_dir}")
+            _, tree, meta = out
+            self.pool.import_study(slot, tree,
+                                   json.loads(meta["handle"]),
+                                   space=log.space)
+            self._restores_this_tick += 1
+            self._totals["restores"] += 1
+        else:
+            self.pool.reset_study(slot, space=log.space, name=log.name,
+                                  seed=log.seed)
+        log.slot = slot
+        self._owner[slot] = sid
+        return slot
+
+    def _try_resident(self, sid: int) -> int | None:
+        """Best-effort residency: None when every slot is pinned (the ask
+        defers to a later tick instead of failing)."""
+        try:
+            return self._ensure_resident(sid)
+        except GPCapacityError:
+            return None
+
+    # -- the coalescing tick ------------------------------------------------
+    def tick(self) -> int:
+        """Serve one coalesced round synchronously; returns the number of
+        asks served plus tells absorbed (0 = no progress).
+
+        Gathers every queued tell and up to `max_batch` queued asks (at
+        most one ask per study per tick — a second ask for the same study
+        waits for the next round), makes the involved studies resident,
+        and issues ONE fused `advance_round` dispatch.  Asks that cannot
+        get a slot this tick (every slot pinned by in-flight work) stay
+        queued and are retried when a tell frees a study; tells always
+        place, or the tick fails without absorbing anything.
+        """
+        self._restores_this_tick = 0
+        self._evictions_this_tick = 0
+        tells, self._tells = self._tells, []
+        # one ask per study per tick; respect max_batch; keep queue order
+        take: list[tuple[int, asyncio.Future | None]] = []
+        requeue: deque = deque()
+        seen: set[int] = set()
+        limit = self.gw.max_batch or len(self._asks)
+        while self._asks:
+            sid, fut = self._asks.popleft()
+            if sid in seen or len(take) >= limit:
+                requeue.append((sid, fut))
+            else:
+                seen.add(sid)
+                take.append((sid, fut))
+        self._asks = requeue
+        if not tells and not take:
+            return 0
+        t0 = time.perf_counter()
+        # Tells MUST place (their observation has nowhere else to go); their
+        # pending counters pin them against the evictions they trigger.
+        try:
+            events = [(self._ensure_resident(sid), tr, val)
+                      for sid, tr, val in tells]
+        except GPCapacityError as e:
+            # every slot pinned by other in-flight work: nothing was
+            # absorbed (placement precedes the dispatch) — requeue the
+            # tells untouched, fail this tick's asks loudly
+            self._tells = tells + self._tells
+            for sid, fut in take:
+                self._studies[sid].pending_asks -= 1
+                if fut is not None and not fut.done():
+                    fut.set_exception(e)
+            raise
+        except Exception:
+            # IO fault in the eviction store: nothing was dispatched —
+            # requeue the whole tick untouched and surface the error
+            self._tells = tells + self._tells
+            self._asks.extendleft(reversed(take))
+            raise
+        # Asks place best-effort: the overflow defers to the next tick.
+        ask_slots: dict[int, int] = {}
+        deferred: list[tuple[int, asyncio.Future | None]] = []
+        served: list[tuple[int, asyncio.Future | None]] = []
+        try:
+            for sid, fut in take:
+                slot = self._try_resident(sid)
+                if slot is None:
+                    deferred.append((sid, fut))
+                else:
+                    ask_slots[sid] = slot
+                    served.append((sid, fut))
+        except Exception:
+            # IO fault placing an ask (eviction snapshot failed): requeue
+            # everything untouched — already-placed asks keep their slots
+            # and replace them idempotently next tick — and surface.
+            self._tells = tells + self._tells
+            self._asks.extendleft(reversed(take))
+            raise
+        self._asks.extendleft(reversed(deferred))
+        take = served
+        if not events and not take:
+            return 0
+        try:
+            suggestions = self.pool.advance_round(
+                events, t=1, studies=sorted(ask_slots.values()))
+        except GPCapacityError as e:
+            # advance_round capacity-checks the WHOLE round before mutating
+            # any ledger or GP buffer (all-or-nothing), so the queues can be
+            # rebuilt exactly: absorbable tells are requeued, unabsorbable
+            # ones dead-letter (their trial records the error), and this
+            # tick's asks fail loudly at their futures.
+            self._retry_absorb = self._unwind_capacity_failure(tells, take, e)
+            raise
+        except Exception as e:
+            # unexpected fault inside the fused dispatch (units are
+            # validated at tell(), so this is an engine/runtime error):
+            # observations must not vanish and clients must not hang.
+            # The pool flips a trial's status to "done" only AFTER its
+            # append committed to the GP, so requeue exactly the
+            # uncommitted tells — re-absorbing a committed one would
+            # silently duplicate its row — and settle the committed ones'
+            # counters here.  The tick's asks fail at their futures; the
+            # error propagates so the operator sees it.
+            requeue = []
+            for sid, tr, val in tells:
+                log = self._studies[sid]
+                if tr.status == "done":
+                    log.pending_tells -= 1
+                    log.n_obs += 1
+                    if tr.error is None and (log.best_value is None
+                                             or val > log.best_value):
+                        log.best_value = val
+                else:
+                    requeue.append((sid, tr, val))
+            self._tells = requeue + self._tells
+            for sid, fut in take:
+                self._studies[sid].pending_asks -= 1
+                if fut is not None and not fut.done():
+                    fut.set_exception(e)
+            raise
+        latency_ms = 1e3 * (time.perf_counter() - t0)
+        self._tick_count += 1
+        for sid, tr, val in tells:
+            log = self._studies[sid]
+            log.pending_tells -= 1
+            log.n_obs += 1
+            log.last_tick = self._tick_count
+            if tr.error is None and (log.best_value is None
+                                     or val > log.best_value):
+                log.best_value = val
+        for sid, fut in take:
+            log = self._studies[sid]
+            tr = suggestions[ask_slots[sid]][0]
+            log.pending_asks -= 1
+            log.last_tick = self._tick_count
+            if fut is not None and fut.cancelled():
+                # the client is gone: nobody holds this suggestion, so no
+                # tell will ever come back — counting it in flight would
+                # pin the study non-evictable and eat its max_inflight
+                # budget forever
+                tr.status = "failed"
+                tr.error = "ask cancelled before delivery"
+                continue
+            log.inflight += 1
+            tr.status = "running"
+            tr.started = time.time()
+            if fut is not None:
+                fut.set_result(tr)
+        self.stats.append({
+            "tick": self._tick_count,
+            "width": len(take),
+            "absorbed": len(events),
+            "deferred": len(deferred),
+            "queued_after": len(self._asks),
+            "latency_ms": latency_ms,
+            "evictions": self._evictions_this_tick,
+            "restores": self._restores_this_tick,
+        })
+        self._totals["asks_served"] += len(take)
+        self._totals["absorbed"] += len(events)
+        if self.gw.ckpt_every_ticks and \
+                self._tick_count % self.gw.ckpt_every_ticks == 0:
+            self.checkpoint()
+        return len(take) + len(events)
+
+    def _unwind_capacity_failure(self, tells, take, err) -> bool:
+        """Rebuild the queues after an all-or-nothing capacity abort.
+
+        Returns True when absorbable tells were requeued — their retry
+        round is guaranteed to fit (the overflow was dead-lettered and the
+        coalesced asks removed), so the ticker may re-wake once."""
+        keep, counts = [], {}
+        for sid, tr, val in tells:
+            log = self._studies[sid]
+            counts[sid] = counts.get(sid, 0) + 1
+            if log.n_obs + counts[sid] > self.cfg.n_max:
+                # can never fit — dead-letter instead of poisoning the queue
+                log.pending_tells -= 1
+                counts[sid] -= 1
+                tr.status = "failed"
+                tr.error = f"dropped at capacity: {err}"
+                self.dead_tells.append((sid, tr, val))
+            else:
+                keep.append((sid, tr, val))
+        self._tells = keep + self._tells
+        for sid, fut in take:
+            self._studies[sid].pending_asks -= 1
+            if fut is not None and not fut.done():
+                fut.set_exception(err)
+        return bool(keep)
+
+    async def drain(self) -> None:
+        """Wait until every queued ask/tell has been served (or the ticker
+        has died — its exception re-raises here).  Parks on the per-tick
+        event instead of busy-polling: a waiter re-checks only after the
+        ticker attempts a round (or exits)."""
+        while self._asks or self._tells or (
+                self._wake is not None and self._wake.is_set()):
+            if self._ticker is None:
+                break  # nothing will ever serve; sync callers drive tick()
+            if self._ticker.done():
+                if not self._ticker.cancelled() and \
+                        self._ticker.exception() is not None:
+                    raise self._ticker.exception()
+                break
+            self._tick_done.clear()
+            # re-check after the clear: a tick that completed between the
+            # loop condition and the clear must not be waited out
+            if not (self._asks or self._tells or self._wake.is_set()):
+                break
+            await self._tick_done.wait()
+
+    def _ensure_ticker(self, loop: asyncio.AbstractEventLoop) -> None:
+        if self._wake is None:
+            self._wake = asyncio.Event()
+        if self._tick_done is None:
+            self._tick_done = asyncio.Event()
+        if self._ticker is None or self._ticker.done():
+            self._ticker = loop.create_task(self._run_ticker())
+
+    async def _run_ticker(self) -> None:
+        try:
+            while not self._closed:
+                await self._wake.wait()
+                self._wake.clear()
+                if self._closed:
+                    break
+                if self.gw.coalesce_ms > 0:
+                    await asyncio.sleep(self.gw.coalesce_ms / 1e3)
+                else:
+                    # One cooperative yield: every client task already
+                    # runnable gets to enqueue before the round fires.
+                    await asyncio.sleep(0)
+                progressed = 0
+                self._retry_absorb = False
+                try:
+                    progressed = self.tick()
+                except GPCapacityError:
+                    # already meted out to the affected futures/queues;
+                    # retry once when absorbable tells were requeued (their
+                    # round is guaranteed to fit now)
+                    if self._retry_absorb:
+                        self._wake.set()
+                except Exception as e:
+                    # non-capacity fault (e.g. eviction-store IO): tick()
+                    # requeued everything untouched, but dying silently
+                    # would park every client awaiting ask() forever —
+                    # fail their futures loudly instead.  Tells stay
+                    # queued (observations are never dropped); the next
+                    # ask() re-creates the ticker and retries them.
+                    while self._asks:
+                        sid, fut = self._asks.popleft()
+                        self._studies[sid].pending_asks -= 1
+                        if fut is not None and not fut.done():
+                            fut.set_exception(e)
+                    raise
+                # Re-wake only on progress: deferred asks that could not
+                # place wait for the external event (a tell freeing a
+                # study) instead of spinning the loop.
+                if progressed and (self._asks or self._tells):
+                    self._wake.set()
+                self._tick_done.set()
+        finally:
+            # wake drain() waiters on ANY exit (aclose, tick exception) so
+            # they observe the dead ticker instead of parking forever
+            if self._tick_done is not None:
+                self._tick_done.set()
+
+    async def aclose(self) -> None:
+        """Stop the ticker (queued asks are abandoned; tells stay queued
+        until a final explicit `tick()`)."""
+        self._closed = True
+        if self._wake is not None:
+            self._wake.set()
+        if self._ticker is not None:
+            try:
+                await self._ticker
+            except asyncio.CancelledError:
+                pass
+        for sid, fut in self._asks:
+            if fut is not None and not fut.done():
+                fut.cancel()
+            self._studies[sid].pending_asks -= 1
+        self._asks.clear()
+
+    # -- telemetry / checkpointing ------------------------------------------
+    def study_ids(self) -> list[int]:
+        """Open logical study ids (closed studies leave the registry)."""
+        return sorted(self._studies)
+
+    def study_info(self, sid: int) -> dict:
+        """Public view of one logical study's serving state: name, absorbed
+        count, residency, eviction count, and the best genuine observation
+        (residency-independent; penalty pseudo-observations excluded) — the
+        stable surface examples and dashboards read instead of the private
+        registry."""
+        log = self._studies.get(sid)
+        if log is None:
+            raise KeyError(f"unknown study id {sid}")
+        return {
+            "sid": log.sid, "name": log.name, "n_obs": log.n_obs,
+            "slot": log.slot, "resident": log.slot is not None,
+            "inflight": log.inflight, "evictions": log.version,
+            "best_value": log.best_value,
+        }
+
+    def summary(self) -> dict:
+        """Serving telemetry: counts are LIFETIME totals; latency/width
+        distributions cover the retained window (`stats_window` ticks)."""
+        out = {"ticks": self._tick_count, **self._totals,
+               "mean_coalesce_width": 0.0,
+               "p50_tick_ms": 0.0, "p95_tick_ms": 0.0}
+        if self.stats:
+            lat = sorted(s["latency_ms"] for s in self.stats)
+            # width over ask-serving ticks only: tell-only drain ticks
+            # have width 0 and would understate the coalescing achieved
+            widths = [s["width"] for s in self.stats if s["width"]]
+            if widths:
+                out["mean_coalesce_width"] = float(np.mean(widths))
+            out["p50_tick_ms"] = lat[len(lat) // 2]
+            out["p95_tick_ms"] = lat[min(len(lat) - 1,
+                                         int(0.95 * len(lat)))]
+        return out
+
+    def checkpoint(self) -> str | None:
+        """Whole-gateway snapshot: evicted studies already sit in their
+        partial snapshots; the pool snapshot covers the resident slots and
+        the logical registry rides the pool metadata.  In-flight asks and
+        un-told suggestions do NOT survive a crash — clients re-ask, and
+        the persistent per-study PRNG streams guarantee the retried round
+        never replays a pre-crash batch."""
+        registry = {
+            "next_sid": self._next_sid,
+            "tick_count": self._tick_count,
+            "totals": dict(self._totals),
+            "closed_sids": sorted(self._closed_sids),
+            "studies": [{
+                "sid": log.sid, "name": log.name, "seed": log.seed,
+                "slot": log.slot, "n_obs": log.n_obs,
+                "best_value": log.best_value,
+                "last_tick": log.last_tick, "version": log.version,
+                "evicted_ever": log.evicted_ever,
+                "dims": [dataclasses.asdict(d) for d in log.space.dims],
+            } for log in self._studies.values()],
+        }
+        path = self.pool.checkpoint(extra={"gateway": json.dumps(registry)})
+        if path is not None:
+            # the committed registry references each study's CURRENT
+            # version; older partial snapshots are now unreachable
+            ckpt_mod.prune_studies(self.cfg.ckpt_dir, {
+                self._study_key(log): log.version
+                for log in self._studies.values() if log.evicted_ever})
+            # studies closed since the last commit are now unreferenced by
+            # any restorable registry — their snapshot dirs can go
+            ckpt_mod.drop_studies(self.cfg.ckpt_dir, self._closed_gc)
+            self._closed_gc = []
+        return path
+
+    def restore(self) -> bool:
+        """Resume from the latest pool snapshot + its gateway registry.
+
+        Pending/in-flight work is reset (those clients are gone); absorbed
+        state, ledgers, PRNG streams, slot map, and LRU/eviction bookkeeping
+        come back exactly as checkpointed.
+        """
+        if not self.pool.restore():
+            return False
+        meta = self.pool.last_restore_meta or {}
+        if "gateway" not in meta:
+            raise ValueError("checkpoint has no gateway registry "
+                             "(written by a bare StudyPool?)")
+        registry = json.loads(meta["gateway"])
+        self._next_sid = int(registry["next_sid"])
+        self._tick_count = int(registry["tick_count"])
+        self._totals.update(registry.get("totals", {}))
+        self._closed_sids = set(registry.get("closed_sids", []))
+        self._closed_gc = []
+        self._studies = {}
+        self._owner = [None] * self.gw.slots
+        # clients parked on pre-restore asks belong to the discarded
+        # timeline: cancel their futures (dropping them silently would
+        # hang those tasks forever — aclose() does the same)
+        for _sid, fut in self._asks:
+            if fut is not None and not fut.done():
+                fut.cancel()
+        self._asks.clear()
+        self._tells = []
+        for rec in registry["studies"]:
+            space = SearchSpace(tuple(Dim(**d) for d in rec["dims"]))
+            log = _Logical(rec["sid"], rec["name"], space, rec["seed"],
+                           slot=rec["slot"], n_obs=rec["n_obs"],
+                           best_value=rec.get("best_value"),
+                           last_tick=rec["last_tick"],
+                           version=rec["version"],
+                           evicted_ever=rec["evicted_ever"])
+            self._studies[log.sid] = log
+            if log.slot is not None:
+                self._owner[log.slot] = log.sid
+                # pool.restore() rebuilds slot handles from the pool
+                # snapshot, which carries no spaces — re-apply the logical
+                # study's own (possibly custom) space or its resident
+                # suggestions map through the template bounds
+                self.pool.studies[log.slot].space = log.space
+        self._free = [s for s in range(self.gw.slots - 1, -1, -1)
+                      if self._owner[s] is None]
+        return True

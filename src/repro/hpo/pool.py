@@ -86,7 +86,7 @@ class Trial:
     trial_id: int
     unit: np.ndarray
     hparams: dict
-    status: str = "pending"      # pending | running | done | failed
+    status: str = "pending"      # pending | running | told | done | failed
     value: float | None = None
     error: str | None = None
     started: float = 0.0
@@ -94,6 +94,14 @@ class Trial:
     retries: int = 0
     clamp_count: int | None = None  # cumulative GP conditioning-floor hits
     # at absorb time (ill-conditioning telemetry, DESIGN.md §6)
+
+
+def _trial_from_dict(t: dict) -> Trial:
+    """Rebuild a ledger Trial from its checkpoint/export dict form."""
+    return Trial(t["trial_id"], np.asarray(t["unit"], np.float32),
+                 t["hparams"], t["status"], t["value"], t["error"],
+                 t["started"], t["finished"], t["retries"],
+                 t.get("clamp_count"))
 
 
 @dataclasses.dataclass
@@ -141,7 +149,9 @@ class StudyPool:
                         rng=np.random.default_rng(cfg.seed + i))
             for i, sp in enumerate(spaces)]
         self._done_at_last_ckpt = 0
-        self._n_done = 0  # O(1) mirror of total_done() for the ckpt cadence
+        self._n_done = 0  # absorptions ever (ckpt cadence + monotonic step;
+        # counts absorbs into since-evicted slots, unlike total_done())
+        self.last_restore_meta: dict | None = None  # set by restore()
 
     @property
     def n_studies(self) -> int:
@@ -289,9 +299,6 @@ class StudyPool:
             flags[sid] = True
             xs[sid] = tr.unit
             ys[sid] = float(val)
-            tr.status = "done"
-            tr.value = float(val)
-            tr.finished = time.time()
         # Studies that will still be empty after this absorb get seed
         # trials; only requested non-seed studies advance their streams.
         need_seed = {s for s in ids
@@ -301,7 +308,11 @@ class StudyPool:
                                        self._staged_keys(ei_ids), top_t=t)
         units = np.asarray(units)
         clamps = self.engine.clamp_counts()       # one transfer for all S
-        for sid, (tr, _) in first.items():
+        # "done" only after the fused round committed (see absorb())
+        for sid, (tr, val) in first.items():
+            tr.status = "done"
+            tr.value = float(val)
+            tr.finished = time.time()
             tr.clamp_count = int(clamps[sid])
         self._n_done += len(first)
         out: dict[int, list[Trial]] = {}
@@ -317,11 +328,13 @@ class StudyPool:
     def absorb(self, study_id: int, trial: Trial, value: float) -> None:
         """Completion-order absorb routed to the owning study."""
         gp_mod.ensure_capacity(self.engine.n(study_id), self.cfg.n_max)
+        self.engine.absorb(study_id, jnp.asarray(trial.unit),
+                           jnp.asarray(value, jnp.float32))
+        # status flips to "done" only once the append committed: callers
+        # (the gateway's fault unwind) rely on it to mean "in the GP"
         trial.status = "done"
         trial.value = float(value)
         trial.finished = time.time()
-        self.engine.absorb(study_id, jnp.asarray(trial.unit),
-                           jnp.asarray(value, jnp.float32))
         trial.clamp_count = self.engine.clamp_count(study_id)
         self._n_done += 1
         self._maybe_checkpoint()
@@ -354,12 +367,13 @@ class StudyPool:
                 flags[sid] = True
                 xs[sid] = tr.unit
                 ys[sid] = float(val)
+            self.engine.absorb_round(flags, xs, ys)
+            clamps = self.engine.clamp_counts()   # one transfer for all S
+            # "done" only after the round committed (see absorb())
+            for sid, (tr, val) in round_events.items():
                 tr.status = "done"
                 tr.value = float(val)
                 tr.finished = time.time()
-            self.engine.absorb_round(flags, xs, ys)
-            clamps = self.engine.clamp_counts()   # one transfer for all S
-            for sid, (tr, _) in round_events.items():
                 tr.clamp_count = int(clamps[sid])
             self._n_done += len(round_events)
         self._maybe_checkpoint()
@@ -397,6 +411,62 @@ class StudyPool:
         return sum(t.status == "done"
                    for h in self.studies for t in h.trials)
 
+    # -- slot lifecycle (the gateway's evict/restore/reuse hooks, §9) -------
+    def export_study(self, slot: int) -> dict:
+        """Host-side snapshot of ONE slot: GP sub-state + handle metadata.
+
+        The returned dict round-trips through `import_study` (and through
+        `checkpoint.save_study`) bitwise: float32 buffers are exported as
+        numpy arrays and re-written into the stack elementwise, so an
+        evicted-and-restored study continues exactly where it left off.
+        """
+        h = self.studies[slot]
+        tree = jax.tree.map(np.asarray,
+                            dataclasses.asdict(self.engine.study_state(slot)))
+        meta = {"name": h.name, "next_id": h.next_id,
+                "trials": self.history(slot),
+                "key": np.asarray(h.key).tolist(),
+                "rng_state": h.rng.bit_generator.state}
+        return {"tree": tree, "meta": meta}
+
+    def import_study(self, slot: int, tree: dict, meta: dict,
+                     space: SearchSpace | None = None) -> None:
+        """Load an exported study into `slot` (inverse of `export_study`)."""
+        tree = dict(tree)
+        tree["params"] = KernelParams(**tree["params"])
+        self.engine.load_slot(slot, gp_mod.LazyGPState(**tree))
+        h = self.studies[slot]
+        if space is not None:
+            h.space = space
+        h.name = meta["name"]
+        h.next_id = int(meta["next_id"])
+        h.key = jnp.asarray(np.asarray(meta["key"], np.uint32))
+        h.rng = np.random.default_rng()
+        h.rng.bit_generator.state = meta["rng_state"]
+        h.trials = [_trial_from_dict(t) for t in meta["trials"]]
+
+    def reset_study(self, slot: int, space: SearchSpace | None = None,
+                    name: str | None = None, seed: int | None = None) -> None:
+        """Blank a slot for a new tenant: fresh GP state, ledger, PRNGs.
+
+        `seed` defaults to the constructor's `cfg.seed + slot`; the gateway
+        passes `cfg.seed + logical_id` instead, so a tenant's random streams
+        are a function of WHO it is, not of which slot it lands in.
+        """
+        if space is not None and space.dim != self.engine.gp_cfg.dim:
+            raise ValueError(
+                f"space dim {space.dim} != pool dim {self.engine.gp_cfg.dim}")
+        self.engine.reset_slot(slot)
+        h = self.studies[slot]
+        seed = self.cfg.seed + slot if seed is None else seed
+        if space is not None:
+            h.space = space
+        h.name = name if name is not None else f"study{slot}"
+        h.trials = []
+        h.next_id = 0
+        h.key = jax.random.PRNGKey(seed)
+        h.rng = np.random.default_rng(seed)
+
     # -- checkpointing (the whole pool rides one atomic snapshot) -----------
     def _maybe_checkpoint(self) -> None:
         """Snapshot every `ckpt_every` absorptions (each snapshot serializes
@@ -406,7 +476,10 @@ class StudyPool:
         if self._n_done - self._done_at_last_ckpt >= max(1, self.cfg.ckpt_every):
             self.checkpoint()
 
-    def checkpoint(self) -> str | None:
+    def checkpoint(self, extra: dict | None = None) -> str | None:
+        """Atomic whole-pool snapshot; `extra` metadata (JSON-serializable)
+        rides along and comes back in `last_restore_meta` — the gateway
+        stores its logical-study registry there."""
         if not self.cfg.ckpt_dir:
             return None
         self._done_at_last_ckpt = self._n_done
@@ -421,6 +494,8 @@ class StudyPool:
                  "rng_state": h.rng.bit_generator.state}
                 for h in self.studies]),
         }
+        if extra:
+            meta.update(extra)
         return ckpt_mod.save(self.cfg.ckpt_dir, self._n_done,
                              dataclasses.asdict(self.engine.state),
                              metadata=meta)
@@ -432,7 +507,8 @@ class StudyPool:
                                       dataclasses.asdict(self.engine.state))
         if out is None:
             return False
-        _, tree, meta = out
+        step, tree, meta = out
+        self.last_restore_meta = meta
         if int(meta.get("n_studies", -1)) != self.n_studies:
             raise ValueError(
                 f"checkpoint holds {meta.get('n_studies')} studies, "
@@ -450,12 +526,13 @@ class StudyPool:
             if "rng_state" in rec:
                 h.rng = np.random.default_rng()
                 h.rng.bit_generator.state = rec["rng_state"]
-            h.trials = [
-                Trial(t["trial_id"], np.asarray(t["unit"], np.float32),
-                      t["hparams"], t["status"], t["value"], t["error"],
-                      t["started"], t["finished"], t["retries"],
-                      t.get("clamp_count"))
-                for t in rec["trials"]]
-        self._n_done = self.total_done()
+            h.trials = [_trial_from_dict(t) for t in rec["trials"]]
+        # The step counter resumes from the snapshot's own step, NOT from
+        # total_done(): under a gateway, absorbed trials of evicted studies
+        # live in per-study partial snapshots rather than any resident
+        # ledger, so total_done() under-counts — a later checkpoint would
+        # then be written at a LOWER step than the one just restored and be
+        # shadowed by it forever (restore_latest picks the max step).
+        self._n_done = int(step)
         self._done_at_last_ckpt = self._n_done
         return True

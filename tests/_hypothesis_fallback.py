@@ -1,0 +1,275 @@
+"""A minimal, deterministic stand-in for `hypothesis` (see conftest.py).
+
+The runtime image does not ship `hypothesis` (it is a dev extra,
+requirements-dev.txt), but the property tests are tier-1: they must RUN,
+not skip.  `ensure_hypothesis()` imports the real package when present and
+otherwise installs this fallback, which implements the exact API subset the
+suite uses:
+
+  * `@given(**kwargs)` with keyword strategies — the wrapped test runs
+    `max_examples` times against examples drawn from a PRNG seeded by the
+    test's qualified name (bitwise-reproducible run to run, machine to
+    machine; no example database, no shrinking),
+  * `@settings(max_examples=, deadline=, ...)` incl. profile registration,
+  * `strategies.integers/floats/booleans/sampled_from/lists/tuples/one_of/
+    just/text` plus `.map`/`.filter`,
+  * `assume` / `note` / `HealthCheck`.
+
+The fallback engages ONLY on `ModuleNotFoundError` for `hypothesis` itself;
+a *broken* install (ImportError from inside the package, or a missing
+dependency of it) re-raises so CI never silently downgrades coverage.
+
+`REPRO_FALLBACK_MAX_EXAMPLES` caps examples per test (0 = use each test's
+declared budget) — the knob the quick local loop and the CI fallback job
+share.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import sys
+import types
+
+_SEED_TAG = os.environ.get("REPRO_FALLBACK_SEED", "repro-fallback-v1")
+
+
+class _Unsatisfied(Exception):
+    """Raised by `assume(False)`; the example is discarded, not failed."""
+
+
+class Unsatisfiable(Exception):
+    """No example satisfied assume()/filter — mirrors
+    hypothesis.errors.Unsatisfiable: a property test that executed zero
+    examples must FAIL, not silently pass as a no-op."""
+
+
+class _Strategy:
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw = draw_fn
+        self._label = label
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)),
+                         f"{self._label}.map")
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(100):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied(f"filter on {self._label} too strict")
+        return _Strategy(draw, f"{self._label}.filter")
+
+    def __repr__(self):
+        return f"<fallback {self._label}>"
+
+
+def _mk_strategies() -> types.ModuleType:
+    st = types.ModuleType("hypothesis.strategies")
+
+    def integers(min_value=-(2 ** 16), max_value=2 ** 16):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         f"integers({min_value},{max_value})")
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            # hit the endpoints occasionally — they are where paddings and
+            # clamps break
+            r = rng.random()
+            if r < 0.05:
+                return lo
+            if r < 0.10:
+                return hi
+            return rng.uniform(lo, hi)
+        return _Strategy(draw, f"floats({lo},{hi})")
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5, "booleans")
+
+    def sampled_from(elements):
+        elems = list(elements)
+        return _Strategy(lambda rng: elems[rng.randrange(len(elems))],
+                         f"sampled_from(len={len(elems)})")
+
+    def lists(elem, min_size=0, max_size=None, unique=False):
+        hi = max_size if max_size is not None else min_size + 8
+
+        def draw(rng):
+            size = rng.randint(min_size, hi)
+            out, seen = [], set()
+            for _ in range(size * 20 + 20):
+                if len(out) == size:
+                    break
+                v = elem.example(rng)
+                if unique:
+                    if v in seen:
+                        continue
+                    seen.add(v)
+                out.append(v)
+            if len(out) < size:
+                # unique element domain too small (or retry budget spent):
+                # never hand back a list below the declared min_size —
+                # discard the example (real hypothesis never undershoots)
+                raise _Unsatisfied(
+                    f"lists(unique=True): only {len(out)}/{size} distinct "
+                    "elements drawn")
+            return out
+        return _Strategy(draw, f"lists[{min_size},{hi}]")
+
+    def tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.example(rng) for s in strats),
+                         f"tuples(x{len(strats)})")
+
+    def one_of(*strats):
+        flat = strats[0] if len(strats) == 1 and isinstance(
+            strats[0], (list, tuple)) else strats
+        return _Strategy(
+            lambda rng: flat[rng.randrange(len(flat))].example(rng),
+            f"one_of(x{len(flat)})")
+
+    def just(value):
+        return _Strategy(lambda rng: value, f"just({value!r})")
+
+    def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=12):
+        return _Strategy(
+            lambda rng: "".join(rng.choice(alphabet) for _ in range(
+                rng.randint(min_size, max_size))), "text")
+
+    for fn in (integers, floats, booleans, sampled_from, lists, tuples,
+               one_of, just, text):
+        setattr(st, fn.__name__, fn)
+    return st
+
+
+def _build_fallback() -> types.ModuleType:
+    mod = types.ModuleType("hypothesis")
+    mod.__is_fallback__ = True
+    mod.strategies = _mk_strategies()
+    mod.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None,
+        function_scoped_fixture=None)
+
+    profiles: dict[str, dict] = {"default": {}}
+    active = {"name": "default"}
+
+    def _active_profile() -> dict:
+        return profiles.get(active["name"], {})
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied("assume() failed")
+        return True
+
+    def note(_msg):
+        return None
+
+    class settings:  # noqa: N801 — mirrors hypothesis' class-as-decorator
+        def __init__(self, max_examples=None, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            if self.max_examples is not None:
+                fn._fallback_max_examples = self.max_examples
+            return fn
+
+        @staticmethod
+        def register_profile(name, max_examples=None, **_kw):
+            profiles[name] = {} if max_examples is None else {
+                "max_examples": max_examples}
+
+        @staticmethod
+        def load_profile(name):
+            active["name"] = name
+
+    def given(*args, **kwargs):
+        if args:
+            raise TypeError(
+                "the hypothesis fallback supports keyword strategies only "
+                "(install the real package for positional @given)")
+
+        def decorate(fn):
+            @functools.wraps(fn)
+            def runner(*a, **k):
+                budget = getattr(runner, "_fallback_max_examples", None) \
+                    or _active_profile().get("max_examples") or 20
+                # Default cap keeps the no-deps tier-1 loop fast (each fresh
+                # shape drawn is a jit recompile); CI's real-hypothesis jobs
+                # run the full declared budgets.  0 = uncapped.
+                cap = int(os.environ.get(
+                    "REPRO_FALLBACK_MAX_EXAMPLES", "12"))
+                if cap:
+                    budget = min(budget, cap)
+                rng = random.Random(
+                    f"{_SEED_TAG}:{fn.__module__}.{fn.__qualname__}")
+                ran = 0
+                for _ in range(budget * 5):
+                    if ran >= budget:
+                        break
+                    draw = None
+                    try:
+                        # drawing INSIDE the try: a .filter that exhausts
+                        # its retries discards the example like assume(),
+                        # instead of erroring out with the private
+                        # _Unsatisfied
+                        draw = {name: s.example(rng)
+                                for name, s in kwargs.items()}
+                        fn(*a, **draw, **k)
+                    except _Unsatisfied:
+                        continue
+                    except BaseException:
+                        print(f"\nFalsifying example ({fn.__qualname__}): "
+                              f"{draw}", file=sys.stderr)
+                        raise
+                    ran += 1
+                if ran == 0:
+                    raise Unsatisfiable(
+                        f"{fn.__qualname__}: no example satisfied assume()/"
+                        f"filter in {budget * 5} draws (the fallback's "
+                        "strategy defaults may be narrower than real "
+                        "hypothesis)")
+
+            # pytest resolves fixtures from the *visible* signature; the
+            # strategy kwargs are bound here, so hide them but KEEP the
+            # rest (real hypothesis preserves non-strategy params so
+            # fixtures like tmp_path still inject).
+            runner.__signature__ = inspect.Signature([
+                p for name, p in
+                inspect.signature(fn).parameters.items()
+                if name not in kwargs])
+            runner.__wrapped__ = None
+            del runner.__wrapped__
+            runner.hypothesis = types.SimpleNamespace(inner_test=fn)
+            return runner
+        return decorate
+
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.note = note
+    mod._Unsatisfied = _Unsatisfied
+    mod.errors = types.SimpleNamespace(Unsatisfiable=Unsatisfiable)
+    return mod
+
+
+def ensure_hypothesis() -> types.ModuleType:
+    """Import real hypothesis, or install the fallback when (only) absent."""
+    try:
+        import hypothesis
+        return hypothesis
+    except ModuleNotFoundError as e:
+        if e.name != "hypothesis":
+            # hypothesis is installed but one of ITS dependencies is missing
+            # — that is a broken environment, not an absent optional extra.
+            raise
+    mod = _build_fallback()
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
+    return mod

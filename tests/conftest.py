@@ -1,52 +1,35 @@
-"""Test-session bootstrap: graceful degradation when `hypothesis` is absent.
+"""Test-session bootstrap: property tests run with or without `hypothesis`.
 
-The property tests in this suite use hypothesis, which is not part of the
-runtime environment (see pyproject.toml's `test` extra).  When the real
-package is unavailable we install a minimal stub into `sys.modules` whose
-`@given` marks the decorated test as skipped — the deterministic tests keep
-running and collection never errors out.
+The property tests are tier-1 — they must RUN in every environment, not
+skip.  When the real `hypothesis` package is installed (requirements-dev /
+CI) it is used as-is, with a deterministic "ci" profile (fixed budget, no
+wall-clock deadline, derandomized) selectable via HYPOTHESIS_PROFILE=ci.
+When it is absent (the runtime image), `tests/_hypothesis_fallback.py`
+installs a minimal deterministic implementation of the same API so the
+property suite still executes real examples.
+
+The fallback engages ONLY on `ModuleNotFoundError` for `hypothesis` itself;
+a broken install (ImportError raised from inside the package, or a missing
+dependency of it) propagates — masking that as "not installed" would
+silently skip the property examples CI thinks it is running.
 """
 from __future__ import annotations
 
+import os
 import sys
-import types
 
-try:
-    import hypothesis  # noqa: F401  (real package available: nothing to do)
-except ImportError:
-    import pytest
+sys.path.insert(0, os.path.dirname(__file__))
 
-    def _strategy(*args, **kwargs):
-        return None
+from _hypothesis_fallback import ensure_hypothesis  # noqa: E402
 
-    strategies = types.ModuleType("hypothesis.strategies")
-    for _name in ("integers", "floats", "booleans", "text", "lists",
-                  "tuples", "sampled_from", "one_of", "just"):
-        setattr(strategies, _name, _strategy)
+_hyp = ensure_hypothesis()
 
-    def given(*args, **kwargs):
-        def decorate(fn):
-            return pytest.mark.skip(
-                reason="hypothesis not installed; property test skipped")(fn)
-        return decorate
-
-    def settings(*args, **kwargs):
-        def decorate(fn):
-            return fn
-        return decorate
-
-    settings.register_profile = lambda *a, **k: None
-    settings.load_profile = lambda *a, **k: None
-
-    stub = types.ModuleType("hypothesis")
-    stub.given = given
-    stub.settings = settings
-    stub.strategies = strategies
-    stub.HealthCheck = types.SimpleNamespace(
-        too_slow=None, data_too_large=None, filter_too_much=None)
-    stub.assume = lambda *a, **k: True
-    stub.note = lambda *a, **k: None
-    stub.__is_stub__ = True
-
-    sys.modules["hypothesis"] = stub
-    sys.modules["hypothesis.strategies"] = strategies
+if not getattr(_hyp, "__is_fallback__", False):
+    # Real hypothesis: deterministic CI profile (fixed seed via derandomize,
+    # bounded examples, no deadline — jit compiles blow any wall-clock
+    # budget on the first example of each shape).
+    _hyp.settings.register_profile(
+        "ci", max_examples=25, deadline=None, derandomize=True,
+        print_blob=True)
+    _hyp.settings.register_profile("dev", max_examples=10, deadline=None)
+    _hyp.settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))

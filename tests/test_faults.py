@@ -1,0 +1,390 @@
+"""Fault-injection suite for StudyPool + StudyGateway: trials raising
+mid-round, capacity overflow mid-drain, checkpoint/eviction write failures,
+and kill/restore — asserting the all-or-nothing absorb contract and that
+recovery never replays a pre-crash batch (DESIGN.md §9)."""
+import asyncio
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt_mod
+from repro.checkpoint import store as store_mod
+from repro.core import GPCapacityError
+from repro.core.acquisition import AcqConfig
+from repro.hpo import GatewayConfig, SchedulerConfig, StudyGateway, StudyPool
+from repro.hpo.pool import Trial
+from repro.hpo.space import RESNET_SPACE
+
+
+def _cfg(d, n_max=16, **kw):
+    kw.setdefault("acq", AcqConfig(restarts=8, ascent_steps=4))
+    kw.setdefault("ckpt_every", 10_000)
+    return SchedulerConfig(n_max=n_max, seed=0, ckpt_dir=d, **kw)
+
+
+def obj(sid, unit):
+    return float(-np.sum((np.asarray(unit) - 0.2 - 0.12 * sid) ** 2))
+
+
+def _foreign_trial(unit) -> Trial:
+    """An observation told out-of-band (never asked) — the injection vector
+    for capacity faults the ask-side admission cannot see."""
+    return Trial(10_000, np.asarray(unit, np.float32), {})
+
+
+# ---------------------------------------------------------------------------
+# Trials raising mid-round
+# ---------------------------------------------------------------------------
+def test_trial_raising_mid_round_penalizes_and_isolates():
+    """A client whose training run throws reports tell_failure: the trial
+    ledger records the fault, the penalty pseudo-observation rides the same
+    coalesced absorb path, and neighbors advance undisturbed."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, failure_penalty=-9.0),
+                          GatewayConfig(slots=2))
+        bad, good = gw.create_study(), gw.create_study()
+        t_bad, t_good = await asyncio.gather(gw.ask(bad), gw.ask(good))
+        gw.tell_failure(bad, t_bad, "OOM: node lost")
+        gw.tell(good, t_good, 0.7)
+        await gw.drain()
+        assert t_bad.status == "failed" and "OOM" in t_bad.error
+        # penalty absorbed into the owning study only
+        slot_bad = gw._studies[bad].slot
+        assert gw._studies[bad].n_obs == 1
+        assert float(gw.pool.state(slot_bad).y_buf[0]) == pytest.approx(-9.0)
+        assert gw._studies[good].n_obs == 1
+        # a penalty pseudo-observation is never reported as the best
+        assert gw.study_info(bad)["best_value"] is None
+        assert gw.study_info(good)["best_value"] == pytest.approx(0.7)
+        # the failed study keeps serving
+        t2 = await gw.ask(bad)
+        gw.tell(bad, t2, 0.1)
+        await gw.drain()
+        assert gw._studies[bad].n_obs == 2
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_trial_failure_without_penalty_is_ledger_only():
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        s = gw.create_study()
+        tr = await gw.ask(s)
+        gw.tell_failure(s, tr, "SIGKILL")
+        await gw.drain()
+        assert tr.status == "failed" and gw._studies[s].n_obs == 0
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+# ---------------------------------------------------------------------------
+# Capacity overflow mid-drain (gateway layer over absorb_many's contract)
+# ---------------------------------------------------------------------------
+def test_capacity_overflow_mid_drain_absorbs_nothing_then_recovers():
+    """A tick whose tell queue overflows a study must absorb NOTHING
+    (advance_round capacity-checks the whole round first); the absorbable
+    prefix requeues and lands next tick, the rest dead-letters."""
+    with tempfile.TemporaryDirectory() as d:
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=2),
+                          GatewayConfig(slots=2, max_inflight=8))
+        s = gw.create_study()
+        rng = np.random.default_rng(0)
+        gw.tell(s, _foreign_trial(rng.uniform(size=3)), 0.5)
+        gw.tick()
+        assert gw._studies[s].n_obs == 1
+        a, b = (_foreign_trial(rng.uniform(size=3)) for _ in range(2))
+        gw.tell(s, a, 0.1)
+        gw.tell(s, b, 0.2)           # 1 + 2 > n_max=2: the round must abort
+        with pytest.raises(GPCapacityError):
+            gw.tick()
+        # all-or-nothing: neither observation entered the GP or the ledger
+        assert gw._studies[s].n_obs == 1
+        slot = gw._studies[s].slot
+        assert gw.pool.engine.n(slot) == 1
+        # the fitting tell requeued; the unfittable one dead-lettered
+        assert len(gw._tells) == 1 and gw._tells[0][1] is a
+        assert len(gw.dead_tells) == 1 and gw.dead_tells[0][1] is b
+        assert b.status == "failed" and "capacity" in b.error
+        gw.tick()                    # recovery: the requeued tell absorbs
+        assert gw._studies[s].n_obs == 2 and a.status == "done"
+
+
+def test_capacity_abort_fails_coalesced_asks_but_spares_neighbors():
+    """Asks coalesced into an aborted round get the error at their future;
+    a neighbor study keeps serving on the next tick."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=1),
+                          GatewayConfig(slots=2, max_inflight=8))
+        full, ok = gw.create_study(), gw.create_study()
+        gw.tell(full, _foreign_trial(np.full(3, 0.5)), 0.4)
+        await asyncio.sleep(0)       # no ticker yet: queue is still cold
+        gw.tick()
+        assert gw._studies[full].n_obs == 1
+        # overflow tell + a concurrent ask for the healthy neighbor
+        gw.tell(full, _foreign_trial(np.full(3, 0.25)), 0.1)
+        ask = asyncio.ensure_future(gw.ask(ok))
+        with pytest.raises(GPCapacityError):
+            await ask
+        # neighbor recovers with a plain re-ask
+        tr = await gw.ask(ok)
+        gw.tell(ok, tr, 0.3)
+        await gw.drain()
+        assert gw._studies[ok].n_obs == 1
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / eviction write failures
+# ---------------------------------------------------------------------------
+def test_checkpoint_write_failure_leaves_previous_snapshot(monkeypatch):
+    with tempfile.TemporaryDirectory() as d:
+        cfg = _cfg(d)
+        pool = StudyPool([RESNET_SPACE] * 2, cfg)
+        rng = np.random.default_rng(0)
+        pool.absorb(0, pool._make_trial(0, rng.uniform(size=3).astype(
+            np.float32)), 0.5)
+        pool.checkpoint()
+        good_step = ckpt_mod.latest_step(d)
+        pool.absorb(1, pool._make_trial(1, rng.uniform(size=3).astype(
+            np.float32)), 0.7)
+
+        def boom(*a, **k):
+            raise OSError("disk full")
+        monkeypatch.setattr(store_mod.np, "savez", boom)
+        with pytest.raises(OSError, match="disk full"):
+            pool.checkpoint()
+        monkeypatch.undo()
+        # no committed garbage, no uncommitted debris, old snapshot intact
+        assert ckpt_mod.latest_step(d) == good_step
+        assert not [f for f in os.listdir(d) if f.startswith(".tmp_ckpt_")]
+        # the pool itself is unharmed: a retry commits the current state
+        pool.checkpoint()
+        assert ckpt_mod.latest_step(d) > good_step
+        fresh = StudyPool([RESNET_SPACE] * 2, cfg)
+        assert fresh.restore()
+        assert fresh.engine.n(0) == 1 and fresh.engine.n(1) == 1
+
+
+def test_eviction_write_failure_keeps_study_resident(monkeypatch):
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        a, b = gw.create_study(), gw.create_study()
+        tr = await gw.ask(a)
+        gw.tell(a, tr, 0.5)
+        await gw.drain()
+
+        def boom(*args, **kw):
+            raise OSError("evict store down")
+        monkeypatch.setattr(store_mod.np, "savez", boom)
+        # b's ask needs a's slot; the eviction snapshot fails to commit →
+        # the tick surfaces the IO error, requeues the ask untouched, and
+        # a stays resident and serving
+        gw.ask_nowait(b)
+        with pytest.raises(OSError):
+            gw.tick()
+        monkeypatch.undo()
+        log_a = gw._studies[a]
+        assert log_a.slot is not None and log_a.version == 0
+        assert not ckpt_mod.list_studies(d)
+        # store back up: the deferred ask now succeeds via a real eviction
+        gw.tick()
+        assert gw._studies[b].slot is not None
+        assert log_a.slot is None and log_a.version == 1
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_tell_with_malformed_unit_rejected_at_caller():
+    """A wrong-dim unit must fail the offending tell() immediately — inside
+    the fused dispatch it would abort the whole coalesced tick, losing the
+    round's tells and stranding every other study's futures."""
+    with tempfile.TemporaryDirectory() as d:
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=2))
+        s = gw.create_study()
+        with pytest.raises(ValueError, match="unit shape"):
+            gw.tell(s, _foreign_trial(np.zeros(5)), 0.1)
+        with pytest.raises(ValueError, match="finite"):
+            gw.tell(s, _foreign_trial(np.full(3, np.nan)), 0.1)
+        with pytest.raises(ValueError, match="finite"):
+            gw.tell(s, _foreign_trial(np.full(3, 5.0)), 0.1)
+        assert not gw._tells and gw._studies[s].pending_tells == 0
+
+
+def test_io_fault_fails_parked_asks_instead_of_hanging(monkeypatch):
+    """An eviction-store IO fault during an async tick must surface at the
+    parked ask() futures, not silently kill the ticker with the clients
+    still awaiting (regression: the ticker died, the asks were requeued
+    unresolved, and the gateway hung forever).  Queued tells survive and
+    the gateway keeps serving once the store recovers."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        a, b = gw.create_study(), gw.create_study()
+        tr = await gw.ask(a)
+        gw.tell(a, tr, 0.5)
+        await gw.drain()
+
+        def boom(*args, **kw):
+            raise OSError("evict store down")
+        monkeypatch.setattr(store_mod.np, "savez", boom)
+        # b's ask forces an eviction of a; the snapshot write fails → the
+        # error lands on b's future instead of hanging it
+        with pytest.raises(OSError, match="evict store down"):
+            await asyncio.wait_for(gw.ask(b), timeout=30)
+        monkeypatch.undo()
+        assert gw._studies[a].slot is not None   # a stayed resident
+        # store back up: a fresh ask re-creates the ticker and serves
+        tb = await asyncio.wait_for(gw.ask(b), timeout=30)
+        gw.tell(b, tb, 0.2)
+        await gw.drain()
+        assert gw.study_info(b)["n_obs"] == 1
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+# ---------------------------------------------------------------------------
+# Kill / restore
+# ---------------------------------------------------------------------------
+def test_gateway_restore_replays_no_pre_crash_batch():
+    """Extends PR 2's PRNG-persistence guarantee to the gateway + eviction:
+    nothing suggested before the crash is ever suggested again after
+    restore, and the restored run re-derives post-checkpoint work
+    identically to an uninterrupted gateway."""
+    async def drive(gw, sids, rounds, streams):
+        for _ in range(rounds):
+            for s in sids:
+                tr = await gw.ask(s)
+                streams[s].append(tuple(np.asarray(tr.unit).tolist()))
+                gw.tell(s, tr, obj(s, tr.unit))
+                await gw.drain()
+
+    async def main(d_ref, d_crash):
+        # uninterrupted reference
+        ref = StudyGateway(RESNET_SPACE, _cfg(d_ref), GatewayConfig(slots=2))
+        ref_sids = [ref.create_study() for _ in range(3)]
+        ref_streams = {s: [] for s in ref_sids}
+        await drive(ref, ref_sids, 4, ref_streams)
+        await ref.aclose()
+
+        gw = StudyGateway(RESNET_SPACE, _cfg(d_crash), GatewayConfig(slots=2))
+        sids = [gw.create_study() for _ in range(3)]
+        pre = {s: [] for s in sids}
+        await drive(gw, sids, 2, pre)
+        gw.checkpoint()              # quiescent snapshot
+        await drive(gw, sids, 1, {s: [] for s in sids})  # lost to the crash
+        await gw.aclose()            # CRASH (post-checkpoint work discarded)
+
+        gw2 = StudyGateway(RESNET_SPACE, _cfg(d_crash), GatewayConfig(slots=2))
+        assert gw2.restore()
+        post = {s: [] for s in sids}
+        await drive(gw2, sids, 2, post)
+        await gw2.aclose()
+
+        for s in sids:
+            assert set(pre[s]).isdisjoint(post[s]), \
+                "restored gateway replayed a pre-crash suggestion"
+            # restored == uninterrupted, bitwise, through eviction churn
+            assert pre[s] + post[s] == ref_streams[s]
+    with tempfile.TemporaryDirectory() as d_ref, \
+            tempfile.TemporaryDirectory() as d_crash:
+        asyncio.run(main(d_ref, d_crash))
+
+
+def test_restored_gateway_checkpoints_never_regress_step():
+    """The pool's snapshot step must resume from the restored snapshot's
+    own step, not from the resident ledgers: with studies evicted, the
+    absorbed observations live in partial snapshots, so a ledger count
+    under-counts and a post-restore checkpoint written at a LOWER step
+    would be shadowed forever by the pre-crash one (restore_latest picks
+    the max) — silently losing the whole resumed run."""
+    async def drive(gw, s, rounds):
+        for _ in range(rounds):
+            tr = await gw.ask(s)
+            gw.tell(s, tr, obj(s, tr.unit))
+            await gw.drain()
+
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        a, b = gw.create_study(), gw.create_study()
+        await drive(gw, a, 2)
+        await drive(gw, b, 2)        # evicts a: its 2 obs leave the ledgers
+        gw.checkpoint()
+        step1 = ckpt_mod.latest_step(d)
+        await gw.aclose()
+
+        gw2 = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        assert gw2.restore()
+        await drive(gw2, a, 1)       # restores a on demand (evicting b)
+        gw2.checkpoint()
+        assert ckpt_mod.latest_step(d) > step1, \
+            "post-restore checkpoint regressed the snapshot step"
+        await gw2.aclose()
+
+        # the run-2 checkpoint is the recovery point and is self-consistent
+        gw3 = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        assert gw3.restore()
+        assert gw3._studies[a].n_obs == 3 and gw3._studies[b].n_obs == 2
+        # its registry's study versions survived the commit-time prune:
+        # restore-on-demand of the evicted tenant must still succeed
+        evicted = a if gw3._studies[a].slot is None else b
+        await drive(gw3, evicted, 1)
+        await gw3.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_restore_with_mismatched_n_max_raises():
+    """A checkpoint taken at one n_max must not load into a pool built with
+    another: the buffers are fixed-size, and a silent load would let the
+    capacity guards (reading the new cfg) drive appends past the restored
+    rows — JAX clamps the out-of-bounds index and overwrites the last row
+    (regression: only the study COUNT was validated, not the shapes)."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=10),
+                          GatewayConfig(slots=2))
+        s = gw.create_study()
+        tr = await gw.ask(s)
+        gw.tell(s, tr, 0.5)
+        await gw.drain()
+        gw.checkpoint()
+        await gw.aclose()
+        gw2 = StudyGateway(RESNET_SPACE, _cfg(d, n_max=13),
+                           GatewayConfig(slots=2))
+        with pytest.raises(ValueError, match="shape mismatch"):
+            gw2.restore()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_pool_kill_mid_round_restores_to_last_commit():
+    """A crash between checkpoints rewinds to the last committed snapshot;
+    the replayed round re-derives the same state it would have had."""
+    with tempfile.TemporaryDirectory() as d:
+        cfg = _cfg(d, ckpt_every=1)
+        pool = StudyPool([RESNET_SPACE] * 2, cfg)
+        rng = np.random.default_rng(3)
+        units = [rng.uniform(size=3).astype(np.float32) for _ in range(4)]
+        pool.absorb(0, pool._make_trial(0, units[0]), 0.1)
+        pool.absorb(1, pool._make_trial(1, units[1]), 0.2)
+        alpha_commit = np.asarray(pool.state(0).alpha).copy()
+        # round 2 completes on the GP but the process dies before its
+        # checkpoint commits: simulate by absorbing with cadence disabled
+        pool.cfg = _cfg(d, ckpt_every=10_000)
+        pool.absorb(0, pool._make_trial(0, units[2]), 0.3)
+
+        fresh = StudyPool([RESNET_SPACE] * 2, _cfg(d, ckpt_every=1))
+        assert fresh.restore()
+        assert fresh.engine.n(0) == 1 and fresh.engine.n(1) == 1
+        np.testing.assert_array_equal(np.asarray(fresh.state(0).alpha),
+                                      alpha_commit)
+        # replaying the lost round lands on the same posterior
+        fresh.absorb(0, fresh._make_trial(0, units[2]), 0.3)
+        np.testing.assert_array_equal(np.asarray(fresh.state(0).alpha),
+                                      np.asarray(pool.state(0).alpha))

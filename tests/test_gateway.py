@@ -1,0 +1,497 @@
+"""StudyGateway tests: coalescing ticks, admission control, slot lifecycle
+(LRU eviction + restore-on-demand, exactness), and gateway checkpointing
+(DESIGN.md §9)."""
+import asyncio
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt_mod
+from repro.core import GPCapacityError
+from repro.core.acquisition import AcqConfig
+from repro.hpo import GatewayConfig, SchedulerConfig, StudyGateway
+from repro.hpo.space import LENET_SPACE, RESNET_SPACE
+
+
+def _cfg(d, n_max=16, **kw):
+    kw.setdefault("acq", AcqConfig(restarts=8, ascent_steps=4))
+    kw.setdefault("ckpt_every", 10_000)   # cadence off unless a test wants it
+    return SchedulerConfig(n_max=n_max, seed=0, ckpt_dir=d, **kw)
+
+
+def obj(sid, unit):
+    c = 0.2 + 0.12 * (sid % 5)
+    return float(-np.sum((np.asarray(unit) - c) ** 2))
+
+
+async def _loop(gw, sid, rounds, out=None):
+    for _ in range(rounds):
+        tr = await gw.ask(sid)
+        if out is not None:
+            out.append(np.asarray(tr.unit).copy())
+        gw.tell(sid, tr, obj(sid, tr.unit))
+    await gw.drain()
+
+
+def test_gateway_requires_ckpt_dir():
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        StudyGateway(RESNET_SPACE, SchedulerConfig(n_max=8, ckpt_dir=None))
+
+
+def test_concurrent_asks_coalesce_into_one_tick():
+    """N clients asking at once must be served by ONE fused dispatch."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=6))
+        sids = [gw.create_study() for _ in range(6)]
+        trials = await asyncio.gather(*(gw.ask(s) for s in sids))
+        assert len({id(t) for t in trials}) == 6
+        assert gw.summary()["ticks"] == 1
+        assert gw.stats[-1]["width"] == 6
+        for s, tr in zip(sids, trials):
+            gw.tell(s, tr, obj(s, tr.unit))
+        await gw.drain()
+        # the tells coalesced too: one absorb round
+        assert gw.summary()["ticks"] == 2
+        assert gw.stats[-1]["absorbed"] == 6
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_coalesce_window_gathers_staggered_asks():
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d),
+                          GatewayConfig(slots=2, coalesce_ms=150))
+        a, b = gw.create_study(), gw.create_study()
+
+        async def late_ask(sid):
+            await asyncio.sleep(0.01)
+            return await gw.ask(sid)
+
+        t1, t2 = await asyncio.gather(gw.ask(a), late_ask(b))
+        assert gw.summary()["ticks"] == 1     # both landed in one window
+        gw.tell(a, t1, 0.1)
+        gw.tell(b, t2, 0.2)
+        await gw.drain()
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_max_batch_caps_tick_width():
+    with tempfile.TemporaryDirectory() as d:
+        gw = StudyGateway(RESNET_SPACE, _cfg(d),
+                          GatewayConfig(slots=4, max_batch=2))
+        sids = [gw.create_study() for _ in range(4)]
+        for s in sids:
+            gw.ask_nowait(s)
+        assert gw.tick() == 2 and gw.stats[-1]["width"] == 2
+        assert gw.tick() == 2
+        assert gw.tick() == 0
+
+
+def test_one_ask_per_study_per_tick():
+    """A second queued ask for the same study waits for the next round."""
+    with tempfile.TemporaryDirectory() as d:
+        gw = StudyGateway(RESNET_SPACE, _cfg(d),
+                          GatewayConfig(slots=2, max_inflight=4))
+        s = gw.create_study()
+        gw.ask_nowait(s)
+        gw.ask_nowait(s)
+        assert gw.tick() == 1
+        assert gw.tick() == 1
+
+
+def test_admission_rejects_inflight_and_queue_overflow():
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d),
+                          GatewayConfig(slots=2, max_inflight=2, max_queue=3))
+        s = gw.create_study()
+        t1 = await gw.ask(s)
+        t2 = await gw.ask(s)
+        with pytest.raises(GPCapacityError, match="in flight"):
+            await gw.ask(s)
+        gw.tell(s, t1, 0.1)
+        gw.tell(s, t2, 0.2)
+        await gw.drain()
+        await gw.aclose()
+        # queue bound (sync path; ticker never runs)
+        gw2 = StudyGateway(RESNET_SPACE, _cfg(d + "/q"),
+                           GatewayConfig(slots=2, max_queue=3,
+                                         max_inflight=8))
+        q = gw2.create_study()
+        for _ in range(3):
+            gw2.ask_nowait(q)
+        with pytest.raises(GPCapacityError, match="queue full"):
+            gw2.ask_nowait(q)
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_capacity_aware_ask_reject_before_training():
+    """An ask whose eventual tell cannot fit n_max is refused up front."""
+    with tempfile.TemporaryDirectory() as d:
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=3),
+                          GatewayConfig(slots=1, max_inflight=8))
+        s = gw.create_study()
+        for _ in range(3):
+            gw.ask_nowait(s)
+            gw.tick()
+        # 3 suggestions out == n_max committed: a 4th can never be absorbed
+        with pytest.raises(GPCapacityError, match="n_max"):
+            gw.ask_nowait(s)
+
+
+def test_eviction_restore_is_exact_bitwise():
+    """THE serving-layer contract: a study evicted to its partial snapshot
+    and restored on demand produces bitwise-identical suggestions to the
+    same study in a gateway with enough slots to never evict."""
+    async def probe(d, slots):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=slots))
+        sids = [gw.create_study(name=f"t{i}") for i in range(3)]
+        out = []
+        for _ in range(5):
+            tr = await gw.ask(sids[0])
+            out.append(np.asarray(tr.unit).copy())
+            gw.tell(sids[0], tr, obj(0, tr.unit))
+            await gw.drain()
+            for s in sids[1:]:    # churn: forces sids[0] out when slots=2
+                tr2 = await gw.ask(s)
+                gw.tell(s, tr2, obj(s, tr2.unit))
+                await gw.drain()
+        log = gw._studies[sids[0]]
+        await gw.aclose()
+        return out, log
+
+    async def main(d1, d2):
+        resident, log_a = await probe(d1, slots=3)
+        churned, log_b = await probe(d2, slots=2)
+        assert not log_a.evicted_ever
+        assert log_b.evicted_ever and log_b.version >= 2
+        for k, (x, y) in enumerate(zip(resident, churned)):
+            assert np.array_equal(x, y), \
+                f"suggestion {k} diverged after eviction/restore"
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        asyncio.run(main(d1, d2))
+
+
+def test_more_logical_studies_than_slots():
+    """The pool serves S_logical > slots via LRU eviction; every study
+    makes progress and eviction traffic shows up in the telemetry."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=2))
+        sids = [gw.create_study() for _ in range(5)]
+        await asyncio.gather(*(_loop(gw, s, 3) for s in sids))
+        for s in sids:
+            assert gw._studies[s].n_obs == 3
+        assert gw.summary()["evictions"] >= 3
+        # best_value is residency-independent: evicted tenants keep theirs
+        for s in sids:
+            assert gw.study_info(s)["best_value"] is not None
+        # an evicted study transparently restores on its next ask
+        evicted = next(s for s in sids if gw._studies[s].slot is None
+                       and gw._studies[s].evicted_ever)
+        await _loop(gw, evicted, 1)
+        assert gw.summary()["restores"] >= 1
+        assert gw._studies[evicted].n_obs == 4
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_asks_defer_when_all_slots_pinned():
+    """Asks beyond the slot count wait (backpressure), not fail: they are
+    served as soon as a tell frees a study."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=2))
+        a, b, c = (gw.create_study() for _ in range(3))
+        ta = await gw.ask(a)
+        tb = await gw.ask(b)
+        # both slots pinned by in-flight work: c's ask must defer
+        ask_c = asyncio.ensure_future(gw.ask(c))
+        await asyncio.sleep(0.05)
+        assert not ask_c.done()
+        gw.tell(a, ta, 0.5)             # frees study a at the next tick
+        tc = await asyncio.wait_for(ask_c, timeout=30)
+        assert tc is not None
+        gw.tell(b, tb, 0.1)
+        gw.tell(c, tc, 0.2)
+        await gw.drain()
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_tell_failure_without_penalty_unblocks_deferred_ask():
+    """tell_failure with failure_penalty=None (the default) frees the
+    study's in-flight budget; a deferred ask waiting on that study must be
+    re-woken (regression: the wake was only set on the penalty path, so
+    the ticker parked forever and the deferred ask hung)."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        a, b = gw.create_study(), gw.create_study()
+        ta = await gw.ask(a)
+        ask_b = asyncio.ensure_future(gw.ask(b))
+        await asyncio.sleep(0.05)
+        assert not ask_b.done()      # a's in-flight work pins the only slot
+        gw.tell_failure(a, ta, "node lost")   # no penalty tell is queued
+        tb = await asyncio.wait_for(ask_b, timeout=30)
+        gw.tell(b, tb, 0.1)
+        await gw.drain()
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_cancelled_ask_does_not_leak_inflight():
+    """A client that cancels its ask before delivery must not pin the
+    study: the drawn suggestion is abandoned (ledger-marked failed), not
+    counted in flight — a leak would eat max_inflight and make the study
+    permanently non-evictable."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d),
+                          GatewayConfig(slots=2, max_inflight=1))
+        s = gw.create_study()
+        task = asyncio.ensure_future(gw.ask(s))
+        await asyncio.sleep(0)       # ask enqueued; the tick has not fired
+        task.cancel()
+        with pytest.raises(asyncio.CancelledError):
+            await task
+        await gw.drain()
+        log = gw._studies[s]
+        assert log.inflight == 0 and log.pending_asks == 0
+        # the max_inflight=1 budget is intact: a fresh ask is admitted
+        tr = await asyncio.wait_for(gw.ask(s), timeout=30)
+        gw.tell(s, tr, 0.2)
+        await gw.drain()
+        assert log.n_obs == 1
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_tell_rejects_nonfinite_and_replayed_results():
+    """Bad tells fail at the caller, never inside the fused round: NaN
+    values (a poisoned posterior would silently stop optimizing) and
+    replays of an already-resolved trial (the duplicate row would eat
+    n_max budget and double-weight the point)."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        s = gw.create_study()
+        tr = await gw.ask(s)
+        with pytest.raises(ValueError, match="non-finite"):
+            gw.tell(s, tr, float("nan"))
+        gw.tell(s, tr, 0.3)
+        with pytest.raises(RuntimeError, match="one tell"):
+            gw.tell(s, tr, 0.3)          # same-window replay
+        await gw.drain()
+        with pytest.raises(RuntimeError, match="one tell"):
+            gw.tell(s, tr, 0.3)          # replay after absorption
+        assert gw._studies[s].n_obs == 1
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_restore_cancels_parked_asks():
+    """restore() discards in-flight work; clients parked on pre-restore
+    asks must be cancelled, not left awaiting futures nobody will ever
+    resolve."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        a, b = gw.create_study(), gw.create_study()
+        ta = await gw.ask(a)
+        gw.tell(a, ta, 0.1)
+        await gw.drain()
+        gw.checkpoint()
+        ta2 = await gw.ask(a)            # pins the only slot again
+        ask_b = asyncio.ensure_future(gw.ask(b))
+        await asyncio.sleep(0.05)
+        assert not ask_b.done()          # parked, deferred
+        assert gw.restore()
+        with pytest.raises(asyncio.CancelledError):
+            await asyncio.wait_for(ask_b, timeout=10)
+        assert ta2 is not None
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_close_study_frees_slot_and_refuses_inflight():
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=2))
+        a, b = gw.create_study(), gw.create_study()
+        tr = await gw.ask(a)
+        with pytest.raises(RuntimeError, match="in flight"):
+            gw.close_study(a)
+        gw.tell(a, tr, 0.3)
+        await gw.drain()
+        gw.close_study(a)
+        with pytest.raises(RuntimeError, match="closed"):
+            await gw.ask(a)
+        # the freed slot serves a new tenant
+        tr_b = await gw.ask(b)
+        gw.tell(b, tr_b, 0.1)
+        await gw.drain()
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_closed_studies_leave_registry_and_store():
+    """Tenant churn must not grow the registry or the eviction store:
+    close_study tombstones the id, drops the record, and the next
+    checkpoint COMMIT deletes its snapshot dirs (never before — a crash
+    must restore a registry whose studies are all on disk).  Lifetime
+    telemetry totals ride the registry across restores."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        a, b = gw.create_study(), gw.create_study()
+        await _loop(gw, a, 1)
+        await _loop(gw, b, 1)           # evicts a to the store
+        assert ckpt_mod.list_studies(d)
+        gw.close_study(a)
+        assert ckpt_mod.list_studies(d)  # snapshots survive until commit
+        gw.checkpoint()
+        assert not ckpt_mod.list_studies(d)
+        await gw.aclose()
+
+        gw2 = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        assert gw2.restore()
+        assert gw2.study_ids() == [b]
+        with pytest.raises(RuntimeError, match="closed"):
+            await gw2.ask(a)
+        s = gw2.summary()
+        assert s["ticks"] > 0 and s["asks_served"] == 2  # lifetime totals
+        await gw2.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_mismatched_space_dim_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        gw = StudyGateway(RESNET_SPACE, _cfg(d))
+        with pytest.raises(ValueError, match="dim"):
+            gw.create_study(space=LENET_SPACE)
+
+
+def test_create_study_default_space_survives_slot_churn():
+    """create_study()'s default is the constructor template, NOT whatever
+    tenant currently occupies slot 0 (regression: a custom-space tenant in
+    slot 0 leaked its bounds into later default-space studies)."""
+    from repro.hpo.space import Dim, SearchSpace
+    custom = SearchSpace((Dim("a", 5.0, 9.0), Dim("b", 5.0, 9.0),
+                          Dim("c", 5.0, 9.0)))
+    with tempfile.TemporaryDirectory() as d:
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=1))
+        s0 = gw.create_study(space=custom)
+        gw.ask_nowait(s0)
+        gw.tick()                    # the custom tenant now owns slot 0
+        assert gw._studies[s0].slot == 0
+        s1 = gw.create_study()
+        assert gw._studies[s1].space is RESNET_SPACE
+
+
+def test_restore_reapplies_custom_space_to_resident_slots():
+    """The pool snapshot carries no spaces; gateway.restore() must push
+    each logical study's own space back onto its resident slot (regression:
+    restored resident studies mapped suggestions through the constructor's
+    template bounds)."""
+    from repro.hpo.space import Dim, SearchSpace
+    custom = SearchSpace((Dim("c0", 100.0, 200.0), Dim("c1", 100.0, 200.0),
+                          Dim("c2", 100.0, 200.0)))
+
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=2))
+        s = gw.create_study(space=custom)
+        tr = await gw.ask(s)
+        gw.tell(s, tr, 0.1)
+        await gw.drain()
+        gw.checkpoint()
+        await gw.aclose()
+
+        gw2 = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=2))
+        assert gw2.restore()
+        assert gw2._studies[s].slot is not None     # restored resident
+        tr2 = await gw2.ask(s)
+        assert set(tr2.hparams) == {"c0", "c1", "c2"}
+        assert all(100.0 <= v <= 200.0 for v in tr2.hparams.values())
+        gw2.tell(s, tr2, 0.2)
+        await gw2.drain()
+        await gw2.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_gateway_checkpoint_restore_roundtrip():
+    """A restored gateway resumes registry, slot map, ledgers, and PRNG
+    streams; subsequent suggestions match an uninterrupted gateway."""
+    async def main(d_a, d_b):
+        streams = {}
+        for key, dd, interrupt in (("a", d_a, False), ("b", d_b, True)):
+            gw = StudyGateway(RESNET_SPACE, _cfg(dd), GatewayConfig(slots=2))
+            sids = [gw.create_study(name=f"t{i}") for i in range(3)]
+            out = {s: [] for s in sids}
+            for s in sids:
+                await _loop(gw, s, 2, out[s])
+            if interrupt:
+                gw.checkpoint()
+                await gw.aclose()
+                gw = StudyGateway(RESNET_SPACE, _cfg(dd),
+                                  GatewayConfig(slots=2))
+                assert gw.restore()
+                for s in sids:
+                    assert gw._studies[s].n_obs == 2
+            for s in sids:
+                await _loop(gw, s, 2, out[s])
+            await gw.aclose()
+            streams[key] = out
+        for s in streams["a"]:
+            for k, (x, y) in enumerate(zip(streams["a"][s],
+                                           streams["b"][s])):
+                assert np.array_equal(x, y), \
+                    f"study {s} suggestion {k} diverged across restore"
+    with tempfile.TemporaryDirectory() as d_a, \
+            tempfile.TemporaryDirectory() as d_b:
+        asyncio.run(main(d_a, d_b))
+
+
+def test_summary_counts_are_lifetime_not_windowed():
+    """asks_served/absorbed/evictions/restores are run totals; only the
+    latency/width distributions roll over with the stats window."""
+    with tempfile.TemporaryDirectory() as d:
+        gw = StudyGateway(RESNET_SPACE, _cfg(d),
+                          GatewayConfig(slots=2, stats_window=2))
+        s = gw.create_study()
+        for _ in range(4):
+            gw.ask_nowait(s)
+            gw.tick()
+        assert len(gw.stats) == 2            # window capped
+        assert gw.summary()["asks_served"] == 4   # lifetime total
+
+
+def test_telemetry_summary_fields():
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d), GatewayConfig(slots=3))
+        # zero-traffic summary carries the full key set (consumers index
+        # these unconditionally)
+        empty = gw.summary()
+        assert empty["ticks"] == 0 and empty["asks_served"] == 0
+        assert empty["mean_coalesce_width"] == 0.0
+        sids = [gw.create_study() for _ in range(3)]
+        await asyncio.gather(*(_loop(gw, s, 2) for s in sids))
+        s = gw.summary()
+        assert s["asks_served"] == 6 and s["absorbed"] == 6
+        assert s["mean_coalesce_width"] >= 1.0
+        assert s["p50_tick_ms"] > 0 and s["p95_tick_ms"] >= s["p50_tick_ms"]
+        assert gw.study_ids() == sids
+        info = gw.study_info(sids[0])
+        assert info["n_obs"] == 2 and info["resident"]
+        assert info["best_value"] is not None
+        with pytest.raises(KeyError):
+            gw.study_info(999)
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))

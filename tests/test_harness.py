@@ -1,0 +1,203 @@
+"""Tests for the test harness itself: the hypothesis fallback must engage
+ONLY when hypothesis is absent — a broken install re-raises — and its
+example streams must be deterministic (the property jobs rely on that)."""
+import importlib
+import random
+import sys
+
+import pytest
+
+from _hypothesis_fallback import _build_fallback, ensure_hypothesis
+
+
+class _BrokenHypothesisFinder:
+    """Meta-path hook simulating a present-but-broken hypothesis install."""
+
+    def __init__(self, exc):
+        self.exc = exc
+
+    def find_module(self, fullname, path=None):
+        return self if fullname == "hypothesis" else None
+
+    def find_spec(self, fullname, path=None, target=None):
+        if fullname == "hypothesis":
+            return importlib.util.spec_from_loader("hypothesis", self)
+        return None
+
+    def create_module(self, spec):
+        raise self.exc
+
+    def exec_module(self, module):  # pragma: no cover — create_module raises
+        raise self.exc
+
+
+def _without_hypothesis(exc):
+    saved = {k: sys.modules.pop(k) for k in list(sys.modules)
+             if k == "hypothesis" or k.startswith("hypothesis.")}
+    finder = _BrokenHypothesisFinder(exc)
+    sys.meta_path.insert(0, finder)
+    return saved, finder
+
+
+def _restore(saved, finder):
+    sys.meta_path.remove(finder)
+    for k in list(sys.modules):
+        if k == "hypothesis" or k.startswith("hypothesis."):
+            del sys.modules[k]
+    sys.modules.update(saved)
+
+
+def test_broken_hypothesis_install_reraises():
+    """ImportError from INSIDE the package must propagate, not silently
+    downgrade the property suite to the fallback."""
+    saved, finder = _without_hypothesis(
+        ImportError("hypothesis is installed but its extension is broken"))
+    try:
+        with pytest.raises(ImportError, match="extension is broken"):
+            ensure_hypothesis()
+    finally:
+        _restore(saved, finder)
+
+
+def test_missing_hypothesis_dependency_reraises():
+    """ModuleNotFoundError for a DEPENDENCY of hypothesis (e.g. attrs) is a
+    broken environment, not an absent optional extra."""
+    saved, finder = _without_hypothesis(
+        ModuleNotFoundError("No module named 'attrs'", name="attrs"))
+    try:
+        with pytest.raises(ModuleNotFoundError, match="attrs"):
+            ensure_hypothesis()
+    finally:
+        _restore(saved, finder)
+
+
+def test_absent_hypothesis_installs_fallback():
+    saved, finder = _without_hypothesis(
+        ModuleNotFoundError("No module named 'hypothesis'",
+                            name="hypothesis"))
+    try:
+        mod = ensure_hypothesis()
+        assert getattr(mod, "__is_fallback__", False)
+        assert sys.modules["hypothesis"] is mod
+    finally:
+        _restore(saved, finder)
+
+
+def test_fallback_draws_are_deterministic():
+    """Two runs of the same fallback-decorated test draw identical example
+    streams (the no-deps tier-1 jobs must be reproducible)."""
+    fb = _build_fallback()
+    st = fb.strategies
+
+    def collect():
+        seen = []
+
+        @fb.settings(max_examples=8)
+        @fb.given(n=st.integers(0, 1000), x=st.floats(-1.0, 1.0),
+                  tag=st.sampled_from("abcd"))
+        def probe(n, x, tag):
+            seen.append((n, x, tag))
+
+        probe()
+        return seen
+
+    a, b = collect(), collect()
+    assert a == b and len(a) == 8
+
+
+def test_fallback_assume_discards_examples():
+    fb = _build_fallback()
+    st = fb.strategies
+    ran = []
+
+    @fb.settings(max_examples=10)
+    @fb.given(n=st.integers(0, 9))
+    def probe(n):
+        fb.assume(n % 2 == 0)
+        ran.append(n)
+
+    probe()
+    assert ran and all(n % 2 == 0 for n in ran)
+
+
+def test_fallback_unsatisfiable_assume_fails_not_passes():
+    """A property whose assume() rejects every draw must FAIL — zero
+    examples executed is a no-op, not a passing test (real hypothesis
+    raises errors.Unsatisfiable; the fallback must not silently
+    downgrade that to green)."""
+    fb = _build_fallback()
+    st = fb.strategies
+
+    @fb.settings(max_examples=5)
+    @fb.given(n=st.integers(0, 9))
+    def probe(n):
+        fb.assume(False)
+
+    with pytest.raises(fb.errors.Unsatisfiable, match="no example"):
+        probe()
+
+
+def test_fallback_exhausted_filter_discards_not_errors():
+    """A .filter that rejects every draw must behave like assume(): the
+    example is discarded and the run ends in Unsatisfiable — the private
+    _Unsatisfied must never escape the runner (regression: draws happened
+    outside the try block)."""
+    fb = _build_fallback()
+    st = fb.strategies
+
+    @fb.settings(max_examples=3)
+    @fb.given(n=st.integers(0, 9).filter(lambda v: False))
+    def probe(n):
+        pass  # pragma: no cover — no example can ever be drawn
+
+    with pytest.raises(fb.errors.Unsatisfiable):
+        probe()
+
+
+def test_fallback_unique_lists_never_undershoot_min_size():
+    """lists(unique=True) must discard rather than hand back fewer than
+    min_size elements when the domain is too small."""
+    fb = _build_fallback()
+    st = fb.strategies
+    rng = random.Random(0)
+    with pytest.raises(fb._Unsatisfied):
+        st.lists(st.booleans(), min_size=4, max_size=6,
+                 unique=True).example(rng)
+    ok = [st.lists(st.integers(0, 50), min_size=3, max_size=5,
+                   unique=True).example(rng) for _ in range(20)]
+    assert all(3 <= len(v) <= 5 and len(set(v)) == len(v) for v in ok)
+
+
+def test_fallback_given_preserves_fixture_params():
+    """@given must hide only the strategy kwargs from the visible
+    signature: non-strategy params (pytest fixtures like tmp_path) stay
+    visible and are forwarded to the test (real hypothesis preserves
+    them; an empty Signature() made fixture-using property tests fail
+    only under the fallback)."""
+    import inspect
+
+    fb = _build_fallback()
+    st = fb.strategies
+    seen = []
+
+    @fb.settings(max_examples=4)
+    @fb.given(x=st.integers(0, 5))
+    def probe(tmp_path, x):
+        seen.append((tmp_path, x))
+
+    assert list(inspect.signature(probe).parameters) == ["tmp_path"]
+    probe(tmp_path="T")
+    assert len(seen) == 4 and all(t == "T" for t, _ in seen)
+
+
+def test_fallback_strategies_respect_bounds():
+    fb = _build_fallback()
+    st = fb.strategies
+    rng = random.Random(0)
+    ints = [st.integers(3, 7).example(rng) for _ in range(50)]
+    assert all(3 <= v <= 7 for v in ints)
+    floats = [st.floats(0.5, 2.5).example(rng) for _ in range(50)]
+    assert all(0.5 <= v <= 2.5 for v in floats)
+    lists = [st.lists(st.integers(0, 1), min_size=2, max_size=4).example(rng)
+             for _ in range(20)]
+    assert all(2 <= len(v) <= 4 for v in lists)

@@ -237,8 +237,14 @@ def test_pool_rejects_mismatched_dims_and_study_counts():
         cfg = SchedulerConfig(n_max=8, seed=0, ckpt_dir=d)
         pool = StudyPool([RESNET_SPACE] * 2, cfg)
         pool.checkpoint()
+        # the stacked-buffer shape guard fires before the registry count
+        # check: the S axis is part of every leaf's shape
         with pytest.raises(ValueError, match="studies"):
             StudyPool([RESNET_SPACE] * 3, cfg).restore()
+        # same-shape pool with a different n_max is also refused
+        with pytest.raises(ValueError, match="shape mismatch"):
+            StudyPool([RESNET_SPACE] * 2,
+                      SchedulerConfig(n_max=12, seed=0, ckpt_dir=d)).restore()
 
 
 def test_repeated_seeding_draws_fresh_points():

@@ -1,0 +1,174 @@
+"""Property-based suite (hypothesis; falls back to the deterministic
+conftest shim when the package is absent — either way these RUN, they do
+not skip).
+
+Three families, per the PR-4 testing-debt payoff:
+  * search-space round-trips under *random* specs (not just the presets),
+  * append→posterior invariants against the ref substrate's dense GP,
+  * an `li_buf` drift bound across random append/re-anchor interleavings —
+    the state-machine property guarding the matmul-only batched path (the
+    maintained inverse must track the factor through ANY op sequence).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GPConfig, append, dense_posterior, init_state,
+                        matern52, posterior, refactor)
+from repro.hpo.space import Dim, SearchSpace
+
+
+# ---------------------------------------------------------------------------
+# Search-space round-trips under random specs
+# ---------------------------------------------------------------------------
+def _space_from_spec(spec) -> SearchSpace:
+    dims = []
+    for i, (lo, width, is_log) in enumerate(spec):
+        if is_log:
+            lo_v = abs(lo) + 1e-3          # log dims need lo > 0
+            dims.append(Dim(f"d{i}", lo_v, lo_v * (1.0 + width), "log"))
+        else:
+            dims.append(Dim(f"d{i}", lo, lo + width))
+    return SearchSpace(tuple(dims))
+
+
+_SPEC = st.lists(st.tuples(st.floats(-5.0, 5.0), st.floats(0.1, 50.0),
+                           st.booleans()), min_size=1, max_size=6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=_SPEC, u=st.floats(0.0, 1.0))
+def test_space_value_of_unit_roundtrips(spec, u):
+    """to_unit(to_value(u)) == u for any random spec, on both scales."""
+    space = _space_from_spec(spec)
+    unit = np.full(space.dim, u, np.float32)
+    back = space.to_unit(space.to_hparams(unit))
+    np.testing.assert_allclose(back, np.clip(unit, 0.0, 1.0),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=_SPEC, f=st.floats(0.0, 1.0))
+def test_space_unit_of_value_roundtrips(spec, f):
+    """to_value(to_unit(v)) == v for any in-range value."""
+    space = _space_from_spec(spec)
+    hp = {d.name: d.to_value(f) for d in space.dims}
+    unit = space.to_unit(hp)
+    hp_back = space.to_hparams(unit)
+    for d in space.dims:
+        np.testing.assert_allclose(hp_back[d.name], hp[d.name],
+                                   rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(spec=_SPEC, u=st.floats(-2.0, 3.0))
+def test_space_out_of_range_units_clamp(spec, u):
+    """to_value clamps units outside [0, 1] to the dim bounds."""
+    space = _space_from_spec(spec)
+    hp = space.to_hparams(np.full(space.dim, u, np.float32))
+    for d in space.dims:
+        lo, hi = min(d.lo, d.hi), max(d.lo, d.hi)
+        assert lo - 1e-6 * abs(lo) <= hp[d.name] <= hi + 1e-6 * abs(hi)
+
+
+# ---------------------------------------------------------------------------
+# Append → posterior invariants vs the ref substrate's dense GP
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 10), seed=st.integers(0, 500))
+def test_append_posterior_matches_ref_dense(n, seed):
+    """A state built purely by lazy appends matches the textbook dense GP
+    computed by the reference substrate, and the posterior is well-formed
+    (nonnegative variance, near-interpolation at observed points)."""
+    d = 3
+    rng = np.random.default_rng(seed)
+    xs = rng.uniform(size=(n, d)).astype(np.float32)
+    ys = np.sin(3.0 * xs[:, 0]) + xs[:, 1] - 0.5 * xs[:, 2]
+    state = init_state(GPConfig(n_max=16, dim=d, noise2=1e-5,
+                                implementation="ref"))
+    for x, y in zip(xs, ys):
+        state = append(state, matern52, jnp.asarray(x),
+                       jnp.asarray(y, jnp.float32), implementation="ref")
+    xq = rng.uniform(size=(7, d)).astype(np.float32)
+    mean, var = posterior(state, matern52, jnp.asarray(xq),
+                          implementation="ref")
+    mean_d, var_d = dense_posterior(jnp.asarray(xs), jnp.asarray(ys),
+                                    jnp.asarray(xq), matern52, state.params,
+                                    implementation="ref")
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(mean_d),
+                               rtol=1e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var_d),
+                               rtol=1e-2, atol=2e-4)
+    assert np.all(np.asarray(var) >= 0.0)
+    mean_obs, var_obs = posterior(state, matern52, jnp.asarray(xs),
+                                  implementation="ref")
+    np.testing.assert_allclose(np.asarray(mean_obs), ys, atol=2e-2)
+    assert np.all(np.asarray(var_obs) < 1e-2)
+
+
+# ---------------------------------------------------------------------------
+# li_buf drift bound under random append/re-anchor interleavings
+# ---------------------------------------------------------------------------
+def _inverse_drift(state) -> float:
+    n = int(state.n)
+    if n == 0:
+        return 0.0
+    l_act = np.asarray(state.l_buf)[:n, :n]
+    li_act = np.asarray(state.li_buf)[:n, :n]
+    return float(np.abs(li_act @ l_act - np.eye(n)).max())
+
+
+@settings(max_examples=10, deadline=None)
+@given(ops=st.lists(st.sampled_from(["append", "append", "append",
+                                     "reanchor"]),
+                    min_size=1, max_size=24),
+       seed=st.integers(0, 999))
+def test_li_buf_tracks_factor_under_any_interleaving(ops, seed):
+    """State-machine property: through ANY interleaving of lazy appends and
+    re-anchor refactors, the maintained inverse stays within a tight drift
+    bound of the true factor inverse, and the padding block stays exactly
+    identity (measured drift over 36-append chains is ~1e-5; the bound
+    leaves two orders of slack for unlucky conditioning)."""
+    rng = np.random.default_rng(seed)
+    state = init_state(GPConfig(n_max=32, dim=2, noise2=1e-4))
+    for op in ops:
+        if op == "append":
+            x = rng.uniform(size=2).astype(np.float32)
+            y = float(np.sin(3.0 * x[0]) + x[1])
+            state = append(state, matern52, jnp.asarray(x),
+                           jnp.asarray(y, jnp.float32))
+        else:
+            state = refactor(state, matern52)
+            assert int(state.since_refit) == 0
+        assert _inverse_drift(state) < 5e-3
+        n = int(state.n)
+        pad_l = np.asarray(state.l_buf)[n:, n:]
+        pad_li = np.asarray(state.li_buf)[n:, n:]
+        eye = np.eye(state.n_max - n)
+        np.testing.assert_array_equal(pad_l, eye)
+        np.testing.assert_allclose(pad_li, eye, atol=1e-6)
+    # the interleaving never corrupts the observation count
+    assert int(state.n) == sum(op == "append" for op in ops)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 99), k=st.integers(8, 20))
+def test_reanchor_after_drift_restores_exact_inverse(seed, k):
+    """A re-anchor refactor collapses whatever drift a long lazy chain
+    accumulated back to (near) solver precision — the inv_refresh guard's
+    actual contract."""
+    rng = np.random.default_rng(seed)
+    state = init_state(GPConfig(n_max=32, dim=2, noise2=1e-4))
+    for _ in range(k):
+        x = rng.uniform(size=2).astype(np.float32)
+        state = append(state, matern52, jnp.asarray(x),
+                       jnp.asarray(float(x.sum()), jnp.float32))
+    refreshed = refactor(state, matern52)
+    assert _inverse_drift(refreshed) <= max(1e-5, _inverse_drift(state))
+    # params untouched by the re-anchor (it is not a refit)
+    for f in dataclasses.fields(state.params):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(state.params, f.name)),
+            np.asarray(getattr(refreshed.params, f.name)))
