@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
                       emits BENCH_shard.json
   * bench_serve    — coalesced ask–tell gateway vs per-client dispatches
                       at 16 concurrent clients, emits BENCH_serve.json
+  * bench_mixed    — mixed (float/int/categorical) space through the
+                      gateway + mixed-gram substrate parity at 1 and 8
+                      virtual devices, emits BENCH_mixed.json
 
 `python -m benchmarks.run [--full] [--only NAME]`.  The roofline analysis
 (§Roofline) is separate: `python -m benchmarks.roofline results/*.jsonl`
@@ -35,8 +38,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_cholesky, bench_lag, bench_levy,
-                            bench_nn_hpo, bench_parallel, bench_pool,
-                            bench_serve, bench_shard, bench_substrate)
+                            bench_mixed, bench_nn_hpo, bench_parallel,
+                            bench_pool, bench_serve, bench_shard,
+                            bench_substrate)
     suites = {
         "cholesky": lambda: bench_cholesky.run(full=args.full),
         "levy": lambda: bench_levy.run(full=args.full),
@@ -47,6 +51,7 @@ def main() -> None:
         "pool": lambda: bench_pool.run(full=args.full),
         "shard": lambda: bench_shard.run(full=args.full),
         "serve": lambda: bench_serve.run(full=args.full),
+        "mixed": lambda: bench_mixed.run(full=args.full),
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

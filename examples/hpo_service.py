@@ -2,7 +2,8 @@
 StudyPool (the ROADMAP's "serve heavy traffic" shape, in miniature).
 
     python examples/hpo_service.py [--studies 8] [--budget 12] [--workers 8] \
-        [--mesh auto]   # shard the suggest path over a device mesh (§8)
+        [--mesh auto]          # shard the suggest path over a device mesh (§8)
+        [--categorical-tenant]  # last tenant optimizes a Categorical space (§10)
 
 S tenants run concurrent HPO studies against one batched lazy-GP engine:
 each service round issues ONE fused `advance_round` dispatch — the masked
@@ -16,7 +17,10 @@ and a second invocation resumes every tenant's posterior.
 
 Each tenant optimizes its own synthetic objective (a shifted smooth bowl on
 the unit cube, distinct optimum per tenant) so per-study convergence is
-visible in the final report.
+visible in the final report.  With --categorical-tenant the last tenant
+runs a MIXED space (a 3-way categorical choice, same encoded width as the
+float tenants' ResNet space) through the very same batched rounds —
+heterogeneous type layouts share one stacked program (DESIGN.md §10).
 """
 import argparse
 import sys
@@ -28,15 +32,28 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.hpo.pool import SchedulerConfig, StudyPool  # noqa: E402
-from repro.hpo.space import RESNET_SPACE  # noqa: E402
+from repro.hpo.space import (Categorical, RESNET_SPACE,  # noqa: E402
+                             SearchSpace)
+
+# Same encoded width (3) as RESNET_SPACE, so both layouts stack in one
+# rectangular pool; the engine's per-study type descriptor keeps the
+# categorical tenant's suggestions on its one-hot lattice.
+CATEGORICAL_SPACE = SearchSpace((
+    Categorical("optimizer", ("sgd", "adam", "rmsprop")),
+))
+CATEGORICAL_SCORE = {"sgd": -0.3, "adam": 0.0, "rmsprop": -0.6}
 
 
-def make_objective(sid: int, latency: float):
-    """Tenant sid's trainer: smooth bowl with a per-tenant optimum."""
+def make_objective(sid: int, latency: float, space=None):
+    """Tenant sid's trainer: smooth bowl with a per-tenant optimum (float
+    tenants) or a per-choice score table (the categorical tenant)."""
     center = 0.15 + 0.7 * ((sid * 0.37) % 1.0)
 
     def objective(unit: np.ndarray) -> float:
         time.sleep(latency * (1.0 + 0.5 * ((sid + 1) % 3)))  # uneven tenants
+        if space is not None and space.has_discrete:
+            return CATEGORICAL_SCORE[
+                space.to_hparams(np.asarray(unit))["optimizer"]]
         return float(-np.sum((np.asarray(unit) - center) ** 2))
 
     return objective
@@ -58,20 +75,26 @@ def main():
                          "(DESIGN.md §8): none | auto | SxR (e.g. 4x2). "
                          "On CPU, export XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8 first")
+    ap.add_argument("--categorical-tenant", action="store_true",
+                    help="give the last tenant a mixed (categorical) "
+                         "search space (DESIGN.md §10)")
     args = ap.parse_args()
 
+    spaces = [RESNET_SPACE] * args.studies
+    if args.categorical_tenant:
+        spaces[-1] = CATEGORICAL_SPACE
     cfg = SchedulerConfig(n_max=args.budget + 8, seed=0,
                           implementation=args.implementation,
                           mesh=args.mesh,
                           ckpt_dir=args.ckpt_dir)
-    pool = StudyPool([RESNET_SPACE] * args.studies, cfg,
+    pool = StudyPool(spaces, cfg,
                      names=[f"tenant{i}" for i in range(args.studies)])
     if args.ckpt_dir and pool.restore():
         print("resumed pool: " + ", ".join(
             f"{h.name} n={pool.engine.n(h.study_id)}"
             for h in pool.studies))
 
-    objectives = [make_objective(s, args.latency)
+    objectives = [make_objective(s, args.latency, spaces[s])
                   for s in range(args.studies)]
     t0 = time.perf_counter()
     suggested = 0
@@ -126,9 +149,13 @@ def main():
           f"({total / elapsed:.1f} results/s)")
     for h in pool.studies:
         best = pool.best(h.study_id)
+        extra = ""
+        if h.space.has_discrete and best is not None:
+            hp = h.space.to_hparams(best.unit)
+            extra = " " + " ".join(f"{k}={v}" for k, v in hp.items())
         print(f"  {h.name}: n={pool.engine.n(h.study_id)} "
               f"best={best.value:+.4f} "
-              f"clamps={pool.engine.clamp_count(h.study_id)}")
+              f"clamps={pool.engine.clamp_count(h.study_id)}{extra}")
 
 
 if __name__ == "__main__":

@@ -12,24 +12,32 @@ from repro.core.acquisition import AcqConfig, expected_improvement, optimize_acq
 from repro.core.bayesopt import BayesOpt, BOConfig, BOHistory, run_bo
 from repro.core.cholesky import (cholesky_naive, cholesky_xla, lazy_append_row,
                                  lazy_full_refactor, padded_trsv)
+from repro.core.descriptor import (TypeDescriptor, all_continuous,
+                                   project_units, stack_descriptors)
 from repro.core.gp import (GPCapacityError, GPConfig, LazyGPState, append,
                            append_batch, dense_posterior, ensure_capacity,
                            init_pool_state, init_state,
                            log_marginal_likelihood, maybe_refit, posterior,
                            refactor, refit_params, stack_states,
                            unstack_state)
-from repro.core.kernels import KERNELS, KernelParams, gram, matern32, matern52, rbf
+from repro.core.kernels import (KERNELS, KernelParams, gram,
+                                make_mixed_kernel, matern32, matern52,
+                                mixed_matern52, rbf)
 from repro.core.levy import levy, levy_1d, levy_bounds, neg_levy
 
 __all__ = [
     "AcqConfig", "BayesOpt", "BOConfig", "BOHistory", "GPCapacityError",
     "GPConfig", "KERNELS",
-    "KernelParams", "LazyGPState", "append", "append_batch", "cholesky_naive",
+    "KernelParams", "LazyGPState", "TypeDescriptor", "all_continuous",
+    "append", "append_batch", "cholesky_naive",
     "cholesky_xla", "dense_posterior", "ensure_capacity",
     "expected_improvement", "gram",
     "init_pool_state", "init_state", "lazy_append_row", "lazy_full_refactor",
-    "log_marginal_likelihood", "matern32", "matern52", "maybe_refit",
-    "optimize_acquisition", "padded_trsv", "posterior", "rbf", "refactor",
-    "refit_params", "run_bo", "stack_states", "unstack_state",
+    "log_marginal_likelihood", "make_mixed_kernel", "matern32", "matern52",
+    "maybe_refit", "mixed_matern52",
+    "optimize_acquisition", "padded_trsv", "posterior", "project_units",
+    "rbf", "refactor",
+    "refit_params", "run_bo", "stack_descriptors", "stack_states",
+    "unstack_state",
     "levy", "levy_1d", "levy_bounds", "neg_levy",
 ]

@@ -19,6 +19,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import descriptor as desc_mod
 from repro.core import gp as gp_mod
 from repro.core.kernels import KernelFn
 
@@ -90,7 +91,9 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
                          cfg: AcqConfig, top_t: int = 1,
                          *, implementation: str = "auto",
                          restart_axis: str | None = None,
-                         restart_shards: int = 1) -> tuple[Array, Array]:
+                         restart_shards: int = 1,
+                         desc: desc_mod.TypeDescriptor | None = None
+                         ) -> tuple[Array, Array]:
     """Return (points (top_t, d), acq values (top_t,)), best first.
 
     top_t = 1 is standard sequential BO; top_t = t implements the paper's
@@ -109,20 +112,32 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
     identical result (replicated outputs).  Seeds are generated from the
     full `key` on every shard and sliced by `axis_index`, so the sharded
     ascent sees exactly the seeds the unsharded path would.
+
+    Mixed spaces (DESIGN.md §10): with a `TypeDescriptor`, every ascent
+    step interleaves the projected-gradient update on the continuous
+    coordinates with `descriptor.project_units` round-and-repair onto the
+    int/categorical lattice, so candidates are always feasible.  The
+    projection is masked arithmetic on the descriptor arrays — batched
+    states may carry a stacked `(S, d)`-leaved descriptor (studies with
+    *different* type layouts vmap together), but then `kernel` must itself
+    be layout-correct per study (the engine builds per-study closures; a
+    shared `(d,)` descriptor works with one shared kernel).
     """
     if state.is_batched:
         n_studies = state.x_buf.shape[0]
         keys = key if key.ndim == 2 else jax.random.split(key, n_studies)
         lo = jnp.asarray(lo)
         hi = jnp.asarray(hi)
+        d_ax = 0 if desc is not None and desc.is_batched else None
         return jax.vmap(
-            lambda st, k, l, h: optimize_acquisition(
+            lambda st, k, l, h, dc: optimize_acquisition(
                 st, kernel, l, h, k, cfg, top_t,
                 implementation=implementation, restart_axis=restart_axis,
-                restart_shards=restart_shards),
+                restart_shards=restart_shards, desc=dc),
             in_axes=(0, 0,
                      0 if lo.ndim == 2 else None,
-                     0 if hi.ndim == 2 else None))(state, keys, lo, hi)
+                     0 if hi.ndim == 2 else None,
+                     d_ax))(state, keys, lo, hi, desc)
     if cfg.restarts % restart_shards:
         raise ValueError(
             f"restart shards ({restart_shards}) must divide "
@@ -136,14 +151,20 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
 
     value = lambda x: _acq_value(state, kernel, x, f_best, cfg, implementation)
     grad = jax.grad(value)
+    project = ((lambda u: desc_mod.project_units(u, desc))
+               if desc is not None else (lambda u: u))
 
     def ascend(x):
+        # Mixed ascent: gradient step on the continuous coordinates (the
+        # kernel's categorical factor carries no gradient), then
+        # round-and-repair back onto the int/categorical lattice — every
+        # iterate, and the seed itself, is a feasible point.
         def step(_, x):
             g = grad(x)
             gn = jnp.linalg.norm(g)
             g = jnp.where(gn > 0, g / jnp.maximum(gn, 1e-12), 0.0)
-            return jnp.clip(x + cfg.lr * width * g, lo, hi)
-        return jax.lax.fori_loop(0, cfg.ascent_steps, step, x)
+            return project(jnp.clip(x + cfg.lr * width * g, lo, hi))
+        return jax.lax.fori_loop(0, cfg.ascent_steps, step, project(x))
 
     if restart_axis is not None and restart_shards > 1:
         # Ascend only this shard's contiguous slice of the seeds, then
@@ -196,10 +217,11 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
         0, cfg.restarts, pick, (chosen0, vals0, suppressed0, 0))
 
     # If fewer than top_t distinct basins exist, back-fill with jittered
-    # copies of the best point so the batch shape stays fixed.
+    # copies of the best point so the batch shape stays fixed (re-projected
+    # so mixed-space backfills stay on the feasible lattice).
     jitter = 0.01 * width * jax.random.normal(
         jax.random.fold_in(key, 1), (top_t, d), dtype=finals.dtype)
-    fallback = jnp.clip(chosen[0] + jitter, lo, hi)
+    fallback = jax.vmap(project)(jnp.clip(chosen[0] + jitter, lo, hi))
     filled = jnp.arange(top_t) < count
     chosen = jnp.where(filled[:, None], chosen, fallback)
     chosen_vals = jnp.where(filled, chosen_vals, chosen_vals[0])

@@ -20,16 +20,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Callable, Sequence
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import acquisition as acq_mod
+from repro.core import descriptor as desc_mod
 from repro.core import gp as gp_mod
-from repro.core.kernels import KERNELS, KernelParams
 
 Array = jax.Array
 
@@ -49,6 +48,11 @@ class BOConfig:
     noise2: float = 1e-6
     rho0: float = 0.25            # initial length scale (unit box); paper: 1.0
     implementation: str = "auto"  # linalg substrate (auto|pallas|xla|ref)
+    desc: desc_mod.TypeDescriptor | None = None  # mixed-space descriptor
+    # (DESIGN.md §10): switches on the mixed kernel + the acquisition's
+    # round-and-repair lattice projection; the driver then works on the
+    # ENCODED unit cube (pass lo = zeros, hi = ones and decode suggestions
+    # with the owning SearchSpace)
     acq: acq_mod.AcqConfig = dataclasses.field(default_factory=acq_mod.AcqConfig)
     seed: int = 0
 
@@ -87,14 +91,15 @@ class BayesOpt:
 
     def __init__(self, cfg: BOConfig, lo: Array, hi: Array):
         self.cfg = cfg
-        self.kernel = KERNELS[cfg.kernel]
         self.lo = jnp.asarray(lo, jnp.float32)
         self.hi = jnp.asarray(hi, jnp.float32)
         self._unit_lo = jnp.zeros_like(self.lo)
         self._unit_hi = jnp.ones_like(self.hi)
         gcfg = gp_mod.GPConfig(n_max=cfg.n_max, dim=cfg.dim, kernel=cfg.kernel,
                                lag=cfg.lag, noise2=cfg.noise2, rho0=cfg.rho0,
-                               implementation=cfg.implementation)
+                               implementation=cfg.implementation,
+                               desc=cfg.desc)
+        self.kernel = gcfg.kernel_fn  # mixed closure when desc is discrete
         self.gp_cfg = gcfg
         self._suggest = jax.jit(self._suggest_impl,
                                 static_argnames=("top_t",))
@@ -114,7 +119,8 @@ class BayesOpt:
     def _suggest_impl(self, state, key, *, top_t: int):
         return acq_mod.optimize_acquisition(
             state, self.kernel, self._unit_lo, self._unit_hi, key,
-            self.cfg.acq, top_t, implementation=self.cfg.implementation)
+            self.cfg.acq, top_t, implementation=self.cfg.implementation,
+            desc=self.cfg.desc)
 
     def _append_batch_impl(self, state, xs, ys):
         return gp_mod.append_batch(state, self.kernel, xs, ys,
@@ -205,6 +211,11 @@ class BayesOpt:
             key, sub = jax.random.split(key)
             x0 = self.lo + (self.hi - self.lo) * jax.random.uniform(
                 sub, (n_seed, self.cfg.dim))
+            if self.cfg.desc is not None:
+                # Mixed spaces: seed on the feasible lattice, like every
+                # later suggestion.
+                x0 = self._from_unit(desc_mod.project_units(
+                    self._to_unit(x0), self.cfg.desc))
             y0 = jnp.asarray(objective(np.asarray(x0)), jnp.float32).reshape(-1)
         state = self.init(x0, y0)
 
@@ -225,12 +236,13 @@ def run_bo(objective: Callable[[np.ndarray], np.ndarray], lo, hi,
            batch_size: int = 1, n_seed: int = 1, n_max: int = 1024,
            seed: int = 0, kernel: str = "matern52", rho0: float = 0.25,
            implementation: str = "auto",
+           desc: desc_mod.TypeDescriptor | None = None,
            acq: acq_mod.AcqConfig | None = None,
            ) -> tuple[gp_mod.LazyGPState, BOHistory]:
     """One-call functional API (used by examples and benchmarks)."""
     cfg = BOConfig(dim=dim, n_max=n_max, kernel=kernel, mode=mode, lag=lag,
                    batch_size=batch_size, seed=seed, rho0=rho0,
-                   implementation=implementation,
+                   implementation=implementation, desc=desc,
                    acq=acq or acq_mod.AcqConfig())
     bo = BayesOpt(cfg, lo, hi)
     return bo.run(objective, iterations, n_seed=n_seed)

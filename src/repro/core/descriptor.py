@@ -1,0 +1,146 @@
+"""Type descriptor for mixed (float / int / categorical / conditional) spaces.
+
+The GP always sees the encoded unit cube (DESIGN.md §10): every search-space
+dimension contributes one or more unit-cube *coordinates* — floats and ints
+one each, categoricals a one-hot block.  The `TypeDescriptor` is the
+per-coordinate record of that encoding: which coordinates take gradient
+steps (continuous block), which form one-hot blocks (categorical factor of
+the mixed kernel), the integer lattice resolution, and the parent-gating
+wiring of conditional dimensions.
+
+It is deliberately an **array pytree, not Python structure**: per-study
+descriptors stack to `(S, d)` leaves and ride through `vmap`/`shard_map`
+exactly like the stacked `LazyGPState` (DESIGN.md §7/§8), so a pool whose
+studies have *different* type layouts still advances in one jitted program.
+`project_units` is the round-and-repair projection the acquisition ascent
+interleaves with its gradient steps — pure masked arithmetic, no Python
+branching on types, so it traces once for any layout.
+
+Layering: this module is `repro.core`-level (the acquisition optimizer and
+the kernels consume it); `repro.hpo.space` *builds* descriptors from typed
+`SearchSpace` definitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TypeDescriptor:
+    """Per-coordinate typing of an encoded search space (all leaves `(d,)`;
+    stacked per-study descriptors carry `(S, d)` leaves).
+
+    Invariants (established by `repro.hpo.space.SearchSpace.descriptor`):
+      * `cont_mask + cat_mask` is 1 everywhere (every coordinate is either
+        a gradient coordinate or a one-hot coordinate);
+      * `levels > 0` only on integer coordinates (`levels` = lattice size,
+        so `levels == 1` pins the coordinate to 0);
+      * `group[c]` is the index of the first coordinate of c's one-hot
+        block (a valid segment id < d), or -1 off the categorical block;
+      * `parent[c]` is the one-hot coordinate whose value gates c (the
+        parent choice's coordinate), or -1 for unconditional coordinates.
+        Parents are themselves unconditional, so one gating pass suffices.
+    """
+
+    cont_mask: Array   # (d,) f32: 1.0 on gradient (float + int) coordinates
+    cat_mask: Array    # (d,) f32: 1.0 on one-hot (categorical) coordinates
+    levels: Array      # (d,) f32: integer lattice size (0.0 = not an int)
+    group: Array       # (d,) i32: one-hot segment id (-1 = not categorical)
+    parent: Array      # (d,) i32: gating coordinate index (-1 = always on)
+
+    @property
+    def dim(self) -> int:
+        return self.cont_mask.shape[-1]
+
+    @property
+    def is_batched(self) -> bool:
+        return self.cont_mask.ndim == 2
+
+    @property
+    def has_discrete(self) -> bool:
+        """Host-side: any int / categorical / conditional coordinate?
+
+        Only meaningful on concrete (non-traced) descriptors — it decides
+        which closures an engine builds, never anything inside a trace.
+        """
+        return bool(np.any(np.asarray(self.cat_mask) > 0)
+                    or np.any(np.asarray(self.levels) > 0)
+                    or np.any(np.asarray(self.parent) >= 0))
+
+
+def all_continuous(dim: int) -> TypeDescriptor:
+    """The degenerate all-float descriptor (projection is the identity)."""
+    return TypeDescriptor(
+        cont_mask=jnp.ones((dim,), jnp.float32),
+        cat_mask=jnp.zeros((dim,), jnp.float32),
+        levels=jnp.zeros((dim,), jnp.float32),
+        group=jnp.full((dim,), -1, jnp.int32),
+        parent=jnp.full((dim,), -1, jnp.int32),
+    )
+
+
+def stack_descriptors(descs: "list[TypeDescriptor]") -> TypeDescriptor:
+    """Stack per-study descriptors into `(S, d)` leaves (shared width)."""
+    widths = {d.dim for d in descs}
+    if len(widths) != 1:
+        raise ValueError(f"descriptors must share one width, got {widths}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *descs)
+
+
+def index_descriptor(desc: TypeDescriptor, i) -> TypeDescriptor:
+    """Single-study view of a stacked descriptor (traced index ok)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False), desc)
+
+
+def project_units(u: Array, desc: TypeDescriptor) -> Array:
+    """Round-and-repair projection onto the feasible lattice (jit-safe).
+
+    Three masked passes over a `(d,)` unit vector, no type branching:
+
+      1. **int snap** — coordinates with `levels = L > 0` round to the
+         uniform lattice `{k / (L-1)}` (L = 1 pins to 0);
+      2. **one-hot argmax** — each categorical block keeps a single 1 at
+         its largest coordinate (first index wins ties, so the projection
+         is deterministic and idempotent);
+      3. **parent gating** — conditional coordinates multiply by their
+         parent choice's (now 0/1) coordinate, so inactive children sit
+         at the neutral encoding 0.
+
+    Continuous coordinates pass through untouched; on an all-continuous
+    descriptor the whole function is the identity.  Batched form: `(n, d)`
+    units project row-wise (the descriptor is shared unless it is itself
+    stacked `(S, d)`, in which case rows pair with studies).
+    """
+    if u.ndim == 2:
+        if desc.is_batched:
+            return jax.vmap(project_units)(u, desc)
+        return jax.vmap(lambda uu: project_units(uu, desc))(u)
+    d = u.shape[0]
+    # 1. integer lattice snap
+    lev = desc.levels
+    snapped = jnp.round(u * (lev - 1.0)) / jnp.maximum(lev - 1.0, 1.0)
+    u = jnp.where(lev > 0, snapped, u)
+    # 2. per-group one-hot argmax (segment ids are first-coordinate
+    # indices, so num_segments = d covers every group)
+    gid = desc.group
+    is_cat = gid >= 0
+    seg = jnp.where(is_cat, gid, 0)
+    scores = jnp.where(is_cat, u, -jnp.inf)
+    gmax = jax.ops.segment_max(scores, seg, num_segments=d)
+    at_max = is_cat & (u >= gmax[seg])
+    idx = jnp.arange(d)
+    first = jax.ops.segment_min(jnp.where(at_max, idx, d), seg,
+                                num_segments=d)
+    u = jnp.where(is_cat, (idx == first[seg]).astype(u.dtype), u)
+    # 3. conditional gating by the (projected) parent coordinate
+    par = desc.parent
+    gate = u[jnp.clip(par, 0, d - 1)]
+    return jnp.where(par >= 0, u * gate, u)

@@ -27,7 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cholesky as chol
-from repro.core.kernels import KERNELS, KernelFn, KernelParams
+from repro.core import descriptor as desc_mod
+from repro.core.kernels import (KERNELS, KernelFn, KernelParams,
+                                make_mixed_kernel)
 from repro.kernels import ops
 
 Array = jax.Array
@@ -101,13 +103,25 @@ class GPConfig:
     # targets, so the framework default is 0.25 (beyond-paper).  Paper-repro
     # benchmarks pass rho0 = 1.0 explicitly.
     implementation: str = "auto"   # linalg substrate (DESIGN.md §5)
+    desc: desc_mod.TypeDescriptor | None = None  # mixed-space type
+    # descriptor (DESIGN.md §10): when it carries discrete coordinates,
+    # `kernel_fn` becomes the mixed Matérn x categorical kernel over the
+    # encoded unit cube.  Travels from the typed SearchSpace through
+    # BOConfig / StudyEngine exactly like the `implementation` knob.
     dtype: jnp.dtype = jnp.float32
 
     def __post_init__(self):
         ops.check_implementation(self.implementation)
+        if self.desc is not None and self.desc.has_discrete \
+                and self.kernel != "matern52":
+            raise ValueError(
+                f"mixed spaces require kernel='matern52' (the mixed kernel "
+                f"is its Matérn x categorical product), got {self.kernel!r}")
 
     @property
     def kernel_fn(self) -> KernelFn:
+        if self.desc is not None and self.desc.has_discrete:
+            return make_mixed_kernel(self.desc.cont_mask, self.desc.cat_mask)
         return KERNELS[self.kernel]
 
 

@@ -81,6 +81,46 @@ KERNELS: dict[str, KernelFn] = {
 }
 
 
+# --- mixed (continuous x categorical) spaces, DESIGN.md §10 ----------------
+
+def mixed_matern52(x: Array, y: Array, params: KernelParams,
+                   cont_mask: Array, cat_mask: Array) -> Array:
+    """Mixed-space kernel: Matérn-2.5 over the continuous (float + int)
+    coordinates x an exchangeable factor over the one-hot block.
+
+    The categorical factor is `exp(-d²_cat / 2 rho)` — on feasible one-hot
+    encodings `d²_cat` is twice the number of differing groups, so this is
+    the Hamming-exponential kernel `exp(-h / rho)`; off the lattice it is
+    an RBF in the one-hot embedding, PSD everywhere either way, and the
+    product with the Matérn term stays PSD.  It carries **no gradient**
+    (stop_gradient): the acquisition moves one-hot coordinates by
+    round-and-repair projection, never by gradient steps, matching the
+    Pallas kernel's continuous-block-only VJP.
+    """
+    xc, yc = x * cont_mask, y * cont_mask
+    d = jnp.sqrt(pairwise_sqdist(xc, yc) + 1e-36)
+    z = jnp.sqrt(5.0) * d / params.rho
+    sqk = pairwise_sqdist(x * cat_mask, y * cat_mask)
+    cat = jax.lax.stop_gradient(jnp.exp(-0.5 * sqk / params.rho))
+    return params.sigma2 * (1.0 + z + z * z / 3.0) * jnp.exp(-z) * cat
+
+
+def make_mixed_kernel(cont_mask: Array, cat_mask: Array) -> KernelFn:
+    """Close a `KernelFn` over a space's type masks (from its
+    `TypeDescriptor`).  The masks may be concrete `(d,)` arrays or traced
+    values (the batched engine builds one closure per study inside its
+    vmapped closures); the `pallas_gram = "mixed"` tag routes the gram
+    build through the substrate's fused mixed kernel.
+    """
+    def mixed(x: Array, y: Array, params: KernelParams) -> Array:
+        return mixed_matern52(x, y, params, cont_mask, cat_mask)
+
+    mixed.pallas_gram = "mixed"
+    mixed.cont_mask = cont_mask
+    mixed.cat_mask = cat_mask
+    return mixed
+
+
 def gram(kernel: KernelFn, x: Array, params: KernelParams) -> Array:
     """K_y = k(X, X) + noise2 * I (paper's K + sigma^2 I)."""
     k = kernel(x, x, params)

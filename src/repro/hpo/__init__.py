@@ -7,11 +7,15 @@ from repro.hpo.engine import StudyEngine
 from repro.hpo.gateway import GatewayConfig, StudyGateway
 from repro.hpo.pool import SchedulerConfig, StudyPool, Trial
 from repro.hpo.scheduler import TrialScheduler
-from repro.hpo.space import (LENET_SPACE, LM_SPACE, RESNET_SPACE, Dim,
-                             SearchSpace)
+from repro.hpo.space import (LENET_SPACE, LM_SPACE, MIXED_DEMO_SPACE,
+                             RESNET_SPACE, Categorical, Conditional, Dim,
+                             Float, Int, SearchSpace, space_from_dicts,
+                             space_to_dicts)
 
 __all__ = [
-    "Dim", "GatewayConfig", "LENET_SPACE", "LM_SPACE", "RESNET_SPACE",
+    "Categorical", "Conditional", "Dim", "Float", "GatewayConfig", "Int",
+    "LENET_SPACE", "LM_SPACE", "MIXED_DEMO_SPACE", "RESNET_SPACE",
     "SchedulerConfig", "SearchSpace", "StudyEngine", "StudyGateway",
-    "StudyPool", "Trial", "TrialScheduler",
+    "StudyPool", "Trial", "TrialScheduler", "space_from_dicts",
+    "space_to_dicts",
 ]

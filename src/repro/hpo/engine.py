@@ -35,6 +35,15 @@ split across devices, restarts split within a study when shards remain.
 closures; the routed single-study paths (`suggest_at`/`append_at`/
 `refit_at`) stay plain jit and read the sharded state through GSPMD.
 
+**Mixed spaces** (DESIGN.md §10): when any study's space carries discrete
+dims (or `cfg.mixed` forces it), every closure additionally threads the
+stacked per-study `TypeDescriptor` — array DATA, vmapped/sharded along the
+study axis with the state — and builds the mixed Matérn x categorical
+kernel per study inside the vmap, so stacked studies with *different*
+type layouts advance in one program and a gateway slot swap to a new
+layout is a descriptor row write (`set_desc`), never a re-trace.
+All-continuous engines build the exact pre-§10 closures.
+
 Host-side per-study telemetry: `n` and `since_refit` are mirrored in host
 numpy arrays (they evolve deterministically with the appends the engine
 itself dispatches), so capacity guards and the lag policy never sync the
@@ -48,8 +57,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import acquisition as acq_mod
+from repro.core import descriptor as desc_mod
 from repro.core import gp as gp_mod
-from repro.core.kernels import KERNELS
+from repro.core.kernels import KERNELS, make_mixed_kernel
 from repro.hpo import mesh as mesh_mod
 
 Array = jax.Array
@@ -76,11 +86,22 @@ class StudyEngine:
     rho0, noise2, implementation, acq; optionally mesh (default "none").
     """
 
-    def __init__(self, dim: int, cfg, n_studies: int):
+    def __init__(self, dim: int, cfg, n_studies: int,
+                 descs: "list[desc_mod.TypeDescriptor] | None" = None):
         if n_studies < 1:
             raise ValueError(f"n_studies must be >= 1, got {n_studies}")
         self.cfg = cfg
         self.n_studies = n_studies
+        # Mixed-space mode (DESIGN.md §10): enabled when any study's space
+        # has discrete dims, or forced by cfg.mixed so a gateway built on
+        # an all-continuous template can still admit discrete tenants
+        # later (the closures are traced once, at construction).
+        self.mixed = bool(getattr(cfg, "mixed", False)) or (
+            descs is not None and any(d.has_discrete for d in descs))
+        if self.mixed and cfg.kernel != "matern52":
+            raise ValueError(
+                "mixed spaces require kernel='matern52', got "
+                f"{cfg.kernel!r}")
         self.kernel = KERNELS[cfg.kernel]
         self.gp_cfg = gp_mod.GPConfig(
             n_max=cfg.n_max, dim=dim, kernel=cfg.kernel, lag=cfg.lag,
@@ -90,96 +111,190 @@ class StudyEngine:
                                    n_studies, cfg.acq.restarts)
         self.state = self.place(gp_mod.init_pool_state(self.gp_cfg,
                                                        n_studies))
+        # Stacked per-study type descriptor: DATA, not a closure constant —
+        # a gateway slot swap (new tenant, different layout) is an array
+        # row update, never a re-trace.  None in the all-continuous case,
+        # where the closures below collapse to the exact pre-mixed trace.
+        if self.mixed:
+            if descs is None:
+                descs = [desc_mod.all_continuous(dim)] * n_studies
+            if len(descs) != n_studies:
+                raise ValueError(
+                    f"got {len(descs)} descriptors for {n_studies} studies")
+            self.desc = self.place(desc_mod.stack_descriptors(list(descs)))
+        else:
+            self.desc = None
         self._lo = jnp.zeros((dim,))
         self._hi = jnp.ones((dim,))
         # The substrate knob is a Python constant inside the jitted closures:
         # one compilation per configured implementation.  Likewise the mesh:
         # the shard_map wrapping happens at trace time, once per top_t.
         impl = cfg.implementation
+        mixed = self.mixed
         hpo_mesh = self.mesh
         r_shards = hpo_mesh.restart_shards if hpo_mesh else 1
         r_axis = mesh_mod.RESTART_AXIS if r_shards > 1 else None
 
-        def suggest_one(st, key, top_t, sharded):
+        def kern_for(dsc):
+            # Per-study kernel: inside the vmapped closures `dsc` is one
+            # study's (d,) descriptor row (traced), so stacked studies
+            # with different type layouts share one program.
+            if not mixed:
+                return self.kernel
+            return make_mixed_kernel(dsc.cont_mask, dsc.cat_mask)
+
+        def suggest_one(st, dsc, key, top_t, sharded):
             return acq_mod.optimize_acquisition(
-                st, self.kernel, self._lo, self._hi, key, cfg.acq, top_t,
+                st, kern_for(dsc), self._lo, self._hi, key, cfg.acq, top_t,
                 implementation=impl,
                 restart_axis=r_axis if sharded else None,
-                restart_shards=r_shards if sharded else 1)
+                restart_shards=r_shards if sharded else 1,
+                desc=dsc if mixed else None)
 
-        def append_one(st, x, y):
-            return gp_mod.append(st, self.kernel, x, y, implementation=impl)
+        def append_one(st, dsc, x, y):
+            return gp_mod.append(st, kern_for(dsc), x, y,
+                                 implementation=impl)
 
-        def masked_append_one(st, x, y, flag):
-            new = append_one(st, x, y)
+        def masked_append_one(st, dsc, x, y, flag):
+            new = append_one(st, dsc, x, y)
             return jax.tree.map(lambda o, n_: jnp.where(flag, n_, o), st, new)
 
-        def advance_one(st, x, y, flag, key, top_t, sharded):
+        def advance_one(st, dsc, x, y, flag, key, top_t, sharded):
             # Fused serving round: masked absorb, then suggest from the
             # updated posterior — one program residency for both.
-            st = masked_append_one(st, x, y, flag)
-            units, vals = suggest_one(st, key, top_t, sharded)
+            st = masked_append_one(st, dsc, x, y, flag)
+            units, vals = suggest_one(st, dsc, key, top_t, sharded)
             return st, units, vals
 
-        def refit_one(st):
-            params = gp_mod.refit_params(st, self.kernel,
-                                         implementation=impl)
-            return gp_mod.refactor(st, self.kernel, params,
-                                   implementation=impl)
+        def refit_one(st, dsc):
+            kern = kern_for(dsc)
+            params = gp_mod.refit_params(st, kern, implementation=impl)
+            return gp_mod.refactor(st, kern, params, implementation=impl)
 
-        def reanchor_one(st):
+        def reanchor_one(st, dsc):
             # Fully-lazy drift guard: rebuild factor + maintained inverse
             # from the Gram under the CURRENT params (no grid refit).
-            return gp_mod.refactor(st, self.kernel, implementation=impl)
+            return gp_mod.refactor(st, kern_for(dsc), implementation=impl)
 
+        # In mixed mode every jitted closure takes the stacked descriptor
+        # as a runtime argument right after the state (vmapped/sharded
+        # along the study axis with it); otherwise the argument is absent
+        # and the traces are identical to the all-continuous stack.
         if hpo_mesh is None:
-            self._suggest_all = jax.jit(
-                lambda state, keys, *, top_t: jax.vmap(
-                    lambda st, k: suggest_one(st, k, top_t, False))(state,
-                                                                    keys),
-                static_argnames=("top_t",))
-            self._append_masked = jax.jit(jax.vmap(masked_append_one))
-            self._advance_all = jax.jit(
-                lambda state, xs, ys, flags, keys, *, top_t: jax.vmap(
-                    lambda st, x, y, f, k: advance_one(
-                        st, x, y, f, k, top_t, False))(state, xs, ys,
-                                                       flags, keys),
-                static_argnames=("top_t",), donate_argnums=(0,))
+            if mixed:
+                self._suggest_all = jax.jit(
+                    lambda state, dsc, keys, *, top_t: jax.vmap(
+                        lambda st, dc, k: suggest_one(
+                            st, dc, k, top_t, False))(state, dsc, keys),
+                    static_argnames=("top_t",))
+                self._append_masked = jax.jit(jax.vmap(masked_append_one))
+                self._advance_all = jax.jit(
+                    lambda state, dsc, xs, ys, flags, keys, *, top_t:
+                    jax.vmap(
+                        lambda st, dc, x, y, f, k: advance_one(
+                            st, dc, x, y, f, k, top_t, False))(
+                        state, dsc, xs, ys, flags, keys),
+                    static_argnames=("top_t",), donate_argnums=(0,))
+            else:
+                self._suggest_all = jax.jit(
+                    lambda state, keys, *, top_t: jax.vmap(
+                        lambda st, k: suggest_one(
+                            st, None, k, top_t, False))(state, keys),
+                    static_argnames=("top_t",))
+                self._append_masked = jax.jit(jax.vmap(
+                    lambda st, x, y, f: masked_append_one(st, None, x, y,
+                                                          f)))
+                self._advance_all = jax.jit(
+                    lambda state, xs, ys, flags, keys, *, top_t: jax.vmap(
+                        lambda st, x, y, f, k: advance_one(
+                            st, None, x, y, f, k, top_t, False))(
+                        state, xs, ys, flags, keys),
+                    static_argnames=("top_t",), donate_argnums=(0,))
         else:
             # Sharded variants: studies split over the mesh's study axis,
             # restarts split over the restart axis inside each suggest.
-            self._suggest_all = jax.jit(
-                lambda state, keys, *, top_t: hpo_mesh.shard(
-                    lambda st, ks: jax.vmap(
-                        lambda s, k: suggest_one(s, k, top_t, True))(st, ks),
-                    n_in=2)(state, keys),
-                static_argnames=("top_t",))
-            self._append_masked = jax.jit(hpo_mesh.shard(
-                lambda st, x, y, f: jax.vmap(masked_append_one)(st, x, y, f),
-                n_in=4))
-            self._advance_all = jax.jit(
-                lambda state, xs, ys, flags, keys, *, top_t: hpo_mesh.shard(
-                    lambda st, x, y, f, k: jax.vmap(
-                        lambda s, x_, y_, f_, k_: advance_one(
-                            s, x_, y_, f_, k_, top_t, True))(st, x, y, f, k),
-                    n_in=5)(state, xs, ys, flags, keys),
-                static_argnames=("top_t",), donate_argnums=(0,))
+            if mixed:
+                self._suggest_all = jax.jit(
+                    lambda state, dsc, keys, *, top_t: hpo_mesh.shard(
+                        lambda st, dc, ks: jax.vmap(
+                            lambda s, d_, k: suggest_one(
+                                s, d_, k, top_t, True))(st, dc, ks),
+                        n_in=3)(state, dsc, keys),
+                    static_argnames=("top_t",))
+                self._append_masked = jax.jit(hpo_mesh.shard(
+                    lambda st, dc, x, y, f: jax.vmap(masked_append_one)(
+                        st, dc, x, y, f), n_in=5))
+                self._advance_all = jax.jit(
+                    lambda state, dsc, xs, ys, flags, keys, *, top_t:
+                    hpo_mesh.shard(
+                        lambda st, dc, x, y, f, k: jax.vmap(
+                            lambda s, d_, x_, y_, f_, k_: advance_one(
+                                s, d_, x_, y_, f_, k_, top_t, True))(
+                            st, dc, x, y, f, k),
+                        n_in=6)(state, dsc, xs, ys, flags, keys),
+                    static_argnames=("top_t",), donate_argnums=(0,))
+            else:
+                self._suggest_all = jax.jit(
+                    lambda state, keys, *, top_t: hpo_mesh.shard(
+                        lambda st, ks: jax.vmap(
+                            lambda s, k: suggest_one(
+                                s, None, k, top_t, True))(st, ks),
+                        n_in=2)(state, keys),
+                    static_argnames=("top_t",))
+                self._append_masked = jax.jit(hpo_mesh.shard(
+                    lambda st, x, y, f: jax.vmap(
+                        lambda s, x_, y_, f_: masked_append_one(
+                            s, None, x_, y_, f_))(st, x, y, f),
+                    n_in=4))
+                self._advance_all = jax.jit(
+                    lambda state, xs, ys, flags, keys, *, top_t:
+                    hpo_mesh.shard(
+                        lambda st, x, y, f, k: jax.vmap(
+                            lambda s, x_, y_, f_, k_: advance_one(
+                                s, None, x_, y_, f_, k_, top_t, True))(
+                            st, x, y, f, k),
+                        n_in=5)(state, xs, ys, flags, keys),
+                    static_argnames=("top_t",), donate_argnums=(0,))
         # Routed single-study paths: plain jit; with a mesh active the
         # sharded state flows through GSPMD's auto-partitioner (these are
-        # the rare paths — lag events and per-study routing).
-        self._suggest_at = jax.jit(
-            lambda state, i, key, *, top_t: suggest_one(
-                _index_state(state, i), key, top_t, False),
-            static_argnames=("top_t",))
-        self._append_at = jax.jit(
-            lambda state, i, x, y: _write_state(
-                state, i, append_one(_index_state(state, i), x, y)))
-        self._refit_at = jax.jit(
-            lambda state, i: _write_state(
-                state, i, refit_one(_index_state(state, i))))
-        self._reanchor_at = jax.jit(
-            lambda state, i: _write_state(
-                state, i, reanchor_one(_index_state(state, i))))
+        # the rare paths — lag events and per-study routing).  The mixed
+        # variants index the stacked descriptor at the same traced index.
+        if mixed:
+            self._suggest_at = jax.jit(
+                lambda state, dsc, i, key, *, top_t: suggest_one(
+                    _index_state(state, i),
+                    desc_mod.index_descriptor(dsc, i), key, top_t, False),
+                static_argnames=("top_t",))
+            self._append_at = jax.jit(
+                lambda state, dsc, i, x, y: _write_state(
+                    state, i, append_one(
+                        _index_state(state, i),
+                        desc_mod.index_descriptor(dsc, i), x, y)))
+            self._refit_at = jax.jit(
+                lambda state, dsc, i: _write_state(
+                    state, i, refit_one(
+                        _index_state(state, i),
+                        desc_mod.index_descriptor(dsc, i))))
+            self._reanchor_at = jax.jit(
+                lambda state, dsc, i: _write_state(
+                    state, i, reanchor_one(
+                        _index_state(state, i),
+                        desc_mod.index_descriptor(dsc, i))))
+        else:
+            self._suggest_at = jax.jit(
+                lambda state, i, key, *, top_t: suggest_one(
+                    _index_state(state, i), None, key, top_t, False),
+                static_argnames=("top_t",))
+            self._append_at = jax.jit(
+                lambda state, i, x, y: _write_state(
+                    state, i, append_one(_index_state(state, i), None,
+                                         x, y)))
+            self._refit_at = jax.jit(
+                lambda state, i: _write_state(
+                    state, i, refit_one(_index_state(state, i), None)))
+            self._reanchor_at = jax.jit(
+                lambda state, i: _write_state(
+                    state, i, reanchor_one(_index_state(state, i), None)))
         # Slot-level state swap (the gateway's evict/restore hook): scatter a
         # single-study state into the stack at a traced index — any slot hits
         # the same compilation, so serving-time restores never re-trace.
@@ -245,23 +360,46 @@ class StudyEngine:
         """Blank a slot for a new tenant (fresh empty single-study state)."""
         self.load_slot(slot, gp_mod.init_state(self.gp_cfg))
 
+    def set_desc(self, slot: int, desc: desc_mod.TypeDescriptor) -> None:
+        """Install a (possibly different) type layout for one slot.
+
+        A row write into the stacked descriptor DATA — the closures take
+        the descriptor as a runtime argument, so a tenant swap with a new
+        layout never re-traces.  No-op outside mixed mode (where every
+        slot is all-continuous by construction)."""
+        if self.desc is None:
+            if desc.has_discrete:
+                raise ValueError(
+                    "engine was built without mixed-space support; "
+                    "construct it with a discrete space or cfg.mixed=True")
+            return
+        updated = jax.tree.map(lambda a, v: a.at[slot].set(v),
+                               self.desc, desc)
+        self.desc = self.place(updated)
+
     # -- suggest ------------------------------------------------------------
+    def _desc_args(self) -> tuple:
+        """The stacked descriptor, when the closures take it (mixed mode)."""
+        return (self.desc,) if self.mixed else ()
+
     def suggest(self, study: int, key: Array,
                 top_t: int = 1) -> tuple[Array, Array]:
         """Top-t EI local maxima for one study: ((top_t, d), (top_t,))."""
-        return self._suggest_at(self.state, jnp.asarray(study, jnp.int32),
+        return self._suggest_at(self.state, *self._desc_args(),
+                                jnp.asarray(study, jnp.int32),
                                 key, top_t=top_t)
 
     def suggest_all(self, keys: Array, top_t: int = 1) -> tuple[Array, Array]:
         """Batched suggestion for every study: ((S, top_t, d), (S, top_t))."""
-        return self._suggest_all(self.state, keys, top_t=top_t)
+        return self._suggest_all(self.state, *self._desc_args(), keys,
+                                 top_t=top_t)
 
     # -- absorb -------------------------------------------------------------
     def absorb(self, study: int, x, y) -> None:
         """Routed completion-order absorb (+ per-study lag policy)."""
         gp_mod.ensure_capacity(self.n(study), self.cfg.n_max)
         self._state = self._append_at(
-            self.state, jnp.asarray(study, jnp.int32),
+            self.state, *self._desc_args(), jnp.asarray(study, jnp.int32),
             jnp.asarray(x, jnp.float32),
             jnp.asarray(y, jnp.float32))
         self._n_host[study] += 1
@@ -280,7 +418,7 @@ class StudyEngine:
         for s in flagged:
             gp_mod.ensure_capacity(self.n(s), self.cfg.n_max)
         self._state = self._append_masked(
-            self.state,
+            self.state, *self._desc_args(),
             jnp.asarray(xs, jnp.float32),
             jnp.asarray(ys, jnp.float32),
             jnp.asarray(flags))
@@ -308,7 +446,7 @@ class StudyEngine:
         for s in flagged:
             gp_mod.ensure_capacity(self.n(s), self.cfg.n_max)
         self._state, units, vals = self._advance_all(
-            self.state,
+            self.state, *self._desc_args(),
             jnp.asarray(xs, jnp.float32),
             jnp.asarray(ys, jnp.float32),
             jnp.asarray(flags), keys, top_t=top_t)
@@ -336,9 +474,11 @@ class StudyEngine:
             if lag > 0:
                 if self.since_refit(s) >= lag:
                     self._state = self._refit_at(
-                        self.state, jnp.asarray(s, jnp.int32))
+                        self.state, *self._desc_args(),
+                        jnp.asarray(s, jnp.int32))
                     self._sr_host[s] = 0
             elif self.since_refit(s) >= inv_refresh:
                 self._state = self._reanchor_at(
-                    self.state, jnp.asarray(s, jnp.int32))
+                    self.state, *self._desc_args(),
+                    jnp.asarray(s, jnp.int32))
                 self._sr_host[s] = 0

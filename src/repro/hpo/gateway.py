@@ -50,7 +50,7 @@ import numpy as np
 from repro import checkpoint as ckpt_mod
 from repro.core.gp import GPCapacityError
 from repro.hpo.pool import SchedulerConfig, StudyPool, Trial
-from repro.hpo.space import Dim, SearchSpace
+from repro.hpo.space import SearchSpace, space_from_dicts, space_to_dicts
 
 __all__ = ["GatewayConfig", "StudyGateway"]
 
@@ -162,6 +162,11 @@ class StudyGateway:
                 f"space dim {space.dim} != gateway dim "
                 f"{self.pool.engine.gp_cfg.dim} (the stacked buffers are "
                 "rectangular)")
+        if space.has_discrete and not self.pool.engine.mixed:
+            raise ValueError(
+                "space has int/categorical dims but the gateway was built "
+                "without mixed-space closures; construct it with a mixed "
+                "template space or SchedulerConfig(mixed=True)")
         sid = self._next_sid
         self._next_sid += 1
         self._studies[sid] = _Logical(
@@ -246,10 +251,13 @@ class StudyGateway:
         if self._wake is not None:
             self._wake.set()
 
-    def _check_unit(self, trial: Trial) -> None:
+    def _check_unit(self, trial: Trial, space: SearchSpace) -> None:
         """Validate a told trial's unit vector at the caller, not inside
         the fused round: a malformed unit raising mid-dispatch would abort
-        the whole coalesced tick for every study in it."""
+        the whole coalesced tick for every study in it.  Mixed spaces also
+        require the unit to sit on the study's feasible lattice (exact
+        one-hots, ints on their grid) — an off-lattice row would teach the
+        GP covariances no suggestion can ever reproduce."""
         unit = np.asarray(trial.unit)
         dim = self.pool.engine.gp_cfg.dim
         if unit.shape != (dim,):
@@ -259,6 +267,13 @@ class StudyGateway:
                 or unit.max() > 1.0:
             raise ValueError(
                 f"trial unit must be finite in [0, 1]^{dim}, got {unit}")
+        if space.has_discrete:
+            repaired = space.project(unit)
+            if not np.allclose(repaired, unit, atol=1e-5):
+                raise ValueError(
+                    f"trial unit {unit} is off the feasible lattice of its "
+                    f"mixed space (round-and-repair gives {repaired}); "
+                    "encode values with space.to_unit")
 
     def tell(self, sid: int, trial: Trial, value: float) -> None:
         """Report a result; absorbed by the next tick's fused round.
@@ -273,7 +288,7 @@ class StudyGateway:
             raise RuntimeError(
                 f"trial {trial.trial_id} of study {sid} was already told "
                 f"({trial.status}); each suggestion takes exactly one tell")
-        self._check_unit(trial)
+        self._check_unit(trial, log.space)
         value = float(value)
         if not np.isfinite(value):
             raise ValueError(
@@ -295,7 +310,7 @@ class StudyGateway:
         crashing region).  Retry policy is the client's: ask again."""
         log = self._require(sid)
         if self.cfg.failure_penalty is not None:
-            self._check_unit(trial)
+            self._check_unit(trial, log.space)
         trial.status = "failed"
         trial.error = error
         trial.finished = time.time()
@@ -740,7 +755,7 @@ class StudyGateway:
                 "best_value": log.best_value,
                 "last_tick": log.last_tick, "version": log.version,
                 "evicted_ever": log.evicted_ever,
-                "dims": [dataclasses.asdict(d) for d in log.space.dims],
+                "dims": space_to_dicts(log.space),
             } for log in self._studies.values()],
         }
         path = self.pool.checkpoint(extra={"gateway": json.dumps(registry)})
@@ -786,7 +801,7 @@ class StudyGateway:
         self._asks.clear()
         self._tells = []
         for rec in registry["studies"]:
-            space = SearchSpace(tuple(Dim(**d) for d in rec["dims"]))
+            space = space_from_dicts(rec["dims"])
             log = _Logical(rec["sid"], rec["name"], space, rec["seed"],
                            slot=rec["slot"], n_obs=rec["n_obs"],
                            best_value=rec.get("best_value"),
@@ -798,9 +813,13 @@ class StudyGateway:
                 self._owner[log.slot] = log.sid
                 # pool.restore() rebuilds slot handles from the pool
                 # snapshot, which carries no spaces — re-apply the logical
-                # study's own (possibly custom) space or its resident
-                # suggestions map through the template bounds
+                # study's own (possibly custom) space AND its type
+                # descriptor, or its resident suggestions map through the
+                # template's bounds/layout
                 self.pool.studies[log.slot].space = log.space
+                if self.pool.engine.mixed or log.space.has_discrete:
+                    self.pool.engine.set_desc(log.slot,
+                                              log.space.descriptor())
         self._free = [s for s in range(self.gw.slots - 1, -1, -1)
                       if self._owner[s] is None]
         return True

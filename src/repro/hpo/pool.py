@@ -60,6 +60,10 @@ class SchedulerConfig:
     noise2: float = 1e-5
     seed: int = 0
     implementation: str = "auto"  # linalg substrate (auto|pallas|xla|ref)
+    mixed: bool = False          # force mixed-space closures (DESIGN.md
+    # §10) even when every constructor space is all-continuous — a gateway
+    # that must admit int/categorical tenants later sets this; pools whose
+    # constructor spaces already carry discrete dims enable it implicitly
     mesh: str = "none"           # device mesh for the batched suggest path
     # (DESIGN.md §8): "none" = single program on one device (default);
     # "auto" = factor all visible devices into study x restart shards;
@@ -142,7 +146,13 @@ class StudyPool:
         if len(names) != len(spaces):
             raise ValueError("len(names) != len(spaces)")
         self.cfg = cfg
-        self.engine = StudyEngine(spaces[0].dim, cfg, len(spaces))
+        # Descriptors are only materialized (S x 5 device arrays) when the
+        # engine will actually thread them — all-continuous pools keep the
+        # pre-§10 constructor cost.
+        descs = [sp.descriptor() for sp in spaces] \
+            if cfg.mixed or any(sp.has_discrete for sp in spaces) else None
+        self.engine = StudyEngine(spaces[0].dim, cfg, len(spaces),
+                                  descs=descs)
         self.studies = [
             StudyHandle(i, sp, names[i],
                         key=jax.random.PRNGKey(cfg.seed + i),
@@ -438,6 +448,10 @@ class StudyPool:
         h = self.studies[slot]
         if space is not None:
             h.space = space
+            if self.engine.mixed or space.has_discrete:
+                # (the has_discrete arm lets a non-mixed engine raise the
+                # explanatory set_desc error instead of mis-serving)
+                self.engine.set_desc(slot, space.descriptor())
         h.name = meta["name"]
         h.next_id = int(meta["next_id"])
         h.key = jnp.asarray(np.asarray(meta["key"], np.uint32))
@@ -461,6 +475,10 @@ class StudyPool:
         seed = self.cfg.seed + slot if seed is None else seed
         if space is not None:
             h.space = space
+            if self.engine.mixed or space.has_discrete:
+                # descriptor arrays are only built when the engine threads
+                # them — all-continuous slot churn stays transfer-free
+                self.engine.set_desc(slot, space.descriptor())
         h.name = name if name is not None else f"study{slot}"
         h.trials = []
         h.next_id = 0

@@ -26,6 +26,7 @@ a leading study axis per DESIGN.md §7):
   op                 | shape contract    | pallas | xla | ref | batched | see
   -------------------|-------------------|--------|-----|-----|---------|------
   matern52_gram      | (n,d)x(m,d) exact |   P    |  x  |  x  | via gram | §6
+  mixed_gram         | (n,d)x(m,d) exact |   P    |  x  |  x  | via gram | §10
   trsv               | (n,n),(n[,r])     |   P    |  x  |  x  | no*      | §6
   cholesky           | (n,n) SPD         |   P    |  x  |  x  | no*      | §6
   chol_append        | active factor     |   P    |  x  |  x  | no*      | §6
@@ -81,6 +82,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.chol import cholesky_pallas
 from repro.kernels.matern import matern52_gram_pallas
+from repro.kernels.mixed import mixed_gram_pallas
 from repro.kernels.trsv import trsv_pallas
 
 Array = jax.Array
@@ -136,6 +138,31 @@ def matern52_gram(x: Array, y: Array, sigma2, rho,
     xp = _pad_to(_pad_to(x, npad, 0), dpad, 1)
     yp = _pad_to(_pad_to(y, mpad, 0), dpad, 1)
     out = matern52_gram_pallas(xp, yp, sigma2, rho, interpret=interp)
+    return out[:n, :m]
+
+
+def mixed_gram(x: Array, y: Array, sigma2, rho, cont_mask: Array,
+               cat_mask: Array, implementation: str = "auto") -> Array:
+    """Mixed-space covariance (DESIGN.md §10): Matérn-2.5 over the
+    continuous coordinates x exchangeable/Hamming factor over the one-hot
+    block.  Masks are (d,) 0/1 selectors from the space's TypeDescriptor;
+    zero-padding features is exact (a coordinate masked out of both blocks
+    contributes to neither squared distance)."""
+    use, interp = _use_pallas(implementation)
+    if implementation == "ref" or not use:
+        return ref.mixed_gram_ref(x, y, sigma2, rho, cont_mask, cat_mask)
+    n, m = x.shape[0], y.shape[0]
+    npad, mpad = _round_up(n), _round_up(m)
+    dpad = _round_up(x.shape[1])
+    # The mask split happens here (outside the custom VJP), so the zero
+    # cotangent on the categorical operands chain-rules to
+    # dx = cont_mask * dxc — the continuous-block-only gradient contract.
+    cm = _pad_to(cont_mask.astype(x.dtype), dpad, 0)
+    km = _pad_to(cat_mask.astype(x.dtype), dpad, 0)
+    xp = _pad_to(_pad_to(x, npad, 0), dpad, 1)
+    yp = _pad_to(_pad_to(y, mpad, 0), dpad, 1)
+    out = mixed_gram_pallas(xp * cm, yp * cm, xp * km, yp * km,
+                            sigma2, rho, interpret=interp)
     return out[:n, :m]
 
 
@@ -255,9 +282,14 @@ def kernel_gram(kernel_fn, x: Array, y: Array, params,
     under XLA).  `params` is duck-typed: needs `.sigma2` and `.rho`.
     """
     use, _ = _use_pallas(implementation)
-    if use and getattr(kernel_fn, "pallas_gram", None) == "matern52":
+    tag = getattr(kernel_fn, "pallas_gram", None)
+    if use and tag == "matern52":
         return matern52_gram(x, y, params.sigma2, params.rho,
                              implementation=implementation)
+    if use and tag == "mixed":
+        return mixed_gram(x, y, params.sigma2, params.rho,
+                          kernel_fn.cont_mask, kernel_fn.cat_mask,
+                          implementation=implementation)
     return kernel_fn(x, y, params)
 
 

@@ -23,6 +23,33 @@ def matern52_gram_ref(x: Array, y: Array, sigma2, rho) -> Array:
     return sigma2 * (1.0 + z + z * z / 3.0) * jnp.exp(-z)
 
 
+def mixed_gram_ref(x: Array, y: Array, sigma2, rho,
+                   cont_mask: Array, cat_mask: Array) -> Array:
+    """Mixed-space covariance (DESIGN.md §10): Matérn-2.5 over the
+    continuous (float + int) coordinates x an exchangeable factor
+    `exp(-d²_cat / 2 rho)` over the one-hot categorical coordinates.
+
+    On feasible one-hot blocks `d²_cat` is twice the number of differing
+    groups, so the factor is the Hamming-exponential kernel `exp(-h/rho)`;
+    off the lattice it is an RBF in the one-hot embedding — PSD everywhere
+    either way.  The categorical factor carries no gradient (the ascent
+    moves those coordinates by round-and-repair, not gradient steps), so
+    it is wrapped in stop_gradient for parity with the Pallas VJP.
+    """
+    xc, yc = x * cont_mask, y * cont_mask
+    xx = jnp.sum(xc * xc, axis=-1)[:, None]
+    yy = jnp.sum(yc * yc, axis=-1)[None, :]
+    sq = jnp.maximum(xx + yy - 2.0 * (xc @ yc.T), 0.0)
+    d = jnp.sqrt(sq + 1e-36)
+    z = jnp.sqrt(5.0) * d / rho
+    xk, yk = x * cat_mask, y * cat_mask
+    kk = jnp.sum(xk * xk, axis=-1)[:, None]
+    ll = jnp.sum(yk * yk, axis=-1)[None, :]
+    sqk = jnp.maximum(kk + ll - 2.0 * (xk @ yk.T), 0.0)
+    cat = jax.lax.stop_gradient(jnp.exp(-0.5 * sqk / rho))
+    return sigma2 * (1.0 + z + z * z / 3.0) * jnp.exp(-z) * cat
+
+
 def trsv_ref(l: Array, b: Array, *, trans: bool = False) -> Array:
     """Lower-triangular solve L q = b (or L^T q = b). b: (n,) or (n, r)."""
     return solve_triangular(l, b, lower=True, trans=1 if trans else 0)

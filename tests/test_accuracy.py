@@ -1,0 +1,90 @@
+"""Paper-fidelity accuracy regression: lazy GP vs the exact-GP baseline.
+
+The paper's core claim (abstract, Sec. 4) is that the lazy GP reaches the
+baseline's optimization accuracy — "outperforming the previous approach
+regarding optimization accuracy" — while decoupling the O(n^3)
+factorization from the iteration loop.  This suite pins that claim as a
+tier-1 regression on the paper's own synthetic benchmark (Levy, Sec. 4.1):
+
+  * `mode="lazy"`  — frozen kernel params, O(n^2) incremental appends
+    (the contribution);
+  * `mode="naive"` — per-iteration full refactorization with kernel
+    hyper-parameter refit (the "previous approach" baseline).
+
+Both run the identical suggestion machinery with pinned seeds, so the runs
+are deterministic (plain pytest asserts, no property machinery — they pass
+identically under real hypothesis or the conftest fallback).  Regret is
+measured against the known optimum f* = 0 at x* = 1 (maximization of the
+negative Levy function).
+
+Budgets are tuned to keep the whole file in single-digit seconds of
+tier-1 time while separating the two modes' behavior.
+"""
+import numpy as np
+import pytest
+
+from repro.core import levy_bounds, neg_levy, run_bo
+from repro.core.acquisition import AcqConfig
+
+DIM = 4
+SEEDS = (0, 1, 2)
+ITERATIONS = 30
+N_SEED = 8                 # random seed trials before BO rounds
+OPTIMUM = 0.0              # max of -levy at the all-ones vector
+ACQ = AcqConfig(restarts=24, ascent_steps=12)
+
+
+def _objective(x: np.ndarray) -> np.ndarray:
+    return np.asarray(neg_levy(x))
+
+
+def _regret(mode: str, seed: int, lag: int = 0) -> float:
+    lo, hi = levy_bounds(DIM)
+    _, hist = run_bo(_objective, lo, hi, iterations=ITERATIONS, dim=DIM,
+                     mode=mode, lag=lag, n_max=ITERATIONS + N_SEED + 2,
+                     n_seed=N_SEED, seed=seed, acq=ACQ)
+    return OPTIMUM - hist.best_y[-1]
+
+
+@pytest.fixture(scope="module")
+def regrets():
+    """One (mode x seed) sweep shared by every assertion below."""
+    return {mode: [_regret(mode, s) for s in SEEDS]
+            for mode in ("lazy", "naive")}
+
+
+def test_lazy_matches_exact_gp_accuracy_per_seed(regrets):
+    """The paper's accuracy claim, per pinned seed: the lazy GP's best-value
+    regret at a fixed step budget is no worse than the exact baseline's,
+    up to a float/trajectory tolerance."""
+    for lz, nv in zip(regrets["lazy"], regrets["naive"]):
+        assert lz <= nv + 0.75, (regrets["lazy"], regrets["naive"])
+
+
+def test_lazy_matches_exact_gp_accuracy_mean(regrets):
+    """Aggregate form (tighter): mean regret over the pinned seeds."""
+    mean_lazy = float(np.mean(regrets["lazy"]))
+    mean_naive = float(np.mean(regrets["naive"]))
+    assert mean_lazy <= mean_naive + 0.25, (mean_lazy, mean_naive)
+
+
+def test_lazy_absolute_quality(regrets):
+    """The lazy GP actually optimizes (regret far below a random-search
+    floor — random uniform on [-10,10]^4 leaves regret ~15+ at this
+    budget), so the comparative test above can't pass vacuously."""
+    assert float(np.mean(regrets["lazy"])) < 3.0, regrets["lazy"]
+    assert min(regrets["lazy"]) < 1.5, regrets["lazy"]
+
+
+def test_lagged_refit_tracks_fully_lazy():
+    """Lag-l refits (the paper's middle ground) stay within the same
+    accuracy envelope as the fully lazy run on a pinned seed."""
+    lazy = _regret("lazy", seed=0)
+    lagged = _regret("lazy", seed=0, lag=10)
+    assert lagged <= lazy + 1.5, (lagged, lazy)
+
+
+def test_runs_are_deterministic():
+    """Pinned seeds => bitwise-identical best values (the regression is
+    meaningful because reruns cannot drift)."""
+    assert _regret("lazy", seed=0) == _regret("lazy", seed=0)

@@ -1,0 +1,412 @@
+"""Mixed search spaces through the whole stack (DESIGN.md §10).
+
+Four layers under test:
+  * the round-and-repair projection (`core.descriptor.project_units`) —
+    feasibility, idempotence, host/device agreement;
+  * the mixed kernel — gram parity across ref/xla/pallas (≤1e-5, the
+    acceptance bar, at whatever device count the suite runs under), PSD,
+    the Hamming-factor semantics on the lattice, and the
+    continuous-block-only gradient contract;
+  * the engine/pool — heterogeneous type layouts stacked in one program,
+    mesh=none vs sharded parity, routed vs batched agreement;
+  * the gateway — mixed tenants end-to-end with eviction/restore and the
+    off-lattice tell reject.
+"""
+import asyncio
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import descriptor as desc_mod
+from repro.core import gp as gp_mod
+from repro.core.acquisition import AcqConfig, optimize_acquisition
+from repro.core.kernels import KernelParams, make_mixed_kernel
+from repro.hpo.gateway import GatewayConfig, StudyGateway
+from repro.hpo.pool import SchedulerConfig, StudyPool
+from repro.hpo.space import (Categorical, Dim, MIXED_DEMO_SPACE,
+                             SearchSpace)
+from repro.kernels import ops
+
+IMPLEMENTATIONS = ["ref", "xla", "pallas"]
+N_DEVICES = len(jax.devices())
+
+MIXED = MIXED_DEMO_SPACE          # Float log + Int(7) + Cat(3) + Conditional
+SMALL = SearchSpace((Dim("a", 0.0, 1.0),
+                     Categorical("c", ("p", "q", "r"))))  # width 4
+FLOAT4 = SearchSpace(tuple(Dim(f"f{i}", 0.0, 1.0) for i in range(4)))
+
+
+def _cfg(**kw) -> SchedulerConfig:
+    kw.setdefault("n_max", 16)
+    kw.setdefault("acq", AcqConfig(restarts=8, ascent_steps=4))
+    kw.setdefault("seed", 0)
+    return SchedulerConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Projection
+# ---------------------------------------------------------------------------
+def test_project_feasible_and_idempotent():
+    desc = MIXED.descriptor()
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.uniform(size=(64, MIXED.dim)), jnp.float32)
+    p = desc_mod.project_units(u, desc)
+    p2 = desc_mod.project_units(p, desc)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p2))
+    # device projection == host projection (one definition of feasible)
+    np.testing.assert_allclose(np.asarray(p), MIXED.project(np.asarray(u)),
+                               atol=1e-6)
+    for row in np.asarray(p):
+        # exactly one hot per categorical group
+        assert row[2:5].sum() == 1.0 and set(row[2:5]) <= {0.0, 1.0}
+        # int on the 7-point lattice
+        assert round(row[1] * 6) == pytest.approx(row[1] * 6, abs=1e-5)
+        # conditional momentum zeroed unless optimizer == "sgd"
+        if row[2] != 1.0:
+            assert row[5] == 0.0
+
+
+def test_project_is_identity_on_continuous():
+    desc = desc_mod.all_continuous(5)
+    u = jnp.linspace(0, 1, 5)
+    np.testing.assert_array_equal(np.asarray(desc_mod.project_units(u, desc)),
+                                  np.asarray(u))
+    assert not desc.has_discrete
+
+
+def test_project_tie_break_is_first_index():
+    desc = SMALL.descriptor()
+    u = jnp.asarray([0.3, 0.7, 0.7, 0.1], jnp.float32)   # cat tie at q == p
+    p = np.asarray(desc_mod.project_units(u, desc))
+    np.testing.assert_allclose(p, [0.3, 1.0, 0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# Mixed kernel: parity, PSD, Hamming semantics, gradient contract
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_mixed_gram_substrate_parity(implementation):
+    """Acceptance bar: ≤1e-5 vs the ref substrate on every implementation
+    (runs at 1 device everywhere and at 8 under the CI mesh job)."""
+    desc = MIXED.descriptor()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(MIXED.sample(rng, 24))
+    y = jnp.asarray(MIXED.sample(rng, 17))
+    want = ops.mixed_gram(x, y, 1.3, 0.4, desc.cont_mask, desc.cat_mask,
+                          implementation="ref")
+    got = ops.mixed_gram(x, y, 1.3, 0.4, desc.cont_mask, desc.cat_mask,
+                         implementation=implementation)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_mixed_gram_psd():
+    desc = MIXED.descriptor()
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(MIXED.sample(rng, 40))
+    k = np.asarray(ops.mixed_gram(x, x, 1.0, 0.3, desc.cont_mask,
+                                  desc.cat_mask, implementation="ref"))
+    w = np.linalg.eigvalsh(k + 1e-5 * np.eye(40))
+    assert w.min() > 0.0
+
+
+def test_mixed_gram_hamming_semantics():
+    """On the lattice the categorical factor is exp(-h/rho), h = number of
+    differing groups; identical continuous blocks isolate it."""
+    desc = SMALL.descriptor()
+    rho = 0.7
+    same = jnp.asarray([[0.5, 1.0, 0.0, 0.0]], jnp.float32)
+    diff = jnp.asarray([[0.5, 0.0, 1.0, 0.0]], jnp.float32)
+    k_same = float(ops.mixed_gram(same, same, 1.0, rho, desc.cont_mask,
+                                  desc.cat_mask, implementation="ref")[0, 0])
+    k_diff = float(ops.mixed_gram(same, diff, 1.0, rho, desc.cont_mask,
+                                  desc.cat_mask, implementation="ref")[0, 0])
+    assert k_same == pytest.approx(1.0, abs=1e-6)
+    assert k_diff == pytest.approx(np.exp(-1.0 / rho), abs=1e-6)
+
+
+def test_mixed_kernel_reduces_to_matern_on_continuous():
+    from repro.core.kernels import matern52
+    desc = desc_mod.all_continuous(3)
+    kern = make_mixed_kernel(desc.cont_mask, desc.cat_mask)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(size=(9, 3)), jnp.float32)
+    p = KernelParams(sigma2=1.0, rho=0.5, noise2=1e-6)
+    np.testing.assert_allclose(np.asarray(kern(x, x, p)),
+                               np.asarray(matern52(x, x, p)), atol=1e-6)
+
+
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_mixed_gradient_continuous_block_only(implementation):
+    """The categorical block gets zero cotangent on every substrate, and
+    the continuous gradients agree across substrates."""
+    desc = MIXED.descriptor()
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(MIXED.sample(rng, 12))
+    y = jnp.asarray(MIXED.sample(rng, 12))
+
+    def total(xx):
+        return jnp.sum(ops.mixed_gram(xx, y, 1.0, 0.4, desc.cont_mask,
+                                      desc.cat_mask,
+                                      implementation=implementation))
+
+    g = jax.grad(total)(x)
+    assert float(jnp.max(jnp.abs(g * desc.cat_mask))) == 0.0
+    g_ref = jax.grad(lambda xx: jnp.sum(ops.mixed_gram(
+        xx, y, 1.0, 0.4, desc.cont_mask, desc.cat_mask,
+        implementation="ref")))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Acquisition: round-and-repair inside the ascent
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("top_t", [1, 3])
+def test_acquisition_lands_on_lattice(top_t):
+    desc = MIXED.descriptor()
+    kern = make_mixed_kernel(desc.cont_mask, desc.cat_mask)
+    cfg = gp_mod.GPConfig(n_max=16, dim=MIXED.dim, desc=desc)
+    state = gp_mod.init_state(cfg)
+    rng = np.random.default_rng(5)
+    xs = jnp.asarray(MIXED.sample(rng, 6))
+    ys = jnp.asarray(rng.normal(size=6), jnp.float32)
+    state = gp_mod.append_batch(state, kern, xs, ys)
+    pts, _ = optimize_acquisition(
+        state, kern, jnp.zeros(MIXED.dim), jnp.ones(MIXED.dim),
+        jax.random.PRNGKey(0), AcqConfig(restarts=8, ascent_steps=5),
+        top_t=top_t, desc=desc)
+    pts = np.asarray(pts)
+    assert pts.shape == (top_t, MIXED.dim)
+    np.testing.assert_allclose(MIXED.project(pts), pts, atol=1e-6)
+
+
+def test_gpconfig_mixed_requires_matern():
+    with pytest.raises(ValueError, match="matern52"):
+        gp_mod.GPConfig(n_max=8, dim=MIXED.dim, kernel="rbf",
+                        desc=MIXED.descriptor())
+
+
+# ---------------------------------------------------------------------------
+# Engine/pool: heterogeneous layouts, batched == routed, mesh parity
+# ---------------------------------------------------------------------------
+def _drive(pool: StudyPool, rounds: int = 3) -> list[np.ndarray]:
+    seen = []
+    out = pool.advance_round([])
+    for _ in range(rounds):
+        events = [(s, out[s][0],
+                   float(-np.sum((out[s][0].unit - 0.3 - 0.1 * s) ** 2)))
+                  for s in range(pool.n_studies)]
+        out = pool.advance_round(events)
+        seen.append(np.stack([out[s][0].unit for s in range(pool.n_studies)]))
+    return seen
+
+
+@pytest.mark.parametrize("implementation", IMPLEMENTATIONS)
+def test_pool_heterogeneous_layouts_feasible(implementation):
+    """A mixed study and an all-float study share one stacked program;
+    every suggestion stays on its OWN study's lattice."""
+    pool = StudyPool([SMALL, FLOAT4], _cfg(implementation=implementation))
+    assert pool.engine.mixed
+    for units in _drive(pool, rounds=3):
+        np.testing.assert_allclose(SMALL.project(units[0]), units[0],
+                                   atol=1e-6)
+        # the float study is unconstrained (projection must not leak)
+        assert (units[1] >= 0.0).all() and (units[1] <= 1.0).all()
+    assert pool.engine.n(0) == pool.engine.n(1) == 3
+
+
+def test_pool_routed_matches_batched():
+    """suggest_at (routed) and suggest_all (batched) draw identical points
+    for identical states/keys in mixed mode."""
+    mk = lambda: StudyPool([SMALL, SMALL], _cfg())
+    a, b = mk(), mk()
+    for pool in (a, b):
+        out = pool.advance_round([])
+        pool.absorb_many([(s, out[s][0], float(s) - 0.5) for s in (0, 1)])
+    sa = a.suggest_all(t=1)
+    for s in (0, 1):
+        rb = b.suggest(s, 1)
+        np.testing.assert_allclose(np.asarray(sa[s][0].unit),
+                                   np.asarray(rb[0].unit), atol=1e-5)
+
+
+def test_pool_mixed_mesh_parity():
+    """mesh='none' and the 1x1 shard_map path agree on mixed suggestions
+    (multi-device specs covered by the CI mesh job via test_shard's own
+    parametrization plus this one when devices allow)."""
+    base = _drive(StudyPool([SMALL] * 4, _cfg(mesh="none")))
+    one = _drive(StudyPool([SMALL] * 4, _cfg(mesh="1x1")))
+    for u, v in zip(base, one):
+        np.testing.assert_allclose(u, v, atol=1e-5)
+
+
+@pytest.mark.skipif(N_DEVICES < 8, reason="needs 8 devices (CI mesh job)")
+def test_pool_mixed_mesh_multi_device_invariants():
+    """What sharding guarantees for mixed rounds across device layouts:
+    feasibility, per-mesh bitwise determinism, and acquisition-VALUE
+    parity with the unsharded round.  Cell IDENTITY is deliberately not
+    asserted: the EI landscape at small n has exactly-tied local maxima,
+    and which tied basin wins an argmax legitimately flips with one-ulp
+    cross-layout differences (pre-existing on the all-float stack; the
+    lattice just makes it visible as a flipped cell — see DESIGN.md §10
+    and ROADMAP 'layout-stable top-t selection')."""
+    import jax
+
+    def suggest(mesh):
+        pool = StudyPool([SMALL] * 4, _cfg(mesh=mesh))
+        out = pool.advance_round([])
+        pool.absorb_many([(s, out[s][0],
+                           float(-np.sum((out[s][0].unit - 0.3) ** 2)))
+                          for s in range(4)])
+        u, v = pool.engine.suggest_all(
+            jax.vmap(jax.random.PRNGKey)(np.arange(4)), top_t=1)
+        return np.asarray(u)[:, 0, :], np.asarray(v)[:, 0]
+
+    u_none, v_none = suggest("none")
+    for spec in ("auto", "4x1", "2x2"):
+        u, v = suggest(spec)
+        u2, v2 = suggest(spec)
+        np.testing.assert_allclose(SMALL.project(u), u, atol=1e-6)
+        np.testing.assert_array_equal(u, u2)      # deterministic per mesh
+        np.testing.assert_array_equal(v, v2)
+        np.testing.assert_allclose(v, v_none, atol=1e-4)  # value parity
+
+
+def test_engine_lag_refit_mixed():
+    """The lag-event grid refit runs through the mixed kernel (per-study
+    params diverge, factor stays consistent)."""
+    pool = StudyPool([SMALL], _cfg(lag=3, n_max=16))
+    out = pool.advance_round([])
+    for r in range(5):
+        ev = [(0, out[0][0], float(-r))]
+        out = pool.advance_round(ev)
+    assert pool.engine.n(0) == 5
+    assert pool.engine.since_refit(0) < 5   # a refit fired
+    u = out[0][0].unit
+    np.testing.assert_allclose(SMALL.project(u), u, atol=1e-6)
+
+
+def test_set_desc_rejects_discrete_on_continuous_engine():
+    pool = StudyPool([FLOAT4], _cfg())
+    assert not pool.engine.mixed
+    with pytest.raises(ValueError, match="mixed"):
+        pool.engine.set_desc(0, SMALL.descriptor())
+
+
+def test_cfg_mixed_flag_forces_mixed_closures():
+    pool = StudyPool([FLOAT4], _cfg(mixed=True))
+    assert pool.engine.mixed
+    pool.reset_study(0, space=SMALL)          # discrete tenant lands fine
+    tr = pool.suggest(0, 1)[0]
+    pool.absorb(0, tr, 0.5)
+    u = pool.suggest(0, 1)[0].unit
+    np.testing.assert_allclose(SMALL.project(u), u, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Gateway: mixed tenants end-to-end
+# ---------------------------------------------------------------------------
+def test_gateway_mixed_tenant_eviction_restore(tmp_path):
+    cfg = _cfg(n_max=32, ckpt_dir=str(tmp_path))
+    gw = StudyGateway(SMALL, cfg, GatewayConfig(slots=1))
+
+    async def drive():
+        mixed_sid = gw.create_study(name="mixed")
+        float_sid = gw.create_study(space=FLOAT4, name="float")
+        for _ in range(3):
+            for sid, space in ((mixed_sid, SMALL), (float_sid, FLOAT4)):
+                tr = await gw.ask(sid)       # slot churn: 1 slot, 2 tenants
+                u = np.asarray(tr.unit)
+                np.testing.assert_allclose(space.project(u), u, atol=1e-6)
+                gw.tell(sid, tr, float(-np.sum((u - 0.4) ** 2)))
+        await gw.drain()
+        return mixed_sid, float_sid
+
+    mixed_sid, float_sid = asyncio.run(drive())
+    assert gw.study_info(mixed_sid)["n_obs"] == 3
+    assert gw.study_info(float_sid)["n_obs"] == 3
+    assert gw.summary()["evictions"] >= 4    # 1 slot, alternating tenants
+
+
+def test_gateway_rejects_discrete_tenant_without_mixed(tmp_path):
+    cfg = _cfg(n_max=16, ckpt_dir=str(tmp_path))
+    gw = StudyGateway(FLOAT4, cfg, GatewayConfig(slots=1))
+    with pytest.raises(ValueError, match="mixed"):
+        gw.create_study(space=SMALL)
+
+
+def test_gateway_rejects_off_lattice_tell(tmp_path):
+    cfg = _cfg(n_max=16, ckpt_dir=str(tmp_path))
+    gw = StudyGateway(SMALL, cfg, GatewayConfig(slots=1))
+
+    async def drive():
+        sid = gw.create_study()
+        tr = await gw.ask(sid)
+        bad = dataclasses.replace(tr, unit=np.asarray(
+            [0.5, 0.4, 0.3, 0.3], np.float32))
+        with pytest.raises(ValueError, match="lattice"):
+            gw.tell(sid, bad, 0.0)
+        gw.tell(sid, tr, 0.0)                # the real one still lands
+        await gw.drain()
+        return sid
+
+    sid = asyncio.run(drive())
+    assert gw.study_info(sid)["n_obs"] == 1
+
+
+def test_gateway_mixed_registry_restore_round_trip(tmp_path):
+    """Typed spaces (incl. conditionals) survive the registry snapshot."""
+    cfg = _cfg(n_max=32, ckpt_dir=str(tmp_path))
+    gw = StudyGateway(MIXED, cfg, GatewayConfig(slots=2))
+
+    async def drive(g, sid=None):
+        if sid is None:
+            sid = g.create_study(name="t0")
+        tr = await g.ask(sid)
+        g.tell(sid, tr, 1.25)
+        await g.drain()
+        return sid
+
+    sid = asyncio.run(drive(gw))
+    gw.checkpoint()
+    gw2 = StudyGateway(MIXED, cfg, GatewayConfig(slots=2))
+    assert gw2.restore()
+    log_space = gw2._studies[sid].space
+    assert log_space == MIXED
+    assert gw2.study_info(sid)["best_value"] == 1.25
+    asyncio.run(drive(gw2, sid))             # serving continues post-restore
+    assert gw2.study_info(sid)["n_obs"] == 2
+
+
+def test_gateway_restore_reapplies_resident_mixed_descriptor(tmp_path):
+    """Regression: a RESIDENT mixed tenant on an all-float template must
+    get its type descriptor re-installed by restore() — not just its
+    bounds — or post-restore suggestions leave the lattice."""
+    cfg = _cfg(n_max=32, ckpt_dir=str(tmp_path), mixed=True)
+    gw = StudyGateway(FLOAT4, cfg, GatewayConfig(slots=2))
+
+    async def one(g, sid):
+        tr = await g.ask(sid)
+        g.tell(sid, tr, float(-np.sum(np.asarray(tr.unit) ** 2)))
+        await g.drain()
+        return np.asarray(tr.unit)
+
+    sid = gw.create_study(space=SMALL, name="mixed")   # custom layout
+    asyncio.run(one(gw, sid))
+    assert gw.study_info(sid)["resident"]
+    gw.checkpoint()
+    gw2 = StudyGateway(FLOAT4, cfg, GatewayConfig(slots=2))
+    assert gw2.restore()
+    u = asyncio.run(one(gw2, sid))
+    np.testing.assert_allclose(SMALL.project(u), u, atol=1e-6)
+
+
+def test_mixed_suggestions_deterministic_across_pools():
+    """Same seeds, same spaces -> identical mixed suggestion streams (the
+    restore/replay contract extends to discrete layouts)."""
+    a = _drive(StudyPool([MIXED] * 2, _cfg()))
+    b = _drive(StudyPool([MIXED] * 2, _cfg()))
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(u, v)

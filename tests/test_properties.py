@@ -2,12 +2,16 @@
 conftest shim when the package is absent — either way these RUN, they do
 not skip).
 
-Three families, per the PR-4 testing-debt payoff:
+Four families:
   * search-space round-trips under *random* specs (not just the presets),
   * append→posterior invariants against the ref substrate's dense GP,
   * an `li_buf` drift bound across random append/re-anchor interleavings —
     the state-machine property guarding the matmul-only batched path (the
-    maintained inverse must track the factor through ANY op sequence).
+    maintained inverse must track the factor through ANY op sequence),
+  * mixed-space invariants under *random typed* specs (DESIGN.md §10):
+    encode∘decode round-trips for every dim type, one-hot argmax
+    stability, mixed-gram PSD + substrate parity, and round-and-repair
+    feasibility.
 """
 import dataclasses
 
@@ -17,7 +21,10 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (GPConfig, append, dense_posterior, init_state,
                         matern52, posterior, refactor)
-from repro.hpo.space import Dim, SearchSpace
+from repro.core import descriptor as desc_mod
+from repro.hpo.space import (Categorical, Conditional, Dim, Int,
+                             SearchSpace)
+from repro.kernels import ops as kops
 
 
 # ---------------------------------------------------------------------------
@@ -172,3 +179,159 @@ def test_reanchor_after_drift_restores_exact_inverse(seed, k):
         np.testing.assert_array_equal(
             np.asarray(getattr(state.params, f.name)),
             np.asarray(getattr(refreshed.params, f.name)))
+
+
+# ---------------------------------------------------------------------------
+# Mixed-space invariants under random typed specs (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+_MIXED_DIM = st.one_of(
+    st.tuples(st.just("float"), st.floats(-3.0, 3.0), st.floats(0.1, 10.0),
+              st.booleans()),
+    st.tuples(st.just("int"), st.integers(-5, 5), st.integers(0, 7)),
+    st.tuples(st.just("cat"), st.integers(2, 4)),
+)
+_MIXED_SPEC = st.lists(_MIXED_DIM, min_size=1, max_size=5)
+
+
+def _mixed_space_from_spec(spec, conditional: bool) -> SearchSpace:
+    dims = []
+    first_cat = None
+    for i, s in enumerate(spec):
+        if s[0] == "float":
+            _, lo, width, is_log = s
+            if is_log:
+                lo = abs(lo) + 1e-3
+                dims.append(Dim(f"d{i}", lo, lo * (1.0 + width), "log"))
+            else:
+                dims.append(Dim(f"d{i}", lo, lo + width))
+        elif s[0] == "int":
+            _, lo, span = s
+            dims.append(Int(f"d{i}", lo, lo + span))
+        else:
+            cat = Categorical(f"d{i}", tuple(f"c{j}" for j in range(s[1])))
+            dims.append(cat)
+            first_cat = first_cat or cat
+    if conditional and first_cat is not None:
+        dims.append(Conditional(Dim("child", 0.0, 1.0),
+                                first_cat.name, first_cat.choices[0]))
+    return SearchSpace(tuple(dims))
+
+
+@settings(max_examples=20, deadline=None)
+@given(spec=_MIXED_SPEC, conditional=st.booleans(), seed=st.integers(0, 999))
+def test_mixed_encode_decode_roundtrips(spec, conditional, seed):
+    """encode∘decode is the identity on feasible points for EVERY dim type,
+    including gated conditionals (inactive children re-encode to the
+    neutral block, so the unit vector round-trips exactly)."""
+    space = _mixed_space_from_spec(spec, conditional)
+    rng = np.random.default_rng(seed)
+    for row in space.sample(rng, 8):
+        hp = space.to_hparams(row)
+        back = space.to_unit(hp)
+        np.testing.assert_allclose(back, row, atol=1e-5)
+        # decoded values are in-range and of the right type
+        for d in space.dims:
+            v = hp[d.name]
+            inner = d.inner if isinstance(d, Conditional) else d
+            if v is None:
+                assert isinstance(d, Conditional)
+                assert hp[d.parent] != d.when
+            elif isinstance(inner, Int):
+                assert inner.lo <= v <= inner.hi and float(v).is_integer()
+            elif isinstance(inner, Categorical):
+                assert v in inner.choices
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_choices=st.integers(2, 6), seed=st.integers(0, 999))
+def test_one_hot_argmax_stable_under_perturbation(n_choices, seed):
+    """Decoding survives sub-0.5 perturbations of a one-hot block (argmax
+    cannot flip while the hot coordinate stays dominant), and ties break
+    to the first index on both the host and device paths."""
+    cat = Categorical("c", tuple(f"c{j}" for j in range(n_choices)))
+    space = SearchSpace((cat,))
+    desc = space.descriptor()
+    rng = np.random.default_rng(seed)
+    for j, choice in enumerate(cat.choices):
+        u = cat.encode(choice)
+        noisy = np.clip(u + rng.uniform(-0.49, 0.49, u.shape), 0.0, 1.0)
+        noisy[j] = max(noisy[j], 0.51)       # hot stays dominant
+        assert cat.decode(noisy.astype(np.float32)) == choice
+        repaired = np.asarray(desc_mod.project_units(
+            jnp.asarray(noisy, jnp.float32), desc))
+        np.testing.assert_array_equal(repaired, u)
+
+
+@settings(max_examples=8, deadline=None)
+@given(spec=_MIXED_SPEC, conditional=st.booleans(), seed=st.integers(0, 999))
+def test_mixed_gram_psd_and_parity(spec, conditional, seed):
+    """For ANY typed layout: the mixed gram is PSD on feasible points and
+    the three substrates agree to 1e-5 (the acceptance bar)."""
+    space = _mixed_space_from_spec(spec, conditional)
+    desc = space.descriptor()
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(space.sample(rng, 12))
+    want = np.asarray(kops.mixed_gram(x, x, 1.0, 0.5, desc.cont_mask,
+                                      desc.cat_mask, implementation="ref"))
+    for impl in ("xla", "pallas"):
+        got = np.asarray(kops.mixed_gram(x, x, 1.0, 0.5, desc.cont_mask,
+                                         desc.cat_mask,
+                                         implementation=impl))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+    w = np.linalg.eigvalsh(want + 1e-5 * np.eye(12))
+    assert w.min() > 0.0
+    np.testing.assert_allclose(np.diag(want), 1.0, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(spec=_MIXED_SPEC, conditional=st.booleans(), seed=st.integers(0, 999))
+def test_round_and_repair_always_feasible(spec, conditional, seed):
+    """project_units of ANY cube point lands on the feasible lattice
+    (host round-trip agrees), is idempotent, and leaves continuous
+    coordinates untouched."""
+    space = _mixed_space_from_spec(spec, conditional)
+    desc = space.descriptor()
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.uniform(size=(6, space.dim)), jnp.float32)
+    p = desc_mod.project_units(u, desc)
+    p_np = np.asarray(p)
+    np.testing.assert_allclose(space.project(np.asarray(u)), p_np,
+                               atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(desc_mod.project_units(p, desc)), p_np)
+    cont = np.asarray(desc.cont_mask) * (np.asarray(desc.levels) == 0) \
+        * (np.asarray(desc.parent) < 0)
+    np.testing.assert_array_equal(p_np * cont, np.asarray(u) * cont)
+    # every projected row encodes a decodable, re-encodable point
+    for row in p_np:
+        np.testing.assert_allclose(space.to_unit(space.to_hparams(row)),
+                                   row, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 999), n=st.integers(3, 8))
+def test_mixed_append_posterior_matches_dense(seed, n):
+    """The lazy append/posterior machinery under the mixed kernel matches
+    the textbook dense GP with the same kernel."""
+    from repro.core import dense_posterior as dense
+    from repro.core.kernels import make_mixed_kernel
+    space = SearchSpace((Dim("a", 0.0, 1.0), Int("k", 0, 4),
+                         Categorical("c", ("p", "q"))))
+    desc = space.descriptor()
+    kern = make_mixed_kernel(desc.cont_mask, desc.cat_mask)
+    rng = np.random.default_rng(seed)
+    xs = space.sample(rng, n)
+    ys = (xs[:, 0] + xs[:, 1] - xs[:, 2]).astype(np.float32)
+    state = init_state(GPConfig(n_max=16, dim=space.dim, noise2=1e-5,
+                                desc=desc))
+    for x, y in zip(xs, ys):
+        state = append(state, kern, jnp.asarray(x),
+                       jnp.asarray(y, jnp.float32))
+    xq = jnp.asarray(space.sample(rng, 5))
+    mean, var = posterior(state, kern, xq)
+    mean_d, var_d = dense(jnp.asarray(xs), jnp.asarray(ys), xq, kern,
+                          state.params)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(mean_d),
+                               rtol=1e-3, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var_d),
+                               rtol=1e-2, atol=5e-4)

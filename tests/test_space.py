@@ -1,17 +1,22 @@
-"""`hpo/space.py`: unit-cube round-trips on linear and log dimensions.
+"""`hpo/space.py`: unit-cube round-trips on typed dimensions.
 
-The GP only ever sees the unit cube; these tests pin the contract that
-`to_unit` and `to_value` invert each other (including at the box edges),
-that out-of-range unit coordinates clamp instead of extrapolating, and
-that the preset spaces map named hyper-parameters consistently.
+The GP only ever sees the encoded unit cube; these tests pin the contract
+that `to_unit` and `to_value` invert each other (including at the box
+edges), that out-of-range values and unit coordinates CLAMP instead of
+extrapolating (both directions — a restored trial at `hi + eps` must not
+map outside the cube), that typed dims (Int / Categorical / Conditional)
+encode to the feasible lattice and decode back, and that the preset spaces
+map named hyper-parameters consistently.
 """
 import math
 
 import numpy as np
 import pytest
 
-from repro.hpo.space import (LENET_SPACE, LM_SPACE, RESNET_SPACE, Dim,
-                             SearchSpace)
+from repro.hpo.space import (LENET_SPACE, LM_SPACE, MIXED_DEMO_SPACE,
+                             RESNET_SPACE, Categorical, Conditional, Dim,
+                             Float, Int, SearchSpace, space_from_dicts,
+                             space_to_dicts)
 
 LIN = Dim("momentum", 0.0, 0.99)
 LOG = Dim("lr", 1e-4, 1e-1, "log")
@@ -77,3 +82,156 @@ def test_custom_space_dim_property():
     sp = SearchSpace((LIN, LOG))
     assert sp.dim == 2
     assert sp.names == ["momentum", "lr"]
+
+
+# ---------------------------------------------------------------------------
+# Regression: out-of-range VALUES clamp in to_unit (the tell-tick abort).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dim", [LIN, LOG], ids=["linear", "log"])
+def test_out_of_range_value_clamps(dim):
+    """A restored/external trial whose value sits at hi + eps (float spill)
+    must map to the cube edge — an out-of-cube unit used to abort the
+    gateway's coalesced tell() tick."""
+    eps = abs(dim.hi) * 1e-6 + 1e-9
+    assert dim.to_unit(dim.hi + eps) == pytest.approx(1.0, abs=1e-5)
+    assert dim.to_unit(dim.hi * 10.0) == 1.0
+    # below lo clamps to 0 — on a log dim this used to raise (log of a
+    # non-positive value) before it could even produce a bad unit
+    assert dim.to_unit(dim.lo - 1.0) == 0.0
+
+
+def test_space_to_unit_of_spilled_hparams_stays_in_cube():
+    hp = RESNET_SPACE.to_hparams(np.ones(RESNET_SPACE.dim, np.float32))
+    hp = {k: v * (1.0 + 1e-6) for k, v in hp.items()}   # spill past hi
+    u = RESNET_SPACE.to_unit(hp)
+    assert (u >= 0.0).all() and (u <= 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Typed dims: Int / Categorical / Conditional (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+INT = Int("depth", 2, 8)
+CAT = Categorical("opt", ("sgd", "adam", "rmsprop"))
+
+
+def test_float_aliases_dim():
+    assert Float is Dim
+
+
+def test_int_lattice_round_trip():
+    assert INT.levels == 7
+    for v in range(2, 9):
+        u = INT.to_unit(v)
+        assert 0.0 <= u <= 1.0
+        assert INT.to_value(u) == v
+    # off-lattice units round to the nearest integer
+    assert INT.to_value(INT.to_unit(5) + 0.01) == 5
+    # out-of-range values clamp
+    assert INT.to_unit(100) == 1.0
+    assert INT.to_unit(-3) == 0.0
+
+
+def test_int_single_level():
+    d = Int("k", 3, 3)
+    assert d.levels == 1
+    assert d.to_unit(3) == 0.0
+    assert d.to_value(0.7) == 3
+
+
+def test_categorical_one_hot_round_trip():
+    for c in CAT.choices:
+        u = CAT.encode(c)
+        assert u.sum() == 1.0 and u.max() == 1.0
+        assert CAT.decode(u) == c
+    # argmax decode is deterministic on ties (first index wins)
+    assert CAT.decode(np.asarray([0.5, 0.5, 0.0])) == "sgd"
+
+
+def test_categorical_validation():
+    with pytest.raises(ValueError):
+        Categorical("c", ("only",))
+    with pytest.raises(ValueError):
+        Categorical("c", ("a", "a"))
+
+
+def test_categorical_choices_must_survive_json_round_trip():
+    """A composite choice (e.g. a tuple) would serialize into the gateway
+    registry as a JSON list and make the committed checkpoint unrestorable
+    (Categorical rebuild dedups via set()) — reject it at construction,
+    not at crash recovery."""
+    with pytest.raises(ValueError, match="JSON"):
+        Categorical("filter", ((3, 3), (5, 5)))
+    # primitives of every JSON scalar kind are fine and round-trip
+    sp = SearchSpace((Categorical("k", (1, 2, 3)),))
+    assert space_from_dicts(space_to_dicts(sp)) == sp
+
+
+def test_conditional_gating_round_trip():
+    sp = MIXED_DEMO_SPACE
+    # active branch: optimizer == sgd carries momentum
+    hp = {"lr": 1e-2, "depth": 4, "optimizer": "sgd", "momentum": 0.5}
+    u = sp.to_unit(hp)
+    back = sp.to_hparams(u)
+    assert back["optimizer"] == "sgd"
+    assert back["momentum"] == pytest.approx(0.5, abs=1e-5)
+    # inactive branch: momentum encodes to the neutral 0, decodes to None
+    hp2 = {"lr": 1e-2, "depth": 4, "optimizer": "adam", "momentum": 0.9}
+    u2 = sp.to_unit(hp2)
+    assert u2[-1] == 0.0
+    assert sp.to_hparams(u2)["momentum"] is None
+
+
+def test_conditional_validation():
+    with pytest.raises(ValueError, match="parent"):
+        SearchSpace((Conditional(Dim("m", 0.0, 1.0), "nope", "x"),))
+    with pytest.raises(ValueError, match="choice"):
+        SearchSpace((CAT, Conditional(Dim("m", 0.0, 1.0), "opt", "bad")))
+    with pytest.raises(ValueError, match="nest"):
+        Conditional(Conditional(Dim("m", 0.0, 1.0), "a", "b"), "c", "d")
+
+
+def test_mixed_space_sample_is_feasible():
+    sp = MIXED_DEMO_SPACE
+    rng = np.random.default_rng(3)
+    s = sp.sample(rng, 32)
+    assert s.shape == (32, sp.dim)
+    np.testing.assert_allclose(sp.project(s), s, atol=1e-6)
+    # every row decodes to a consistent hparam dict and re-encodes exactly
+    for row in s:
+        np.testing.assert_allclose(sp.to_unit(sp.to_hparams(row)), row,
+                                   atol=1e-5)
+
+
+def test_all_float_sample_stream_unchanged():
+    """Typed-space sampling must not perturb the seed streams of existing
+    all-Float studies (restored pools replay these streams)."""
+    rng = np.random.default_rng(7)
+    want = np.random.default_rng(7).uniform(
+        0.0, 1.0, (5, RESNET_SPACE.dim)).astype(np.float32)
+    np.testing.assert_array_equal(RESNET_SPACE.sample(rng, 5), want)
+
+
+def test_space_serialization_round_trip():
+    sp = MIXED_DEMO_SPACE
+    assert space_from_dicts(space_to_dicts(sp)) == sp
+    # legacy dicts (no "type" tag) rebuild as float Dims
+    legacy = [{"name": "lr", "lo": 1e-4, "hi": 1e-1, "scale": "log"}]
+    sp2 = space_from_dicts(legacy)
+    assert sp2.dims[0] == Dim("lr", 1e-4, 1e-1, "log")
+
+
+def test_descriptor_matches_layout():
+    desc = MIXED_DEMO_SPACE.descriptor()
+    np.testing.assert_array_equal(np.asarray(desc.cont_mask),
+                                  [1, 1, 0, 0, 0, 1])
+    np.testing.assert_array_equal(np.asarray(desc.cat_mask),
+                                  [0, 0, 1, 1, 1, 0])
+    np.testing.assert_array_equal(np.asarray(desc.levels),
+                                  [0, 7, 0, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(desc.group),
+                                  [-1, -1, 2, 2, 2, -1])
+    # momentum is gated by optimizer == "sgd" (one-hot coordinate 2)
+    np.testing.assert_array_equal(np.asarray(desc.parent),
+                                  [-1, -1, -1, -1, -1, 2])
+    assert desc.has_discrete
+    assert not RESNET_SPACE.descriptor().has_discrete
