@@ -131,19 +131,16 @@ def _gram_parity() -> list[dict]:
 def _sharded_round_parity() -> dict:
     """mesh='auto' vs mesh='none' mixed advance rounds (8-device cell).
 
-    What the stack guarantees across device layouts — and what this cell
-    gates on — is: (a) every sharded suggestion is a FEASIBLE lattice
-    point, (b) a given mesh spec is bitwise DETERMINISTIC run-to-run, and
-    (c) the sharded round's chosen suggestions score the same acquisition
-    VALUE as the unsharded round's (both are argmaxes of restart-value
-    sets that agree to float tolerance).  Cell-IDENTITY is reported but
-    not gated: the EI landscape at small n has exactly-tied local maxima
-    (top-t values identical to 8 significant digits), and which tied
-    basin wins an argmax legitimately differs by one ulp across device
-    layouts — a pre-existing property of the continuous stack too
-    (reproducible at S = 8 with an all-float space on the pre-mixed
-    code), which the discrete lattice merely makes visible as a flipped
-    cell instead of a 1e-7 coordinate wiggle.
+    Gates, across device layouts: (a) every sharded suggestion is a
+    FEASIBLE lattice point, (b) a given mesh spec is bitwise
+    DETERMINISTIC run-to-run, (c) the sharded round's chosen suggestions
+    score the same acquisition VALUE as the unsharded round's, and
+    (d) cell IDENTITY — since the selection tie-break quantization in
+    `optimize_acquisition`, restarts whose EI values differ only by
+    cross-layout ulps collapse into one quantization bucket, so every
+    layout picks the same winning restart and `identical_suggestion_frac`
+    must be 1.0 (it was informational before that fix: exactly-tied
+    local maxima at small n used to flip cells across layouts).
     """
     import jax
     import numpy as np
@@ -178,7 +175,10 @@ def _sharded_round_parity() -> dict:
         "deterministic": deterministic,
         "acq_value_max_err": value_err,
         "acq_value_pass_1e4": value_err <= 1e-4,
-        "identical_suggestion_frac": agree,   # informational (tie flips)
+        "identical_suggestion_frac": agree,
+        # Hard gate (layout-stable top-t selection): every study's sharded
+        # cell must match the unsharded one.
+        "cell_identity_pass": bool(agree == 1.0),
     }
 
 
@@ -277,6 +277,7 @@ def run(full: bool = False, json_path: str = JSON_PATH):
         f"mixed_sharded_round,,feasible={sh['feasible']} "
         f"deterministic={sh['deterministic']} "
         f"acq_value_err={sh['acq_value_max_err']:.2e} "
+        f"cell_identity={sh['cell_identity_pass']} "
         f"identical_frac={sh['identical_suggestion_frac']:.2f}",
         f"mixed_round,{thr['mixed_round_us']:.0f},"
         f"overhead_vs_continuous={thr['mixed_overhead']:.2f}x",

@@ -6,9 +6,17 @@ current backend supports ("xla" | "ref" always; "pallas" only where the
 kernels compile natively, i.e. TPU — interpret mode on CPU is a correctness
 harness, not a benchmark), plus the "auto" policy the configs default to.
 
+For the lazy mode each substrate row also carries the fused-vs-unfused
+acquisition cell (the DESIGN.md §11 megakernel forced on vs. forced off via
+`AcqConfig.fused`) and a per-phase split of one EI-ascent iteration at the
+ascent's own (restarts, d) batch shape: cross-gram build, posterior
+mean/var, the fused EI value+gradient step, and the selection argmax.
+
 Emits the rows in the standard `name,us_per_call,derived` CSV format for
-`benchmarks.run`, and writes the machine-readable `BENCH_substrate.json`
-with the per-phase split (suggest vs GP update) per combination.
+`benchmarks.run`, and writes the machine-readable `BENCH_substrate.json`.
+The PR-5 (pre-megakernel) lazy `acq_us` baselines are committed alongside
+the fresh numbers so the fused speedup is measured against a pinned
+reference in the same artifact.
 """
 from __future__ import annotations
 
@@ -20,8 +28,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BayesOpt, BOConfig, BOHistory, levy_bounds, neg_levy
+from repro.core.acquisition import AcqConfig
 
 JSON_PATH = "BENCH_substrate.json"
+
+# Lazy-mode `acq_us` as committed by PR 5 (unfused ascent: autodiff through
+# the posterior, one dispatch chain per restart per step).  Pinned here so
+# BENCH_substrate.json always carries the reference the megakernel's
+# acceptance criterion (>= 2x) is measured against.
+PR5_BASELINE_ACQ_US = {
+    "lazy/auto": 6318.7,
+    "lazy/xla": 6277.8,
+    "lazy/ref": 6244.5,
+}
 
 
 def _implementations() -> list[str]:
@@ -32,12 +51,13 @@ def _implementations() -> list[str]:
 
 
 def _time_step(mode: str, implementation: str, *, n0: int, n_max: int,
-               dim: int = 5, reps: int = 3) -> dict:
+               dim: int = 5, reps: int = 3, fused: str = "auto") -> dict:
     """Average one BO step (suggest + evaluate + absorb) at n ~ n0."""
     obj = lambda x: np.asarray(neg_levy(jnp.asarray(x)))
     lo, hi = levy_bounds(dim)
     cfg = BOConfig(dim=dim, n_max=n_max, mode=mode, seed=0,
-                   implementation=implementation)
+                   implementation=implementation,
+                   acq=AcqConfig(fused=fused))
     bo = BayesOpt(cfg, lo, hi)
 
     key = jax.random.PRNGKey(0)
@@ -67,6 +87,65 @@ def _time_step(mode: str, implementation: str, *, n0: int, n_max: int,
     }
 
 
+def _acq_phases(implementation: str, *, n0: int, n_max: int, dim: int = 5,
+                restarts: int = 64, reps: int = 30) -> dict:
+    """Per-phase split of one EI-ascent iteration (DESIGN.md §11).
+
+    Each phase runs as its own jitted call at the ascent's (restarts, d)
+    candidate batch shape against a lazy state seeded to n0 active rows:
+    the cross-gram build, the posterior mean/var through the maintained
+    inverse, the fused EI value+gradient megakernel step (which subsumes
+    the first two plus the analytic gradient in one dispatch), and the
+    tie-break-quantized selection argmax.  Times are us per call (best of
+    `reps`).
+    """
+    from repro.core import acquisition as acq_mod
+    from repro.core import gp as gp_mod
+    from repro.core.kernels import matern52
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    gcfg = gp_mod.GPConfig(n_max=n_max, dim=dim,
+                           implementation=implementation)
+    st = gp_mod.init_state(gcfg)
+    xs = jax.random.uniform(key, (n0, dim))
+    ys = jnp.sin(3.0 * xs.sum(-1))
+    st = gp_mod.append_batch(st, matern52, xs, ys,
+                             implementation=implementation)
+
+    x_cand = jax.random.uniform(jax.random.fold_in(key, 1), (restarts, dim))
+    amask = (jnp.arange(n_max) < st.n).astype(jnp.float32)
+    a_buf = st.li_buf.T @ st.li_buf
+    shift = gp_mod._ymean(st) - acq_mod._f_best(st) - 0.01
+
+    gram = jax.jit(lambda x: ops.kernel_gram(
+        matern52, st.x_buf, x, st.params, implementation=implementation))
+    post = jax.jit(lambda x: gp_mod.posterior(
+        st, matern52, x, implementation=implementation))
+    ei_grad = jax.jit(lambda x: ops.fused_ei_grad(
+        x, st.x_buf, amask, st.alpha, a_buf, st.params.sigma2,
+        st.params.rho, shift, implementation=implementation))
+    argmax = jax.jit(
+        lambda v: jnp.argmax(acq_mod._quantize_for_tiebreak(v)))
+    vals = ei_grad(x_cand)[0]
+
+    def best_of(fn, arg) -> float:
+        jax.block_until_ready(fn(arg))            # compile + warm up
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(arg))
+            best = min(best, time.perf_counter() - t0)
+        return 1e6 * best
+
+    return {
+        "gram_us": best_of(gram, x_cand),
+        "posterior_us": best_of(post, x_cand),
+        "ei_grad_fused_us": best_of(ei_grad, x_cand),
+        "argmax_us": best_of(argmax, vals),
+    }
+
+
 def run(full: bool = False, json_path: str = JSON_PATH):
     n0 = 512 if full else 128
     n_max = n0 + 16
@@ -75,16 +154,32 @@ def run(full: bool = False, json_path: str = JSON_PATH):
     for mode in ("lazy", "naive"):
         for impl in _implementations():
             rec = _time_step(mode, impl, n0=n0, n_max=n_max)
+            if mode == "lazy":
+                fused_on = _time_step(mode, impl, n0=n0, n_max=n_max,
+                                      fused="on")
+                fused_off = _time_step(mode, impl, n0=n0, n_max=n_max,
+                                       fused="off")
+                rec["acq_fused_us"] = fused_on["acq_us"]
+                rec["acq_unfused_us"] = fused_off["acq_us"]
+                rec["acq_fused_speedup"] = (fused_off["acq_us"]
+                                            / fused_on["acq_us"])
+                rec["acq_phase_us"] = _acq_phases(impl, n0=n0, n_max=n_max)
             records.append(rec)
+            extra = ""
+            if mode == "lazy":
+                extra = (f" fused_us={rec['acq_fused_us']:.0f}"
+                         f" unfused_us={rec['acq_unfused_us']:.0f}"
+                         f" fused_speedup={rec['acq_fused_speedup']:.2f}x")
             out.append(
                 f"substrate_{mode}_{impl},{rec['step_us']:.0f},"
                 f"gp_us={rec['gp_us']:.0f} acq_us={rec['acq_us']:.0f} "
-                f"n={n0} clamps={rec['clamp_count']}")
+                f"n={n0} clamps={rec['clamp_count']}" + extra)
     payload = {
         "backend": jax.default_backend(),
         "n0": n0,
         "n_max": n_max,
         "results": records,
+        "pr5_baseline_acq_us": dict(PR5_BASELINE_ACQ_US),
     }
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=2)

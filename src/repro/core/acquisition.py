@@ -10,6 +10,21 @@ random restarts followed by spatial deduplication: ascended points that
 converge to the same basin collapse to one representative, and the t best
 distinct basins are returned.  This is fixed-shape (R restarts, S ascent
 steps) so the whole suggestion step compiles once.
+
+The EI ascent runs on the **fused megakernel** (DESIGN.md §11) wherever the
+substrate covers it: every step evaluates EI value + analytic gradient for
+the whole (R, d) restart batch in one dispatch (`ops.fused_ei_grad`), with
+the loop-invariant pieces — f_best, the active-observation mean,
+`A = li_buf^T li_buf`, and the active mask — hoisted once per suggest call.
+`AcqConfig.fused` controls the path: "auto" (default) uses it for every
+substrate except "ref", which stays on the generic autodiff ascent as the
+independent oracle the parity suite compares against.
+
+Restart selection quantizes the acquisition values (low-mantissa clearing)
+before the argmax / top-t sort, so substrate- and layout-level round-off
+(mesh="none" vs. a sharded ascent) never flips which restart wins a
+numerical tie — the chosen cell is identical across layouts.  Reported
+values stay exact.
 """
 from __future__ import annotations
 
@@ -22,6 +37,7 @@ import jax.numpy as jnp
 from repro.core import descriptor as desc_mod
 from repro.core import gp as gp_mod
 from repro.core.kernels import KernelFn
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -62,6 +78,9 @@ ACQUISITIONS: dict[str, Callable[..., Array]] = {
 }
 
 
+FUSED_MODES = ("auto", "on", "off")
+
+
 @dataclasses.dataclass(frozen=True)
 class AcqConfig:
     name: str = "ei"
@@ -70,13 +89,17 @@ class AcqConfig:
     ascent_steps: int = 25      # S projected-gradient steps per seed
     lr: float = 0.05            # in units of the box width
     dedup_radius: float = 0.08  # basin-merge radius, units of box width
+    fused: str = "auto"         # fused EI megakernel (DESIGN.md §11):
+    # "auto" = fused wherever the substrate covers it except "ref" (the
+    # autodiff oracle), "on" = force fused (parity tests), "off" = never.
 
 
 def _acq_value(state: gp_mod.LazyGPState, kernel: KernelFn, x: Array,
                f_best: Array, cfg: AcqConfig,
-               implementation: str = "auto") -> Array:
+               implementation: str = "auto",
+               ymean: Array | None = None) -> Array:
     mean, var = gp_mod.posterior(state, kernel, x[None, :],
-                                 implementation=implementation)
+                                 implementation=implementation, ymean=ymean)
     fn = ACQUISITIONS[cfg.name]
     return fn(mean, var, f_best, cfg.xi)[0]
 
@@ -86,14 +109,98 @@ def _f_best(state: gp_mod.LazyGPState) -> Array:
     return jnp.max(jnp.where(m, state.y_buf, -jnp.inf))
 
 
+# Mantissa bits cleared by the selection tie-break: values within ~2^-11
+# relative distance collapse to one bucket — orders of magnitude wider than
+# substrate/layout round-off (a few ulps), orders of magnitude tighter than
+# any real EI difference between distinct basins.
+_TIEBREAK_MANTISSA_BITS = 12
+
+
+def _quantize_for_tiebreak(vals: Array) -> Array:
+    """Scale-free float32 quantization used ONLY for restart selection.
+
+    Clearing low mantissa bits is monotone (never reorders values beyond
+    collapsing near-ties), so argmax / the stable descending sort pick the
+    same (first) restart index under mesh="none" and any sharded layout
+    even when the two layouts' arithmetic differs by ulps.  Reported
+    acquisition values stay exact — this never touches them.
+    """
+    bits = jax.lax.bitcast_convert_type(vals.astype(jnp.float32), jnp.uint32)
+    bits = bits & jnp.uint32((0xFFFFFFFF << _TIEBREAK_MANTISSA_BITS)
+                             & 0xFFFFFFFF)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _use_fused(cfg: AcqConfig, kernel: KernelFn, implementation: str) -> bool:
+    """Host-side fused-path policy (baked into the jitted program)."""
+    if cfg.fused not in FUSED_MODES:
+        raise ValueError(f"unknown AcqConfig.fused {cfg.fused!r}; "
+                         f"expected one of {FUSED_MODES}")
+    if cfg.fused == "off" or not ops.fused_supported(kernel, cfg.name):
+        return False
+    return cfg.fused == "on" or implementation != "ref"
+
+
+def _make_eval_batch(state: gp_mod.LazyGPState, kernel: KernelFn,
+                     cfg: AcqConfig, implementation: str, fused: bool,
+                     f_best: Array, ymean: Array, tune_s: int):
+    """Build `eval(X (r, d)) -> (vals (r,), grads (r, d))` for the ascent.
+
+    Fused: hoists the loop-invariant precompute — the active mask,
+    `A = li_buf^T li_buf` (one GEMM amortized over every ascent step), and
+    the scalar shift `ymean - f_best - xi` — and closes over it, so each
+    step is a single `ops.fused_ei_grad` dispatch for the whole batch.
+
+    Unfused: the generic autodiff path (any acquisition, any kernel),
+    with `f_best`/`ymean` still hoisted out of the jitted restart loop.
+    """
+    if fused:
+        amask = (jnp.arange(state.n_max) < state.n).astype(state.x_buf.dtype)
+        a_buf = state.li_buf.T @ state.li_buf
+        shift = ymean - f_best - cfg.xi
+        cont_mask = getattr(kernel, "cont_mask", None)
+        cat_mask = getattr(kernel, "cat_mask", None)
+
+        def eval_batch(x):
+            return ops.fused_ei_grad(
+                x, state.x_buf, amask, state.alpha, a_buf,
+                state.params.sigma2, state.params.rho, shift,
+                cont_mask=cont_mask, cat_mask=cat_mask,
+                implementation=implementation, tune_s=tune_s)
+
+        return eval_batch
+    value = lambda x: _acq_value(state, kernel, x, f_best, cfg,
+                                 implementation, ymean=ymean)
+    return jax.vmap(jax.value_and_grad(value))
+
+
+def ei_value_and_grad(state: gp_mod.LazyGPState, kernel: KernelFn,
+                      x: Array, cfg: AcqConfig | None = None, *,
+                      implementation: str = "auto", fused: bool = True,
+                      tune_s: int = 1) -> tuple[Array, Array]:
+    """Acquisition value + gradient for a whole (r, d) candidate batch.
+
+    `fused=True` runs the megakernel step (DESIGN.md §11); `fused=False`
+    runs the generic autodiff oracle on the same hoisted invariants.  One
+    ascent iteration evaluates exactly this — exposed so the parity suite
+    and the phase benchmarks exercise the real step in isolation.
+    Single-study states; vmap over a stacked state for the batched form.
+    """
+    cfg = cfg or AcqConfig()
+    eval_batch = _make_eval_batch(
+        state, kernel, cfg, implementation, fused,
+        _f_best(state), gp_mod._ymean(state), tune_s)
+    return eval_batch(x)
+
+
 def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
                          lo: Array, hi: Array, key: Array,
                          cfg: AcqConfig, top_t: int = 1,
                          *, implementation: str = "auto",
                          restart_axis: str | None = None,
                          restart_shards: int = 1,
-                         desc: desc_mod.TypeDescriptor | None = None
-                         ) -> tuple[Array, Array]:
+                         desc: desc_mod.TypeDescriptor | None = None,
+                         _tune_s: int = 1) -> tuple[Array, Array]:
     """Return (points (top_t, d), acq values (top_t,)), best first.
 
     top_t = 1 is standard sequential BO; top_t = t implements the paper's
@@ -133,7 +240,8 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
             lambda st, k, l, h, dc: optimize_acquisition(
                 st, kernel, l, h, k, cfg, top_t,
                 implementation=implementation, restart_axis=restart_axis,
-                restart_shards=restart_shards, desc=dc),
+                restart_shards=restart_shards, desc=dc,
+                _tune_s=n_studies),
             in_axes=(0, 0,
                      0 if lo.ndim == 2 else None,
                      0 if hi.ndim == 2 else None,
@@ -143,28 +251,40 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
             f"restart shards ({restart_shards}) must divide "
             f"cfg.restarts ({cfg.restarts})")
     d = state.dim
+    # Loop-invariant hoist: f_best and the active-observation mean are
+    # computed once per suggest call and closed over — never re-reduced
+    # inside the jitted restart loop (pinned by a trace-count test).
     f_best = _f_best(state)
+    ymean = gp_mod._ymean(state)
     width = hi - lo
 
     seeds = lo + (hi - lo) * jax.random.uniform(key, (cfg.restarts, d),
                                                 dtype=state.x_buf.dtype)
 
-    value = lambda x: _acq_value(state, kernel, x, f_best, cfg, implementation)
-    grad = jax.grad(value)
+    fused = _use_fused(cfg, kernel, implementation)
+    eval_batch = _make_eval_batch(state, kernel, cfg, implementation, fused,
+                                  f_best, ymean, _tune_s)
     project = ((lambda u: desc_mod.project_units(u, desc))
                if desc is not None else (lambda u: u))
+    project_rows = ((lambda u: jax.vmap(project)(u))
+                    if desc is not None else (lambda u: u))
 
-    def ascend(x):
-        # Mixed ascent: gradient step on the continuous coordinates (the
-        # kernel's categorical factor carries no gradient), then
-        # round-and-repair back onto the int/categorical lattice — every
-        # iterate, and the seed itself, is a feasible point.
+    def ascend_batch(x):
+        # Whole-batch ascent: every step evaluates the (r, d) candidate
+        # matrix in one fused dispatch (or one vmapped autodiff pass on
+        # the unfused path).  Mixed ascent: gradient step on the
+        # continuous coordinates (the categorical factor carries no
+        # gradient), then round-and-repair back onto the int/categorical
+        # lattice — every iterate, and the seed itself, is feasible.
         def step(_, x):
-            g = grad(x)
-            gn = jnp.linalg.norm(g)
+            _, g = eval_batch(x)
+            gn = jnp.linalg.norm(g, axis=-1, keepdims=True)
             g = jnp.where(gn > 0, g / jnp.maximum(gn, 1e-12), 0.0)
-            return project(jnp.clip(x + cfg.lr * width * g, lo, hi))
-        return jax.lax.fori_loop(0, cfg.ascent_steps, step, project(x))
+            return project_rows(jnp.clip(x + cfg.lr * width * g, lo, hi))
+        finals = jax.lax.fori_loop(0, cfg.ascent_steps, step,
+                                   project_rows(x))
+        vals, _ = eval_batch(finals)
+        return finals, vals
 
     if restart_axis is not None and restart_shards > 1:
         # Ascend only this shard's contiguous slice of the seeds, then
@@ -173,22 +293,23 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
         r_local = cfg.restarts // restart_shards
         idx = jax.lax.axis_index(restart_axis)
         local = jax.lax.dynamic_slice_in_dim(seeds, idx * r_local, r_local)
-        finals = jax.vmap(ascend)(local)                # (R/shards, d)
-        vals = jax.vmap(value)(finals)                  # (R/shards,)
+        finals, vals = ascend_batch(local)          # (R/shards, d), (R/shards,)
         finals = jax.lax.all_gather(finals, restart_axis, tiled=True)
         vals = jax.lax.all_gather(vals, restart_axis, tiled=True)
     else:
-        finals = jax.vmap(ascend)(seeds)                # (R, d)
-        vals = jax.vmap(value)(finals)                  # (R,)
+        finals, vals = ascend_batch(seeds)              # (R, d), (R,)
 
+    # Selection runs on tie-break-quantized values (layout-stable winner);
+    # the returned values are the exact ones.
+    qvals = _quantize_for_tiebreak(vals)
     if top_t == 1:
         # Fast path: the greedy dedup below returns the plain argmax when
         # only one suggestion is requested, so skip its R-iteration loop.
-        best = jnp.argmax(vals)
+        best = jnp.argmax(qvals)
         return finals[best][None, :], vals[best][None]
 
     # Spatial dedup: greedy pick best, suppress all restarts within radius.
-    order = jnp.argsort(-vals)
+    order = jnp.argsort(-qvals)
     finals = finals[order]
     vals = vals[order]
     radius = cfg.dedup_radius * jnp.linalg.norm(width)

@@ -294,23 +294,38 @@ def append_batch(state: LazyGPState, kernel: KernelFn, xs: Array,
 
 
 def posterior(state: LazyGPState, kernel: KernelFn, x_star: Array,
-              *, implementation: str = "auto") -> tuple[Array, Array]:
+              *, implementation: str = "auto",
+              ymean: Array | None = None) -> tuple[Array, Array]:
     """Posterior mean and variance at query points x_star (m, d).
 
     mean = k_*^T alpha + ymean ; var = k_** - v^T v with v = L^{-1} k_*
     (paper Alg. 1 lines 3-6), on padded buffers.
 
-    Batched: stacked state + `x_star (S, m, d)` returns `(S, m)` mean/var.
+    `ymean` is the active-observation mean; it is recomputed from the state
+    when omitted.  Callers that query one frozen state many times (the EI
+    ascent: steps x restarts posteriors per suggest call) hoist `_ymean`
+    once and pass it in — the loop-invariant reduction then runs once per
+    call instead of once per posterior (pinned by a trace-count test).
+
+    Batched: stacked state + `x_star (S, m, d)` returns `(S, m)` mean/var
+    (`ymean`, if hoisted, is the matching `(S,)` vector).
     """
     if state.is_batched:
-        return _vmap_states(
-            lambda st, xq: posterior(st, kernel, xq,
-                                     implementation=implementation),
-            state, x_star)
+        if ymean is None:
+            return _vmap_states(
+                lambda st, xq: posterior(st, kernel, xq,
+                                         implementation=implementation),
+                state, x_star)
+        return jax.vmap(
+            lambda st, xq, ym: posterior(st, kernel, xq,
+                                         implementation=implementation,
+                                         ymean=ym))(state, x_star, ymean)
+    if ymean is None:
+        ymean = _ymean(state)
     k_star = ops.kernel_gram(kernel, state.x_buf, x_star, state.params,
                              implementation=implementation)   # (n_max, m)
     k_star = jnp.where(_active_mask(state)[:, None], k_star, 0.0)
-    mean = k_star.T @ state.alpha + _ymean(state)
+    mean = k_star.T @ state.alpha + ymean
     # v = L^{-1} k_* as a matmul against the maintained inverse (exact on
     # the padded buffers: k_* is zero beyond n).  Matmul-only keeps the EI
     # ascent batchable over the study axis (DESIGN.md §7).

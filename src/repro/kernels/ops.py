@@ -38,12 +38,18 @@ a leading study axis per DESIGN.md §7):
   padded_tri_inverse | padded buffers    |   P    |  x  |  x  | yes      | §4
   padded_append_row  | padded buffers    |   ‡    |  ‡  |  ‡  | yes      | §4,§7
   lazy_append        | padded buffers    |   ‡    |  ‡  |  ‡  | yes      | §4,§7
+  fused_ei_grad      | (r,d) + padded    |   P§   |  x  |  x  | yes      | §11
 
   *  active-shape ops serve the tests and naive baselines; the batched hot
      path runs exclusively on the padded-state ops below them.
   †  Pallas gram build applies when the kernel fn opts in via its
      `pallas_gram` attribute (Matérn-2.5 does); other kernels fall back to
      their own jnp formulation under every implementation.
+  §  fused EI value+gradient megakernel (`kernels/acq.py`): one streaming
+     pass per ascent step for the whole restart batch, block size picked by
+     the autotuner below (`acq_tile_config`); xla/ref serve the identical
+     math as one fused XLA program (`ei_grad_jnp`), which is also the
+     beyond-VMEM fallback.
   ‡  matmul-only against the maintained inverse factor: mathematically the
      same on every substrate (no dispatch below the entry point), which is
      what keeps the batched/sharded study axis on the native GEMM path
@@ -76,9 +82,14 @@ alpha refresh in four matvec passes over one factor residency.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+import time
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import acq as acq_kernels
 from repro.kernels import ref
 from repro.kernels.chol import cholesky_pallas
 from repro.kernels.matern import matern52_gram_pallas
@@ -419,3 +430,187 @@ def lazy_append(l_buf: Array, li_buf: Array, p_pad: Array, c: Array,
     z = li_new @ resid
     alpha = z @ li_new           # == li_new.T @ z
     return l_new, li_new, jnp.where(idx <= n, alpha, 0.0), d, clamped
+
+
+# ---------------------------------------------------------------------------
+# Fused EI-ascent megakernel + block-size autotuner (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+# Whole-A VMEM residency bound for the megakernel (f32): 1024^2 * 4 B = 4 MB
+# for A alone; beyond this the fused jnp formulation takes over.
+MAX_ACQ_PALLAS_N = 1024
+# Candidate-tile row counts the autotuner races (all >= the f32 sublane
+# minimum of 8; the default restart count R = 64 pads to one or two tiles).
+ACQ_BLOCK_R_CANDIDATES = (16, 32, 64, 128, 256)
+ACQ_DEFAULT_BLOCK_R = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AcqTileConfig:
+    """One tuned tile choice for the megakernel.
+
+    `measured` distinguishes a raced-and-timed pick from the heuristic
+    fallback (interpret mode, or autotuning disabled via
+    `REPRO_ACQ_AUTOTUNE=off`).
+    """
+
+    block_r: int    # candidate-tile rows per grid step
+    d_pad: int      # feature-depth envelope (next_power_of_2, lane-aligned)
+    measured: bool
+
+
+# Cache key: (n_pad, d, S, substrate).  Lifecycle = process lifetime; the
+# first fused trace per key pays the (tiny) measurement, every retrace and
+# every jit cache hit after that is free.  Tests reset it directly.
+_ACQ_TUNE_CACHE: dict[tuple, AcqTileConfig] = {}
+
+
+def next_power_of_2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _acq_autotune_enabled() -> bool:
+    """`REPRO_ACQ_AUTOTUNE=off|0|false` pins the heuristic config (and
+    bypasses the cache entirely) so CI can prove correctness does not
+    depend on any measured tile choice."""
+    return os.environ.get("REPRO_ACQ_AUTOTUNE", "on").strip().lower() \
+        not in ("off", "0", "false")
+
+
+def _measure_acq_config(block_r: int, d_pad: int, n_pad: int, s: int) -> float:
+    """Wall-time one tile config on dummy operands (best of 3, seconds).
+
+    Only meaningful on a compiled backend; `acq_tile_config` never calls it
+    in interpret mode.  Measures the single-study call — the study axis
+    batches to an extra grid dimension, which scales every candidate
+    equally and preserves the ranking.
+    """
+    del s
+    r = 2 * block_r
+    xc = jnp.zeros((r, d_pad), jnp.float32)
+    xbc = jnp.zeros((n_pad, d_pad), jnp.float32)
+    row = jnp.zeros((1, n_pad), jnp.float32)
+    ab = jnp.zeros((n_pad, n_pad), jnp.float32)
+    args = (xc, xbc, row, row, ab, 1.0, 0.25, 0.0)
+
+    def run():
+        ei, g = acq_kernels.fused_ei_grad_pallas(
+            *args, block_r=block_r, interpret=False)
+        jax.block_until_ready((ei, g))
+
+    run()  # compile + warm up
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def acq_tile_config(n_pad: int, d: int, s: int, interpret: bool,
+                    *, measure_fn=None) -> AcqTileConfig:
+    """Pick the megakernel tile config for a `(n_pad, d, S, substrate)` key.
+
+    Heuristic default: `block_r = 128` (one MXU-sized candidate tile) and
+    `d_pad = max(128, next_power_of_2(d))`.  On a compiled backend the
+    candidates in `ACQ_BLOCK_R_CANDIDATES` are raced once and the winner is
+    cached per key; interpret mode keeps the heuristic (interpreter
+    timings reflect the emulator, not the hardware) so CPU-emulated runs
+    stay deterministic.  `measure_fn(block_r, d_pad, n_pad, s) -> seconds`
+    is injectable for tests.  Runs host-side at trace time — the choice is
+    baked into the jitted program.
+    """
+    d_pad = max(ALIGN, next_power_of_2(d))
+    heuristic = AcqTileConfig(block_r=ACQ_DEFAULT_BLOCK_R, d_pad=d_pad,
+                              measured=False)
+    if not _acq_autotune_enabled():
+        return heuristic
+    key = (n_pad, d, s, "interpret" if interpret else "compiled")
+    hit = _ACQ_TUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    if measure_fn is None and interpret:
+        cfg = heuristic
+    else:
+        fn = measure_fn or _measure_acq_config
+        best, best_t = ACQ_DEFAULT_BLOCK_R, float("inf")
+        for block_r in ACQ_BLOCK_R_CANDIDATES:
+            t = fn(block_r, d_pad, n_pad, s)
+            if t < best_t:
+                best, best_t = block_r, t
+        cfg = AcqTileConfig(block_r=best, d_pad=d_pad, measured=True)
+    _ACQ_TUNE_CACHE[key] = cfg
+    return cfg
+
+
+def fused_supported(kernel_fn, acq_name: str) -> bool:
+    """True iff the fused megakernel covers this (kernel, acquisition)
+    pair: EI over the Matérn-2.5 / mixed kernels (the `pallas_gram` tags).
+    Anything else takes the generic autodiff ascent."""
+    return acq_name == "ei" and \
+        getattr(kernel_fn, "pallas_gram", None) in ("matern52", "mixed")
+
+
+def fused_ei_grad(x: Array, x_buf: Array, amask: Array, alpha: Array,
+                  a_buf: Array, sigma2, rho, shift, *,
+                  cont_mask: Array | None = None,
+                  cat_mask: Array | None = None,
+                  implementation: str = "auto",
+                  tune_s: int = 1) -> tuple[Array, Array]:
+    """Fused EI value + gradient for a whole (r, d) candidate batch.
+
+    One ascent iteration of the multi-start EI optimizer as a single
+    dispatch (DESIGN.md §11): cross-gram, posterior mean/var through the
+    hoisted `a_buf = li_buf^T li_buf`, EI, and the analytic EI gradient.
+
+    Args:
+      x: (r, d) candidate batch (the restart set).
+      x_buf: (n_max, d) padded train buffer.
+      amask: (n_max,) 0/1 active-row mask.
+      alpha: (n_max,) padded weights, zero beyond the active block.
+      a_buf: (n_max, n_max) hoisted A = li_buf^T li_buf.
+      sigma2, rho: kernel hyper-parameters.
+      shift: hoisted scalar ymean - f_best - xi.
+      cont_mask/cat_mask: (d,) type masks for mixed spaces (None = float).
+      tune_s: study count for the autotuner key (the batched suggest path
+        passes its S; the kernel itself batches via vmap).
+
+    Returns (ei (r,), grad (r, d)).  The mask split for mixed spaces
+    happens here, so the gradient is zero on categorical coordinates by
+    construction (the continuous-block-only contract).
+
+    Batched: a leading study axis on the state-side operands (and scalar
+    leaves) vmaps through — the Pallas kernel via its native batching
+    rule, the jnp path natively.
+    """
+    use, interp = _use_pallas(implementation)
+    n_max = x_buf.shape[0]
+    if not use or n_max > MAX_ACQ_PALLAS_N:
+        return acq_kernels.ei_grad_jnp(
+            x, x_buf, amask.astype(x.dtype), alpha, a_buf, sigma2, rho,
+            shift, cont_mask=cont_mask, cat_mask=cat_mask)
+    r, d = x.shape
+    n_pad = _round_up(n_max)
+    cfg = acq_tile_config(n_pad, d, tune_s, interp)
+    r_pad = ((r + cfg.block_r - 1) // cfg.block_r) * cfg.block_r
+    # Zero-padding is exact everywhere it matters: features cancel in the
+    # squared distances, padded train rows are masked out of K by `amask`,
+    # and padded candidate rows compute garbage that is sliced away.
+    xp = _pad_to(_pad_to(x, r_pad, 0), cfg.d_pad, 1)
+    xbp = _pad_to(_pad_to(x_buf, n_pad, 0), cfg.d_pad, 1)
+    amp = _pad_to(amask.astype(x.dtype), n_pad, 0)[None, :]
+    alp = _pad_to(alpha, n_pad, 0)[None, :]
+    abp = _pad_to(_pad_to(a_buf, n_pad, 0), n_pad, 1)
+    if cont_mask is not None:
+        cm = _pad_to(cont_mask.astype(x.dtype), cfg.d_pad, 0)
+        km = _pad_to(cat_mask.astype(x.dtype), cfg.d_pad, 0)
+        ei, g = acq_kernels.fused_ei_grad_pallas(
+            xp * cm, xbp * cm, amp, alp, abp, sigma2, rho, shift,
+            xk=xp * km, xbk=xbp * km, block_r=cfg.block_r,
+            interpret=interp)
+    else:
+        ei, g = acq_kernels.fused_ei_grad_pallas(
+            xp, xbp, amp, alp, abp, sigma2, rho, shift,
+            block_r=cfg.block_r, interpret=interp)
+    return ei[:r], g[:r, :d]

@@ -245,13 +245,12 @@ def test_pool_mixed_mesh_parity():
 @pytest.mark.skipif(N_DEVICES < 8, reason="needs 8 devices (CI mesh job)")
 def test_pool_mixed_mesh_multi_device_invariants():
     """What sharding guarantees for mixed rounds across device layouts:
-    feasibility, per-mesh bitwise determinism, and acquisition-VALUE
-    parity with the unsharded round.  Cell IDENTITY is deliberately not
-    asserted: the EI landscape at small n has exactly-tied local maxima,
-    and which tied basin wins an argmax legitimately flips with one-ulp
-    cross-layout differences (pre-existing on the all-float stack; the
-    lattice just makes it visible as a flipped cell — see DESIGN.md §10
-    and ROADMAP 'layout-stable top-t selection')."""
+    feasibility, per-mesh bitwise determinism, acquisition-VALUE parity
+    with the unsharded round — and, since the tie-break quantization in
+    `optimize_acquisition` (layout-stable top-t selection), cell
+    IDENTITY: restarts whose EI values differ only by cross-layout ulps
+    land in the same quantization bucket, so every layout picks the same
+    winning restart and the chosen cell matches mesh='none' exactly."""
     import jax
 
     def suggest(mesh):
@@ -272,6 +271,10 @@ def test_pool_mixed_mesh_multi_device_invariants():
         np.testing.assert_array_equal(u, u2)      # deterministic per mesh
         np.testing.assert_array_equal(v, v2)
         np.testing.assert_allclose(v, v_none, atol=1e-4)  # value parity
+        # Hard cell-identity assertion (closed ROADMAP item): the same
+        # restart wins under every layout, so the suggestion — discrete
+        # cell included — matches the unsharded one to ascent round-off.
+        np.testing.assert_allclose(u, u_none, atol=2e-5)
 
 
 def test_engine_lag_refit_mixed():
