@@ -18,6 +18,13 @@ counts, and substrate.  Emits `name,us_per_call,derived` CSV rows for
 `benchmarks.run` and writes `BENCH_serve.json` with suggestions/sec both
 ways, the speedup (the acceptance floor is >= 2x), and gateway tick
 telemetry.
+
+The q-sweep cells measure the OTHER serving shape (DESIGN.md §12): ONE
+tenant driving a farm of 8 workers.  At q=1 the per-study
+one-ask-per-tick rule serializes the farm — 8 workers asking the same
+study take 8 consecutive ticks (the pinned baseline).  At q=8/q=32 one
+`ask(sid, q=N)` delivers the whole batch from a single fused qEI fantasy
+dispatch.  Acceptance floor: q=8 >= 3x the q=1 serialized-tick baseline.
 """
 from __future__ import annotations
 
@@ -36,6 +43,8 @@ from repro.hpo.space import RESNET_SPACE
 JSON_PATH = "BENCH_serve.json"
 
 CLIENTS = 16
+FARM_WORKERS = 8
+FARM_QS = (1, 8, 32)
 
 
 def _objective(sid: int, unit: np.ndarray) -> float:
@@ -97,12 +106,91 @@ def _bench_serialized(n_max: int, warmup: int, rounds: int) -> float:
     return time.perf_counter() - t0
 
 
+def _bench_farm(d: str, q: int, per_round: int, n_max: int, warmup: int,
+                rounds: int) -> tuple[float, int, dict]:
+    """Single tenant, a worker farm draining `per_round` trials per round
+    in asks of width q.
+
+    q=1: every worker asks individually — the one-ask-per-study-per-tick
+    rule serializes them into `per_round` consecutive ticks per round
+    (the serialized-tick baseline the q-path is measured against).
+    q>1: `per_round // q` asks, each ONE fused qEI fantasy dispatch.
+    A cell and its baseline share `per_round` and `n_max`, so both sides
+    absorb the identical observation trajectory (same ledger growth, same
+    lag-refit boundaries) and differ ONLY in ask width.
+    """
+    gw = StudyGateway(RESNET_SPACE, _cfg(n_max, d),
+                      GatewayConfig(slots=1,
+                                    max_inflight=2 * per_round))
+    sid = gw.create_study()
+
+    async def round_all():
+        if q == 1:
+            trials = await asyncio.gather(
+                *(gw.ask(sid) for _ in range(per_round)))
+        else:
+            packs = await asyncio.gather(
+                *(gw.ask(sid, q=q) for _ in range(per_round // q)))
+            trials = [tr for pack in packs for tr in pack]
+        for tr in trials:
+            gw.tell(sid, tr, _objective(sid, tr.unit))
+        await gw.drain()
+
+    async def main():
+        for _ in range(warmup):
+            await round_all()
+        gw.stats.clear()
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            await round_all()
+        dt = time.perf_counter() - t0
+        await gw.aclose()
+        return dt
+
+    dt = asyncio.run(main())
+    return dt, per_round * rounds, gw.summary()
+
+
 def run(full: bool = False, json_path: str = JSON_PATH):
     n_max = 128
     warmup, rounds = (3, 12) if full else (2, 8)
     with tempfile.TemporaryDirectory() as d:
         co_s, summary = _bench_coalesced(d, n_max, warmup, rounds)
     ser_s = _bench_serialized(n_max, warmup, rounds)
+    farm_cells = []
+    # warmup >= 2: round 0 serves host-side seeds (the study is empty), so
+    # the first REAL fused q-ask — and its jit compile — happens in round 1
+    f_warm, f_rounds = (3, 10) if full else (2, 6)
+
+    def _run_cell(q: int, per_round: int, nm: int) -> dict:
+        with tempfile.TemporaryDirectory() as d:
+            dt, sug, fsum = _bench_farm(d, q, per_round, nm,
+                                        f_warm, f_rounds)
+        return {"q": q, "per_round": per_round, "n_max": nm,
+                "suggestions_per_sec": sug / dt,
+                "round_ms": 1e3 * dt / f_rounds,
+                "fantasy_rollbacks": fsum["fantasy_rollbacks"]}
+
+    # Wider cells drain more trials per round, so their ledgers (and
+    # buffers) grow faster: each cell is compared against a q=1
+    # serialized-tick baseline with the SAME per-round trial count and
+    # n_max — identical observation trajectory, ask width is the only
+    # difference (a cross-shape ratio would conflate batching with
+    # buffer size and refit cadence).
+    cell_shape = {q: (max(q, FARM_WORKERS),
+                      max(q, FARM_WORKERS) * (f_warm + f_rounds) + 16)
+                  for q in FARM_QS}
+    base_cells = {shape: _run_cell(1, *shape)
+                  for shape in sorted(set(cell_shape.values()))}
+    for q in FARM_QS:
+        shape = cell_shape[q]
+        cell = dict(base_cells[shape] if q == 1
+                    else _run_cell(q, *shape))
+        base = base_cells[shape]["suggestions_per_sec"]
+        cell["baseline_suggestions_per_sec"] = base
+        cell["speedup_vs_q1"] = cell["suggestions_per_sec"] / base
+        farm_cells.append(cell)
+    q1_base = base_cells[cell_shape[8]]["suggestions_per_sec"]
     ops = CLIENTS * rounds
     rec = {
         "clients": CLIENTS,
@@ -116,20 +204,33 @@ def run(full: bool = False, json_path: str = JSON_PATH):
         "mean_coalesce_width": summary["mean_coalesce_width"],
         "p50_tick_ms": summary["p50_tick_ms"],
         "p95_tick_ms": summary["p95_tick_ms"],
+        # single-tenant 8-worker farm q-sweep; the pinned q=1 serialized-
+        # tick baseline shares the q=8 cell's shape (acceptance floor:
+        # q=8 >= 3x it)
+        "farm_workers": FARM_WORKERS,
+        "farm_q1_baseline_suggestions_per_sec": q1_base,
+        "farm_cells": farm_cells,
     }
     import jax
     payload = {"backend": jax.default_backend(), "results": [rec]}
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=2)
-    return [
+    rows = [
         f"serve_coalesced,{1e6 * co_s / ops:.0f},"
         f"suggest_per_s={rec['coalesced_suggestions_per_sec']:.1f} "
         f"width={rec['mean_coalesce_width']:.1f}",
         f"serve_serialized,{1e6 * ser_s / ops:.0f},"
         f"suggest_per_s={rec['serialized_suggestions_per_sec']:.1f}",
         f"serve_speedup,,{rec['speedup']:.2f}x_at_{CLIENTS}_clients",
-        f"serve_json,,path={json_path}",
     ]
+    for cell in farm_cells:
+        rows.append(
+            f"serve_farm_q{cell['q']},"
+            f"{1e6 / cell['suggestions_per_sec']:.0f},"
+            f"suggest_per_s={cell['suggestions_per_sec']:.1f} "
+            f"speedup_vs_q1={cell['speedup_vs_q1']:.2f}x")
+    rows.append(f"serve_json,,path={json_path}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 """Async ask–tell HPO serving: many clients, one coalesced gateway.
 
     python examples/serve.py [--studies 12] [--slots 4] [--budget 8] \
-        [--coalesce-ms 2] [--ckpt-dir /tmp/gw]
+        [--q 4] [--coalesce-ms 2] [--ckpt-dir /tmp/gw]
 
 The ROADMAP's "serve heavy traffic" shape end-to-end (DESIGN.md §9): N
 asynchronous clients each run their own HPO study through the gateway's
@@ -16,6 +16,11 @@ Each client optimizes its own synthetic objective (a shifted smooth bowl on
 the unit cube, distinct optimum per tenant) with a touch of simulated
 training latency, so the final report shows per-study convergence plus the
 gateway's serving telemetry (coalesce width, tick latency, evictions).
+
+With `--q N` (N > 1) every client asks for a BATCH of N suggestions per
+round — one fused qEI fantasy dispatch per ask (DESIGN.md §12) — and
+evaluates them concurrently before telling all N back, the worker-farm
+shape where each tenant drives several training jobs at once.
 """
 import argparse
 import asyncio
@@ -44,19 +49,28 @@ def make_objective(sid: int, latency: float):
     return objective
 
 
-async def client(gw: StudyGateway, sid: int, budget: int, latency: float):
+async def client(gw: StudyGateway, sid: int, budget: int, latency: float,
+                 q: int = 1):
     objective = make_objective(sid, latency)
-    for _ in range(budget):
+    done = 0
+    while done < budget:
+        width = min(q, budget - done)
         try:
-            trial = await gw.ask(sid)
+            got = await gw.ask(sid, q=width) if width > 1 \
+                else await gw.ask(sid)
         except GPCapacityError as e:
             # a resumed study can hit its n_max (the buffers are sized at
             # construction and shape-checked on restore) — report cleanly
             # instead of crashing the whole serving loop
             print(f"  {gw.study_info(sid)['name']}: full ({e})")
             break
-        value = await objective(trial.unit)
-        gw.tell(sid, trial, value)
+        trials = got if isinstance(got, list) else [got]
+        # the q suggestions are a worker farm: evaluate concurrently,
+        # tell each result back as it lands
+        values = await asyncio.gather(*(objective(t.unit) for t in trials))
+        for trial, value in zip(trials, values):
+            gw.tell(sid, trial, value)
+        done += len(trials)
     await gw.drain()
 
 
@@ -67,7 +81,8 @@ async def serve(args, ckpt_dir: str) -> None:
                           acq=AcqConfig(restarts=16, ascent_steps=8))
     gw = StudyGateway(RESNET_SPACE, cfg,
                       GatewayConfig(slots=args.slots,
-                                    coalesce_ms=args.coalesce_ms))
+                                    coalesce_ms=args.coalesce_ms,
+                                    max_inflight=max(4, args.q)))
     # A fresh directory returns False; an INCOMPATIBLE checkpoint (e.g. a
     # --slots or --budget change reshaping the pool) raises ValueError —
     # let it surface rather than silently starting fresh over the old
@@ -84,7 +99,7 @@ async def serve(args, ckpt_dir: str) -> None:
     served_before = gw.summary()["asks_served"]   # lifetime totals ride
     # the checkpoint registry: report only THIS invocation's traffic
     t0 = time.perf_counter()
-    await asyncio.gather(*(client(gw, s, args.budget, args.latency)
+    await asyncio.gather(*(client(gw, s, args.budget, args.latency, args.q)
                            for s in sids))
     elapsed = time.perf_counter() - t0
     summary = gw.summary()
@@ -103,6 +118,10 @@ async def serve(args, ckpt_dir: str) -> None:
           f"p95_tick={summary['p95_tick_ms']:.1f}ms "
           f"evictions={summary['evictions']} "
           f"restores={summary['restores']}")
+    if args.q > 1:
+        print(f"q-widths={summary['q_width_hist']} "
+              f"fantasy_rollbacks={summary['fantasy_rollbacks']} "
+              f"fantasy_active={summary['fantasy_active']}")
     for s in sids:
         info = gw.study_info(s)
         slot = "evicted" if not info["resident"] else f"slot {info['slot']}"
@@ -123,6 +142,9 @@ def main():
                     help="resident GP slots (< studies exercises eviction)")
     ap.add_argument("--budget", type=int, default=8,
                     help="observations per study")
+    ap.add_argument("--q", type=int, default=1,
+                    help="suggestions per ask: q>1 serves each ask with "
+                         "one fused qEI fantasy dispatch")
     ap.add_argument("--latency", type=float, default=0.01,
                     help="simulated per-trial train time (s)")
     ap.add_argument("--coalesce-ms", type=float, default=0.0,

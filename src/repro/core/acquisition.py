@@ -347,3 +347,41 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
     chosen = jnp.where(filled[:, None], chosen, fallback)
     chosen_vals = jnp.where(filled, chosen_vals, chosen_vals[0])
     return chosen, chosen_vals
+
+
+def suggest_q(state: gp_mod.LazyGPState, kernel: KernelFn,
+              lo: Array, hi: Array, key: Array, cfg: AcqConfig, q: int,
+              *, liar: str = "mean", implementation: str = "auto",
+              desc: desc_mod.TypeDescriptor | None = None,
+              _tune_s: int = 1
+              ) -> tuple[Array, Array, gp_mod.LazyGPState]:
+    """Sequential-fantasy q-suggestion (qEI, DESIGN.md §12).
+
+    One `lax.scan` of q steps over a single-study state: each step ascends
+    the acquisition against the *current* (fantasized) posterior, then
+    appends the chosen point as a fantasy row (`gp.fantasize`: liar
+    observation, one bordered `li_buf` row, no refit counters), so step
+    i + 1 suggests against a posterior whose variance has collapsed at the
+    first i picks.  The whole loop is one jitted program — a q = 32 ask is
+    ONE dispatch, not 32 serialized suggest ticks.
+
+    The liar value per step is computed against the current fantasized
+    state, so "mean" is the exact kriging-believer recursion and
+    "pessimistic" is Snoek et al.'s constant liar.
+
+    Returns `(xs (q, d), vals (q,), fantasized state)` — the caller decides
+    whether the fantasized state persists (the serving protocol keeps it
+    until the tell-time rollback) or is discarded.
+    """
+    keys = jax.random.split(key, q)
+
+    def step(st, k):
+        x, v = optimize_acquisition(
+            st, kernel, lo, hi, k, cfg, 1,
+            implementation=implementation, desc=desc, _tune_s=_tune_s)
+        st = gp_mod.fantasize(st, kernel, x, liar,
+                              implementation=implementation)
+        return st, (x[0], v[0])
+
+    st, (xs, vals) = jax.lax.scan(step, state, keys)
+    return xs, vals, st

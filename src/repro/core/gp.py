@@ -293,6 +293,134 @@ def append_batch(state: LazyGPState, kernel: KernelFn, xs: Array,
         st, alpha=_recompute_alpha(st, implementation))
 
 
+# ---------------------------------------------------------------------------
+# Fantasy rows: the q-suggestion protocol (DESIGN.md §12).
+# ---------------------------------------------------------------------------
+
+FANTASY_LIARS = ("mean", "pessimistic")
+
+
+@dataclasses.dataclass(frozen=True)
+class FantasyConfig:
+    """Liar policy for pending-trial fantasies (Snoek et al. 2012).
+
+    * "mean"        — kriging believer: the liar value is the posterior mean
+                      at the fantasy point, so the mean surface is (nearly)
+                      unchanged and only the variance collapses there.
+    * "pessimistic" — constant liar: the worst (max) active observation, so
+                      the fantasized point actively repels later suggestions.
+    """
+
+    liar: str = "mean"
+
+    def __post_init__(self):
+        if self.liar not in FANTASY_LIARS:
+            raise ValueError(
+                f"unknown fantasy liar {self.liar!r}; "
+                f"expected one of {FANTASY_LIARS}")
+
+
+def fantasy_values(state: LazyGPState, kernel: KernelFn, xs: Array,
+                   liar: str = "mean", *,
+                   implementation: str = "auto") -> Array:
+    """Liar observations for fantasy points `xs (q, d)` against `state`.
+
+    Computed against the *input* state for the whole batch (believer values
+    do not see each other — exact for q = 1, the per-step path of the
+    q-suggest loop; a constant-liar-per-batch approximation for the q > 1
+    replay path, which is fine because fantasy rows are scratch state that
+    never survives a tell).
+    """
+    if liar == "pessimistic":
+        m = _active_mask(state)
+        worst = jnp.max(jnp.where(m, state.y_buf, -jnp.inf))
+        worst = jnp.where(state.n > 0, worst, 0.0)
+        return jnp.full((xs.shape[0],), worst, state.y_buf.dtype)
+    mean, _ = posterior(state, kernel, xs, implementation=implementation)
+    return mean
+
+
+def fantasize(state: LazyGPState, kernel: KernelFn, xs: Array,
+              liar: str = "mean", *,
+              implementation: str = "auto") -> LazyGPState:
+    """Append q fantasy rows in ONE `lazy_append_rows` dispatch.
+
+    Fantasy rows are full bordered appends — the factor, inverse, and alpha
+    all see them, so EI ascent against the fantasized state is the ordinary
+    ascent — but they deliberately do NOT touch `since_refit` or
+    `clamp_count`: fantasies are scratch state (they must never trigger a
+    lag-event refit, and their rollback must not have to un-count
+    telemetry).  Rollback is `truncate(state, n_real)`.
+
+    Batched: stacked state + `xs (S, q, d)` fantasizes q rows per study in
+    one dispatch.
+    """
+    if state.is_batched:
+        return _vmap_states(
+            lambda st, x: fantasize(st, kernel, x, liar,
+                                    implementation=implementation),
+            state, xs)
+    q = xs.shape[0]
+    n_max = state.n_max
+    ys = fantasy_values(state, kernel, xs, liar,
+                        implementation=implementation)
+    x_buf = jax.lax.dynamic_update_slice(state.x_buf, xs, (state.n, 0))
+    y_buf = jax.lax.dynamic_update_slice(state.y_buf, ys, (state.n,))
+    idx = jnp.arange(n_max)
+    n_new = state.n + q
+    # Column i covers actives + earlier fantasy rows: rows idx < n + i of
+    # the final point buffer.
+    p_all = ops.kernel_gram(kernel, x_buf, xs, state.params,
+                            implementation=implementation)   # (n_max, q)
+    cols = jnp.where(idx[:, None] < (state.n + jnp.arange(q))[None, :],
+                     p_all, 0.0)
+    cs = jax.vmap(lambda x: kernel(x[None, :], x[None, :],
+                                   state.params)[0, 0])(xs) \
+        + state.params.noise2
+    mask_new = idx < n_new
+    ymean = jnp.sum(jnp.where(mask_new, y_buf, 0.0)) / jnp.maximum(n_new, 1)
+    resid = jnp.where(mask_new, y_buf - ymean, 0.0)
+    l_buf, li_buf, alpha, _, _ = ops.lazy_append_rows(
+        state.l_buf, state.li_buf, cols.T, cs, resid, state.n,
+        implementation=implementation)
+    return dataclasses.replace(
+        state, x_buf=x_buf, y_buf=y_buf, l_buf=l_buf, li_buf=li_buf,
+        alpha=alpha, n=n_new)
+
+
+def truncate(state: LazyGPState, n_real: Array) -> LazyGPState:
+    """Roll back every row >= n_real to the identity-padded empty state.
+
+    Bitwise-exact by the padding invariant (DESIGN.md §3/§12): appends only
+    ever write row n of `l_buf`/`li_buf` and row n of `x_buf`/`y_buf`, and
+    before the rows being rolled back were appended, those rows were exactly
+    identity (factor/inverse) and exactly zero (points/observations).
+    Restoring the constants therefore restores the pre-append buffers bit
+    for bit — no arithmetic is undone, rows are simply re-padded.  Alpha is
+    recomputed against the restored inverse; any real append that follows
+    (the tell replay) recomputes it again through the ordinary fused path,
+    so the post-replay state is bitwise-identical to a never-fantasized run.
+
+    `since_refit`/`clamp_count` are untouched because `fantasize` never
+    advanced them.  Batched: `n_real (S,)` truncates every study in one
+    dispatch.
+    """
+    if state.is_batched:
+        return _vmap_states(truncate, state, n_real)
+    n_max = state.n_max
+    idx = jnp.arange(n_max)
+    pad = idx[:, None] >= n_real
+    eye = jnp.eye(n_max, dtype=state.l_buf.dtype)
+    st = dataclasses.replace(
+        state,
+        x_buf=jnp.where(pad, 0.0, state.x_buf),
+        y_buf=jnp.where(idx >= n_real, 0.0, state.y_buf),
+        l_buf=jnp.where(pad, eye, state.l_buf),
+        li_buf=jnp.where(pad, eye, state.li_buf),
+        n=jnp.asarray(n_real, jnp.int32))
+    return dataclasses.replace(st, alpha=_recompute_alpha(st))
+
+
 def posterior(state: LazyGPState, kernel: KernelFn, x_star: Array,
               *, implementation: str = "auto",
               ymean: Array | None = None) -> tuple[Array, Array]:

@@ -176,6 +176,21 @@ class StudyEngine:
             # from the Gram under the CURRENT params (no grid refit).
             return gp_mod.refactor(st, kern_for(dsc), implementation=impl)
 
+        # Fantasy protocol (DESIGN.md §12): liar policy is a Python
+        # constant inside the jitted q-ask closures (one compilation per
+        # configured liar, exactly like the substrate knob).
+        fantasy_liar = getattr(cfg, "fantasy", gp_mod.FantasyConfig()).liar
+
+        def ask_q_one(st, dsc, key, q):
+            return acq_mod.suggest_q(
+                st, kern_for(dsc), self._lo, self._hi, key, cfg.acq, q,
+                liar=fantasy_liar, implementation=impl,
+                desc=dsc if mixed else None)
+
+        def fantasize_one(st, dsc, xs):
+            return gp_mod.fantasize(st, kern_for(dsc), xs, fantasy_liar,
+                                    implementation=impl)
+
         # In mixed mode every jitted closure takes the stacked descriptor
         # as a runtime argument right after the state (vmapped/sharded
         # along the study axis with it); otherwise the argument is absent
@@ -259,6 +274,13 @@ class StudyEngine:
         # sharded state flows through GSPMD's auto-partitioner (these are
         # the rare paths — lag events and per-study routing).  The mixed
         # variants index the stacked descriptor at the same traced index.
+        def ask_q_route(state, dsc, i, key, q):
+            # q-suggestion fast path, routed to one slot: extract, run the
+            # scan-of-(suggest + fantasize) program, scatter the fantasized
+            # state back.  q is static — one compilation per distinct q.
+            xs, vals, sub = ask_q_one(_index_state(state, i), dsc, key, q)
+            return xs, vals, _write_state(state, i, sub)
+
         if mixed:
             self._suggest_at = jax.jit(
                 lambda state, dsc, i, key, *, top_t: suggest_one(
@@ -270,6 +292,15 @@ class StudyEngine:
                     state, i, append_one(
                         _index_state(state, i),
                         desc_mod.index_descriptor(dsc, i), x, y)))
+            self._ask_q_at = jax.jit(
+                lambda state, dsc, i, key, *, q: ask_q_route(
+                    state, desc_mod.index_descriptor(dsc, i), i, key, q),
+                static_argnames=("q",))
+            self._refantasize_at = jax.jit(
+                lambda state, dsc, i, xs: _write_state(
+                    state, i, fantasize_one(
+                        _index_state(state, i),
+                        desc_mod.index_descriptor(dsc, i), xs)))
             self._refit_at = jax.jit(
                 lambda state, dsc, i: _write_state(
                     state, i, refit_one(
@@ -289,12 +320,25 @@ class StudyEngine:
                 lambda state, i, x, y: _write_state(
                     state, i, append_one(_index_state(state, i), None,
                                          x, y)))
+            self._ask_q_at = jax.jit(
+                lambda state, i, key, *, q: ask_q_route(
+                    state, None, i, key, q),
+                static_argnames=("q",))
+            self._refantasize_at = jax.jit(
+                lambda state, i, xs: _write_state(
+                    state, i, fantasize_one(_index_state(state, i), None,
+                                            xs)))
             self._refit_at = jax.jit(
                 lambda state, i: _write_state(
                     state, i, refit_one(_index_state(state, i), None)))
             self._reanchor_at = jax.jit(
                 lambda state, i: _write_state(
                     state, i, reanchor_one(_index_state(state, i), None)))
+        # Fantasy rollback: re-pad every row >= n_real of one slot (kernel-
+        # free, descriptor-free — identical trace in mixed mode).
+        self._truncate_at = jax.jit(
+            lambda state, i, n_real: _write_state(
+                state, i, gp_mod.truncate(_index_state(state, i), n_real)))
         # Slot-level state swap (the gateway's evict/restore hook): scatter a
         # single-study state into the stack at a traced index — any slot hits
         # the same compilation, so serving-time restores never re-trace.
@@ -454,6 +498,52 @@ class StudyEngine:
         self._sr_host[flagged] += 1
         self._refit_flagged(flagged)
         return units, vals
+
+    # -- fantasy protocol (q-suggestion serving, DESIGN.md §12) -------------
+    # Fantasy rows live in the same stacked buffers as real observations —
+    # the host `n` mirror therefore tracks the *fantasized* count; callers
+    # (StudyPool) own the real-ledger count and drive the rollback.
+
+    def ask_q(self, study: int, key: Array, q: int) -> tuple[Array, Array]:
+        """q-suggestion fast path: ((q, d) points, (q,) acq values).
+
+        ONE jitted dispatch runs q rounds of suggest-then-fantasize against
+        slot `study` (DESIGN.md §12) and leaves the slot *fantasized* (its
+        device/host n grows by q).  The caller must roll the fantasy rows
+        back (`truncate_slot`) before any real append lands.
+        """
+        gp_mod.ensure_capacity(self.n(study), self.cfg.n_max, q)
+        xs, vals, self._state = self._ask_q_at(
+            self.state, *self._desc_args(), jnp.asarray(study, jnp.int32),
+            key, q=q)
+        self._n_host[study] += q
+        return xs, vals
+
+    def truncate_slot(self, study: int, n_real: int) -> None:
+        """Roll slot `study` back to its first `n_real` (real) rows.
+
+        Bitwise-exact re-padding (`gp.truncate`): the factor/inverse rows
+        being dropped are replaced by the identity rows they overwrote, so
+        the slot is restored bit for bit to its pre-fantasy buffers.
+        """
+        self._state = self._truncate_at(
+            self.state, jnp.asarray(study, jnp.int32),
+            jnp.asarray(n_real, jnp.int32))
+        self._n_host[study] = int(n_real)
+
+    def refantasize(self, study: int, xs) -> None:
+        """Re-append pending fantasy points in ONE `lazy_append_rows` dispatch.
+
+        The tell-time replay: after `truncate_slot` + the real absorb, the
+        still-pending fantasy points (q, d) are re-fantasized against the
+        updated posterior — fresher liar values, one batched dispatch.
+        """
+        xs = jnp.asarray(xs, jnp.float32)
+        gp_mod.ensure_capacity(self.n(study), self.cfg.n_max, xs.shape[0])
+        self._state = self._refantasize_at(
+            self.state, *self._desc_args(), jnp.asarray(study, jnp.int32),
+            xs)
+        self._n_host[study] += xs.shape[0]
 
     def _refit_flagged(self, flagged) -> None:
         """Apply the per-study lag policy after an absorb (host mirrors).

@@ -9,7 +9,13 @@ stacked `(S, …)` state.  Three mechanisms make that serve:
     gathered for a configurable window and served by ONE fused
     `pool.advance_round` dispatch: the masked absorb of every queued
     completion and the batched EI suggest for every asking study run in a
-    single jitted program per tick, not one program per caller.
+    single jitted program per tick, not one program per caller.  Batched
+    `ask(sid, q=N)` requests coalesce with the same tick: each is served
+    by one fused q-suggestion dispatch (`pool.ask_q` — the qEI fantasy
+    scan of DESIGN.md §12) right after the round's absorbs, so a q=32 ask
+    costs one dispatch, not 32 ticks.  Fantasy rows pin their study
+    resident until every suggestion is told back (rollback is exact, but
+    eviction snapshots must see only real observations).
   * **slot lifecycle** — `create_study` registers a logical study without
     claiming a slot; the first `ask` allocates one (free-list).  When slots
     run out, the least-recently-used *idle* resident study (nothing in
@@ -126,14 +132,20 @@ class StudyGateway:
         # the next checkpoint COMMIT (never before — a crash must restore
         # a registry whose studies are all still on disk)
         self._next_sid = 0
-        self._asks: deque[tuple[int, asyncio.Future | None]] = deque()
+        self._asks: deque[tuple[int, asyncio.Future | None, int]] = deque()
         self._tells: list[tuple[int, Trial, float]] = []
         self._tick_count = 0
         self.stats: deque[dict] = deque(maxlen=self.gw.stats_window)
         # lifetime counters: the stats deque is a WINDOW (stats_window
-        # ticks) — run totals must not silently shrink past it
+        # ticks) — run totals must not silently shrink past it.  The
+        # q-width histogram maps str(q) -> asks served at that width
+        # (string keys so it round-trips the JSON registry unchanged);
+        # fantasy_rollbacks mirrors the pool's counter into a lifetime
+        # total that survives checkpoint/restore.
         self._totals = {"asks_served": 0, "absorbed": 0,
-                        "evictions": 0, "restores": 0}
+                        "evictions": 0, "restores": 0,
+                        "fantasy_rollbacks": 0, "q_width_hist": {}}
+        self._pool_rollbacks_seen = 0
         self._wake: asyncio.Event | None = None
         self._tick_done: asyncio.Event | None = None  # pulsed per tick
         # attempt so drain() waiters re-check instead of busy-polling
@@ -205,49 +217,70 @@ class StudyGateway:
         return log
 
     # -- admission control --------------------------------------------------
-    def _admit_ask(self, log: _Logical) -> None:
+    def _admit_ask(self, log: _Logical, q: int = 1) -> None:
         if self._closed:
             raise RuntimeError("gateway is shut down")
+        if q < 1:
+            raise ValueError(f"ask q must be >= 1, got {q}")
+        if q > self.gw.max_inflight:
+            # Reject the impossible width HERE, loudly: queueing it would
+            # hand the client a future that can never be woken (the
+            # in-flight budget can't clear below zero to make room).
+            raise GPCapacityError(
+                f"ask(q={q}) exceeds the per-study in-flight cap "
+                f"max_inflight={self.gw.max_inflight}: such an ask could "
+                "never be served; lower q or raise "
+                "GatewayConfig.max_inflight")
         if len(self._asks) >= self.gw.max_queue:
             raise GPCapacityError(
                 f"gateway ask queue full ({self.gw.max_queue} queued); "
                 "backpressure — retry after the next tick")
-        if log.inflight + log.pending_asks >= self.gw.max_inflight:
+        if log.inflight + log.pending_asks + q > self.gw.max_inflight:
             raise GPCapacityError(
-                f"study {log.sid} ({log.name}) already has "
-                f"{self.gw.max_inflight} suggestions in flight; tell() "
-                "results back before asking again")
+                f"study {log.sid} ({log.name}): ask(q={q}) with "
+                f"{log.inflight + log.pending_asks} suggestions already "
+                f"in flight exceeds max_inflight={self.gw.max_inflight}; "
+                "tell() results back before asking again")
         # Capacity-aware reject: every outstanding suggestion implies a
-        # future observation.  Refuse the ask now rather than fail the tell
-        # after the client has spent a training run on it.
+        # future observation (a q-ask implies q of them, each shadowed by
+        # a fantasy row until told).  Refuse the ask now rather than fail
+        # the tell after the client has spent a training run on it.
         committed = (log.n_obs + log.inflight + log.pending_asks
                      + log.pending_tells)
-        if committed + 1 > self.cfg.n_max:
+        if committed + q > self.cfg.n_max:
             raise GPCapacityError(
                 f"study {log.sid} ({log.name}): n={log.n_obs} absorbed + "
-                f"{committed - log.n_obs} outstanding would exceed "
+                f"{committed - log.n_obs} outstanding + q={q} would exceed "
                 f"n_max={self.cfg.n_max}")
 
     # -- ask / tell ---------------------------------------------------------
-    async def ask(self, sid: int) -> Trial:
-        """Request one suggestion; resolves at the next coalesced tick."""
+    async def ask(self, sid: int, q: int = 1) -> Trial | list[Trial]:
+        """Request suggestions; resolves at the next coalesced tick.
+
+        `q=1` (the default) returns one Trial.  `q>1` returns a list of q
+        jointly-diverse Trials from ONE fused qEI fantasy dispatch: each
+        suggestion is made against a posterior that pretends the previous
+        ones were already observed (constant/believer liar per
+        `SchedulerConfig.fantasy`), so the batch spreads instead of
+        stacking q copies of the same argmax.  The fantasy rows roll back
+        bitwise-exactly as the real tells arrive."""
         log = self._require(sid)
-        self._admit_ask(log)
+        self._admit_ask(log, q)
         loop = asyncio.get_running_loop()
         self._ensure_ticker(loop)
         fut: asyncio.Future = loop.create_future()
-        self._asks.append((sid, fut))
-        log.pending_asks += 1
+        self._asks.append((sid, fut, q))
+        log.pending_asks += q
         self._wake.set()
         return await fut
 
-    def ask_nowait(self, sid: int) -> None:
+    def ask_nowait(self, sid: int, q: int = 1) -> None:
         """Queue an ask without a future (drive with `tick()`; the
-        suggestion lands in the study's ledger).  For sync callers/tests."""
+        suggestions land in the study's ledger).  For sync callers/tests."""
         log = self._require(sid)
-        self._admit_ask(log)
-        self._asks.append((sid, None))
-        log.pending_asks += 1
+        self._admit_ask(log, q)
+        self._asks.append((sid, None, q))
+        log.pending_asks += q
         if self._wake is not None:
             self._wake.set()
 
@@ -315,6 +348,14 @@ class StudyGateway:
         trial.error = error
         trial.finished = time.time()
         log.inflight = max(0, log.inflight - 1)
+        if self.cfg.failure_penalty is None and log.slot is not None:
+            # No penalty tell will ever come for this trial: if it was a
+            # q-ask suggestion its fantasy row must be released now, or it
+            # would pin the study non-evictable (and hold buffer capacity)
+            # forever.  With a penalty configured, the penalty tell's
+            # absorb performs the same rollback through the normal path.
+            self.pool.release_fantasies(log.slot,
+                                        [np.asarray(trial.unit)])
         if self.cfg.failure_penalty is not None:
             penalty = Trial(trial.trial_id, trial.unit, trial.hparams)
             # the error tag marks this as a pseudo-observation: it enters
@@ -334,8 +375,13 @@ class StudyGateway:
         return f"study{log.sid:06d}"
 
     def _evictable(self, log: _Logical) -> bool:
+        # fantasy-pinned: pending fantasy rows mean suggestions are still
+        # outstanding from a q-ask — export_study would refuse anyway
+        # (snapshots must hold only real observations), so such a study
+        # is never an eviction candidate
         return (log.slot is not None and not log.inflight
-                and not log.pending_asks and not log.pending_tells)
+                and not log.pending_asks and not log.pending_tells
+                and not self.pool.fantasy_active(log.slot))
 
     def _evict_lru(self) -> int:
         """Evict the least-recently-used *idle* resident study, returning
@@ -436,17 +482,17 @@ class StudyGateway:
         self._evictions_this_tick = 0
         tells, self._tells = self._tells, []
         # one ask per study per tick; respect max_batch; keep queue order
-        take: list[tuple[int, asyncio.Future | None]] = []
+        take: list[tuple[int, asyncio.Future | None, int]] = []
         requeue: deque = deque()
         seen: set[int] = set()
         limit = self.gw.max_batch or len(self._asks)
         while self._asks:
-            sid, fut = self._asks.popleft()
+            sid, fut, q = self._asks.popleft()
             if sid in seen or len(take) >= limit:
-                requeue.append((sid, fut))
+                requeue.append((sid, fut, q))
             else:
                 seen.add(sid)
-                take.append((sid, fut))
+                take.append((sid, fut, q))
         self._asks = requeue
         if not tells and not take:
             return 0
@@ -461,8 +507,8 @@ class StudyGateway:
             # absorbed (placement precedes the dispatch) — requeue the
             # tells untouched, fail this tick's asks loudly
             self._tells = tells + self._tells
-            for sid, fut in take:
-                self._studies[sid].pending_asks -= 1
+            for sid, fut, q in take:
+                self._studies[sid].pending_asks -= q
                 if fut is not None and not fut.done():
                     fut.set_exception(e)
             raise
@@ -474,16 +520,16 @@ class StudyGateway:
             raise
         # Asks place best-effort: the overflow defers to the next tick.
         ask_slots: dict[int, int] = {}
-        deferred: list[tuple[int, asyncio.Future | None]] = []
-        served: list[tuple[int, asyncio.Future | None]] = []
+        deferred: list[tuple[int, asyncio.Future | None, int]] = []
+        served: list[tuple[int, asyncio.Future | None, int]] = []
         try:
-            for sid, fut in take:
+            for sid, fut, q in take:
                 slot = self._try_resident(sid)
                 if slot is None:
-                    deferred.append((sid, fut))
+                    deferred.append((sid, fut, q))
                 else:
                     ask_slots[sid] = slot
-                    served.append((sid, fut))
+                    served.append((sid, fut, q))
         except Exception:
             # IO fault placing an ask (eviction snapshot failed): requeue
             # everything untouched — already-placed asks keep their slots
@@ -495,9 +541,10 @@ class StudyGateway:
         take = served
         if not events and not take:
             return 0
+        one_slots = sorted(ask_slots[sid] for sid, _f, q in take if q == 1)
         try:
             suggestions = self.pool.advance_round(
-                events, t=1, studies=sorted(ask_slots.values()))
+                events, t=1, studies=one_slots)
         except GPCapacityError as e:
             # advance_round capacity-checks the WHOLE round before mutating
             # any ledger or GP buffer (all-or-nothing), so the queues can be
@@ -528,11 +575,23 @@ class StudyGateway:
                 else:
                     requeue.append((sid, tr, val))
             self._tells = requeue + self._tells
-            for sid, fut in take:
-                self._studies[sid].pending_asks -= 1
+            for sid, fut, q in take:
+                self._studies[sid].pending_asks -= q
                 if fut is not None and not fut.done():
                     fut.set_exception(e)
             raise
+        # q>1 asks: one fused qEI fantasy dispatch per study, issued after
+        # the round so each batch conditions on this tick's absorbs.  A
+        # per-ask failure (capacity stolen by a foreign tell between
+        # admission and serve) fails only that future, not the tick.
+        q_results: dict[int, list[Trial] | Exception] = {}
+        for sid, _fut, q in take:
+            if q == 1:
+                continue
+            try:
+                q_results[sid] = self.pool.ask_q(ask_slots[sid], q)
+            except Exception as e:  # noqa: BLE001 — meted to the future
+                q_results[sid] = e
         latency_ms = 1e3 * (time.perf_counter() - t0)
         self._tick_count += 1
         for sid, tr, val in tells:
@@ -543,27 +602,48 @@ class StudyGateway:
             if tr.error is None and (log.best_value is None
                                      or val > log.best_value):
                 log.best_value = val
-        for sid, fut in take:
+        n_suggested = 0
+        for sid, fut, q in take:
             log = self._studies[sid]
-            tr = suggestions[ask_slots[sid]][0]
-            log.pending_asks -= 1
+            log.pending_asks -= q
             log.last_tick = self._tick_count
+            hist = self._totals["q_width_hist"]
+            hist[str(q)] = hist.get(str(q), 0) + 1
+            if q == 1:
+                trials = [suggestions[ask_slots[sid]][0]]
+            else:
+                res = q_results[sid]
+                if isinstance(res, Exception):
+                    if fut is not None and not fut.done():
+                        fut.set_exception(res)
+                    continue
+                trials = res
+            n_suggested += q
             if fut is not None and fut.cancelled():
-                # the client is gone: nobody holds this suggestion, so no
-                # tell will ever come back — counting it in flight would
-                # pin the study non-evictable and eat its max_inflight
-                # budget forever
-                tr.status = "failed"
-                tr.error = "ask cancelled before delivery"
+                # the client is gone: nobody holds these suggestions, so
+                # no tell will ever come back — counting them in flight
+                # would pin the study non-evictable and eat its
+                # max_inflight budget forever, and a q-ask's fantasy rows
+                # would hold buffer capacity with no tell to release them
+                for tr in trials:
+                    tr.status = "failed"
+                    tr.error = "ask cancelled before delivery"
+                if q > 1:
+                    self.pool.release_fantasies(
+                        ask_slots[sid],
+                        [np.asarray(tr.unit) for tr in trials])
                 continue
-            log.inflight += 1
-            tr.status = "running"
-            tr.started = time.time()
+            log.inflight += q
+            for tr in trials:
+                tr.status = "running"
+                tr.started = time.time()
             if fut is not None:
-                fut.set_result(tr)
+                fut.set_result(trials if q > 1 else trials[0])
+        self._sync_fantasy_totals()
         self.stats.append({
             "tick": self._tick_count,
             "width": len(take),
+            "suggestions": n_suggested,
             "absorbed": len(events),
             "deferred": len(deferred),
             "queued_after": len(self._asks),
@@ -571,7 +651,7 @@ class StudyGateway:
             "evictions": self._evictions_this_tick,
             "restores": self._restores_this_tick,
         })
-        self._totals["asks_served"] += len(take)
+        self._totals["asks_served"] += n_suggested
         self._totals["absorbed"] += len(events)
         if self.gw.ckpt_every_ticks and \
                 self._tick_count % self.gw.ckpt_every_ticks == 0:
@@ -598,8 +678,8 @@ class StudyGateway:
             else:
                 keep.append((sid, tr, val))
         self._tells = keep + self._tells
-        for sid, fut in take:
-            self._studies[sid].pending_asks -= 1
+        for sid, fut, q in take:
+            self._studies[sid].pending_asks -= q
             if fut is not None and not fut.done():
                 fut.set_exception(err)
         return bool(keep)
@@ -664,8 +744,8 @@ class StudyGateway:
                     # queued (observations are never dropped); the next
                     # ask() re-creates the ticker and retries them.
                     while self._asks:
-                        sid, fut = self._asks.popleft()
-                        self._studies[sid].pending_asks -= 1
+                        sid, fut, q = self._asks.popleft()
+                        self._studies[sid].pending_asks -= q
                         if fut is not None and not fut.done():
                             fut.set_exception(e)
                     raise
@@ -692,13 +772,23 @@ class StudyGateway:
                 await self._ticker
             except asyncio.CancelledError:
                 pass
-        for sid, fut in self._asks:
+        for sid, fut, q in self._asks:
             if fut is not None and not fut.done():
                 fut.cancel()
-            self._studies[sid].pending_asks -= 1
+            self._studies[sid].pending_asks -= q
         self._asks.clear()
 
     # -- telemetry / checkpointing ------------------------------------------
+    def _sync_fantasy_totals(self) -> None:
+        """Fold the pool's rollback counter into the lifetime total.  The
+        pool counter is a live monotonic tally that does not persist; the
+        gateway total rides the checkpoint registry like every other
+        lifetime counter, so the delta since the last sync is folded in
+        and the watermark advanced."""
+        cur = self.pool.fantasy_rollbacks
+        self._totals["fantasy_rollbacks"] += cur - self._pool_rollbacks_seen
+        self._pool_rollbacks_seen = cur
+
     def study_ids(self) -> list[int]:
         """Open logical study ids (closed studies leave the registry)."""
         return sorted(self._studies)
@@ -717,12 +807,20 @@ class StudyGateway:
             "slot": log.slot, "resident": log.slot is not None,
             "inflight": log.inflight, "evictions": log.version,
             "best_value": log.best_value,
+            "fantasy_active": (self.pool.fantasy_active(log.slot)
+                               if log.slot is not None else 0),
         }
 
     def summary(self) -> dict:
-        """Serving telemetry: counts are LIFETIME totals; latency/width
-        distributions cover the retained window (`stats_window` ticks)."""
+        """Serving telemetry: counts are LIFETIME totals (including the
+        fantasy rollback count and the q-width histogram, which survive
+        checkpoint/restore); `fantasy_active` is the LIVE number of
+        fantasy rows across resident slots; latency/width distributions
+        cover the retained window (`stats_window` ticks)."""
+        self._sync_fantasy_totals()
         out = {"ticks": self._tick_count, **self._totals,
+               "fantasy_active": sum(self.pool.fantasy_active(s)
+                                     for s in range(self.gw.slots)),
                "mean_coalesce_width": 0.0,
                "p50_tick_ms": 0.0, "p95_tick_ms": 0.0}
         if self.stats:
@@ -743,7 +841,10 @@ class StudyGateway:
         the logical registry rides the pool metadata.  In-flight asks and
         un-told suggestions do NOT survive a crash — clients re-ask, and
         the persistent per-study PRNG streams guarantee the retried round
-        never replays a pre-crash batch."""
+        never replays a pre-crash batch.  Fantasy rows never reach disk:
+        `pool.checkpoint` rolls every fantasy-active slot back to real
+        observations before snapshotting and re-fantasizes after."""
+        self._sync_fantasy_totals()
         registry = {
             "next_sid": self._next_sid,
             "tick_count": self._tick_count,
@@ -788,6 +889,11 @@ class StudyGateway:
         self._next_sid = int(registry["next_sid"])
         self._tick_count = int(registry["tick_count"])
         self._totals.update(registry.get("totals", {}))
+        # pool.restore() cleared every fantasy row (snapshots hold only
+        # real state); re-arm the rollback watermark at the pool's live
+        # counter so only post-restore rollbacks accrue on top of the
+        # persisted lifetime total
+        self._pool_rollbacks_seen = self.pool.fantasy_rollbacks
         self._closed_sids = set(registry.get("closed_sids", []))
         self._closed_gc = []
         self._studies = {}
@@ -795,7 +901,7 @@ class StudyGateway:
         # clients parked on pre-restore asks belong to the discarded
         # timeline: cancel their futures (dropping them silently would
         # hang those tasks forever — aclose() does the same)
-        for _sid, fut in self._asks:
+        for _sid, fut, _q in self._asks:
             if fut is not None and not fut.done():
                 fut.cancel()
         self._asks.clear()

@@ -83,6 +83,10 @@ class SchedulerConfig:
     acq: acq_mod.AcqConfig = dataclasses.field(
         default_factory=lambda: acq_mod.AcqConfig(restarts=48,
                                                   ascent_steps=20))
+    fantasy: gp_mod.FantasyConfig = dataclasses.field(
+        default_factory=gp_mod.FantasyConfig)  # liar policy for q-asks
+    # (DESIGN.md §12): "mean" = kriging believer, "pessimistic" = constant
+    # liar.  A Python constant inside the engine's q-ask closures.
 
 
 @dataclasses.dataclass
@@ -162,6 +166,13 @@ class StudyPool:
         self._n_done = 0  # absorptions ever (ckpt cadence + monotonic step;
         # counts absorbs into since-evicted slots, unlike total_done())
         self.last_restore_meta: dict | None = None  # set by restore()
+        # Fantasy protocol (DESIGN.md §12): per-slot pending fantasy points,
+        # in append order.  The slot's device n exceeds its real ledger by
+        # exactly len(self._fantasies[slot]); every real absorb first rolls
+        # the fantasy rows back (bitwise truncate), then re-fantasizes the
+        # survivors.  `fantasy_rollbacks` counts truncations performed.
+        self._fantasies: list[list[np.ndarray]] = [[] for _ in spaces]
+        self.fantasy_rollbacks = 0
 
     @property
     def n_studies(self) -> int:
@@ -216,18 +227,108 @@ class StudyPool:
                                        top_t=t)
         return [self._make_trial(study_id, np.asarray(u)) for u in units]
 
+    # -- fantasy protocol: batched q-suggestion (DESIGN.md §12) -------------
+    def fantasy_active(self, study_id: int) -> int:
+        """Pending fantasy rows currently appended to this slot's factor."""
+        return len(self._fantasies[study_id])
+
+    def n_real(self, study_id: int) -> int:
+        """Real-ledger active count (device n minus pending fantasy rows)."""
+        return self.engine.n(study_id) - len(self._fantasies[study_id])
+
+    def ask_q(self, study_id: int, q: int) -> list[Trial]:
+        """q distinct suggestions through the fantasy fast path.
+
+        ONE jitted dispatch (engine `ask_q`) runs q rounds of
+        suggest-then-fantasize; the q fantasy rows PERSIST in the slot's
+        factor — later asks (any width) see the collapsed variance at the
+        outstanding points — until a real observation arrives and the
+        absorb paths roll them back (bitwise truncate + replay).  Studies
+        still empty of observations get q random seed trials instead
+        (host-side, mirroring `suggest`).
+        """
+        if q < 1:
+            raise ValueError(f"q must be >= 1, got {q}")
+        if self.engine.n(study_id) == 0:
+            return self.seed_trials(study_id, q)
+        gp_mod.ensure_capacity(self.engine.n(study_id), self.cfg.n_max, q)
+        units, _ = self.engine.ask_q(study_id, self._split(study_id), q)
+        units = np.asarray(units)
+        self._fantasies[study_id].extend(u.copy() for u in units)
+        return [self._make_trial(study_id, u) for u in units]
+
+    def _rollback_for_events(
+            self, events: Sequence[tuple[int, Trial, float]]) -> None:
+        """Truncate every fantasy-active study named in `events` back to its
+        real ledger (bitwise — `engine.truncate_slot`), dropping each told
+        trial's point from that study's pending list.  Told points that were
+        never fantasies (plain `suggest` trials, foreign tells) trigger the
+        same rollback: the real append must never land on fantasized rows.
+        """
+        by_sid: dict[int, list[Trial]] = {}
+        for sid, tr, _ in events:
+            by_sid.setdefault(sid, []).append(tr)
+        for sid, trs in by_sid.items():
+            pend = self._fantasies[sid]
+            if not pend:
+                continue
+            self.engine.truncate_slot(sid, self.engine.n(sid) - len(pend))
+            self.fantasy_rollbacks += 1
+            for tr in trs:
+                for i, u in enumerate(pend):
+                    if np.array_equal(u, tr.unit):
+                        del pend[i]
+                        break
+
+    def release_fantasies(self, study_id: int, units) -> int:
+        """Drop abandoned fantasy rows (failed or cancelled asks whose tell
+        will never come): one bitwise truncate + one batched replay of the
+        survivors.  Each unit releases at most one pending row; unknown
+        units are ignored.  Returns the number of rows released."""
+        pend = self._fantasies[study_id]
+        if not pend:
+            return 0
+        drop: list[int] = []
+        for u in units:
+            for i, p in enumerate(pend):
+                if i not in drop and np.array_equal(p, u):
+                    drop.append(i)
+                    break
+        if not drop:
+            return 0
+        self.engine.truncate_slot(
+            study_id, self.engine.n(study_id) - len(pend))
+        self.fantasy_rollbacks += 1
+        self._fantasies[study_id] = [
+            p for i, p in enumerate(pend) if i not in drop]
+        self._refantasize_pending([study_id])
+        return len(drop)
+
+    def _refantasize_pending(self, sids) -> None:
+        """Re-append each study's surviving fantasy points in ONE batched
+        `lazy_append_rows` dispatch per study (liar values recomputed
+        against the now-updated real posterior — fresher than the originals,
+        which is fine: fantasy rows are scratch)."""
+        for sid in sorted(set(sids)):
+            pend = self._fantasies[sid]
+            if pend:
+                self.engine.refantasize(sid, np.stack(pend))
+
     def _check_capacity(self,
                         events: Sequence[tuple[int, Trial, float]]) -> None:
         """All-or-nothing capacity contract: validate the WHOLE queue
         (per-study multiplicity included) BEFORE mutating any ledger, so a
         `GPCapacityError` from one full study never leaves a neighbor's
-        trial marked done without its observation absorbed."""
+        trial marked done without its observation absorbed.  Surviving
+        fantasy rows count against capacity too: they are re-appended after
+        the absorb, so `n_real + events + pending` must fit (callers run
+        the fantasy rollback first, making `engine.n` the real count)."""
         counts: dict[int, int] = {}
         for sid, _, _ in events:
             counts[sid] = counts.get(sid, 0) + 1
         for sid, c in counts.items():
             gp_mod.ensure_capacity(self.engine.n(sid), self.cfg.n_max,
-                                   incoming=c)
+                                   incoming=c + len(self._fantasies[sid]))
 
     def _staged_keys(self, ei_ids: Sequence[int]) -> jax.Array:
         """(S, 2) key batch: fresh subkeys for `ei_ids` (their streams
@@ -298,9 +399,14 @@ class StudyPool:
                 overflow.append((sid, tr, val))
             else:
                 first[sid] = (tr, val)
+        # Fantasy rollback BEFORE the capacity check and any absorb: told
+        # studies are truncated to their real ledger (bitwise), so every
+        # append below lands exactly where a never-fantasized run would
+        # put it; survivors are re-fantasized after the round.
+        self._rollback_for_events(events)
         self._check_capacity(events)
         if overflow:
-            self.absorb_many(overflow)
+            self.absorb_many(overflow, _fantasies_handled=True)
         dim = self.engine.gp_cfg.dim
         flags = np.zeros((self.n_studies,), bool)
         xs = np.zeros((self.n_studies, dim), np.float32)
@@ -331,13 +437,17 @@ class StudyPool:
                 out[s] = self.seed_trials(s, t)
             else:
                 out[s] = [self._make_trial(s, u) for u in units[s]]
+        self._refantasize_pending(first.keys())
         self._maybe_checkpoint()
         return out
 
     # -- absorb -------------------------------------------------------------
     def absorb(self, study_id: int, trial: Trial, value: float) -> None:
         """Completion-order absorb routed to the owning study."""
-        gp_mod.ensure_capacity(self.engine.n(study_id), self.cfg.n_max)
+        self._rollback_for_events([(study_id, trial, value)])
+        gp_mod.ensure_capacity(
+            self.engine.n(study_id), self.cfg.n_max,
+            incoming=1 + len(self._fantasies[study_id]))
         self.engine.absorb(study_id, jnp.asarray(trial.unit),
                            jnp.asarray(value, jnp.float32))
         # status flips to "done" only once the append committed: callers
@@ -346,20 +456,29 @@ class StudyPool:
         trial.value = float(value)
         trial.finished = time.time()
         trial.clamp_count = self.engine.clamp_count(study_id)
+        self._refantasize_pending([study_id])
         self._n_done += 1
         self._maybe_checkpoint()
 
     def absorb_many(self,
-                    events: Sequence[tuple[int, Trial, float]]) -> None:
+                    events: Sequence[tuple[int, Trial, float]],
+                    _fantasies_handled: bool = False) -> None:
         """Drain a completion queue in masked batched rounds.
 
         Events may arrive in any completion order and any per-study
         multiplicity; each round takes at most one event per study and runs
         ONE vmapped masked append, so k completions across S studies cost
         ceil(max per-study count) dispatches instead of k.
+
+        `_fantasies_handled` is the `advance_round` overflow path: the
+        caller already rolled fantasy rows back for every event and will
+        re-fantasize after its own fused round — this drain must not
+        re-append pending rows mid-protocol.
         """
         queue = list(events)
         dim = self.engine.gp_cfg.dim
+        if not _fantasies_handled:
+            self._rollback_for_events(queue)
         self._check_capacity(queue)
         while queue:
             round_events: dict[int, tuple[Trial, float]] = {}
@@ -386,6 +505,8 @@ class StudyPool:
                 tr.finished = time.time()
                 tr.clamp_count = int(clamps[sid])
             self._n_done += len(round_events)
+        if not _fantasies_handled:
+            self._refantasize_pending(sid for sid, _, _ in events)
         self._maybe_checkpoint()
 
     def record_failure(self, study_id: int, trial: Trial,
@@ -396,11 +517,22 @@ class StudyPool:
         trial.finished = time.time()
         if self.cfg.failure_penalty is not None:
             # Pseudo-observation keeps EI away from a crashing region.
-            gp_mod.ensure_capacity(self.engine.n(study_id), self.cfg.n_max)
+            self._rollback_for_events([(study_id, trial, 0.0)])
+            gp_mod.ensure_capacity(
+                self.engine.n(study_id), self.cfg.n_max,
+                incoming=1 + len(self._fantasies[study_id]))
             self.engine.absorb(study_id, jnp.asarray(trial.unit),
                                jnp.asarray(self.cfg.failure_penalty,
                                            jnp.float32))
             trial.clamp_count = self.engine.clamp_count(study_id)
+            self._refantasize_pending([study_id])
+        elif any(np.array_equal(u, trial.unit)
+                 for u in self._fantasies[study_id]):
+            # No pseudo-observation lands, but the failed trial's fantasy
+            # row must still be released: truncate + replay the survivors
+            # so the slot stops repelling a region nobody is evaluating.
+            self._rollback_for_events([(study_id, trial, 0.0)])
+            self._refantasize_pending([study_id])
         if trial.retries < self.cfg.max_retries:
             nxt = self.suggest(study_id, 1)[0]
             nxt.retries = trial.retries + 1
@@ -429,7 +561,16 @@ class StudyPool:
         `checkpoint.save_study`) bitwise: float32 buffers are exported as
         numpy arrays and re-written into the stack elementwise, so an
         evicted-and-restored study continues exactly where it left off.
+
+        Fantasy-pinned slots refuse to export: snapshots must hold only
+        real state (DESIGN.md §12) — the gateway keeps such studies
+        non-evictable, so reaching this guard means a protocol bug.
         """
+        if self._fantasies[slot]:
+            raise RuntimeError(
+                f"slot {slot} has {len(self._fantasies[slot])} active "
+                "fantasy rows; eviction snapshots must see only real state "
+                "(resolve or roll back the pending q-ask first)")
         h = self.studies[slot]
         tree = jax.tree.map(np.asarray,
                             dataclasses.asdict(self.engine.study_state(slot)))
@@ -445,6 +586,7 @@ class StudyPool:
         tree = dict(tree)
         tree["params"] = KernelParams(**tree["params"])
         self.engine.load_slot(slot, gp_mod.LazyGPState(**tree))
+        self._fantasies[slot] = []   # snapshots hold only real state
         h = self.studies[slot]
         if space is not None:
             h.space = space
@@ -471,6 +613,7 @@ class StudyPool:
             raise ValueError(
                 f"space dim {space.dim} != pool dim {self.engine.gp_cfg.dim}")
         self.engine.reset_slot(slot)
+        self._fantasies[slot] = []
         h = self.studies[slot]
         seed = self.cfg.seed + slot if seed is None else seed
         if space is not None:
@@ -497,9 +640,20 @@ class StudyPool:
     def checkpoint(self, extra: dict | None = None) -> str | None:
         """Atomic whole-pool snapshot; `extra` metadata (JSON-serializable)
         rides along and comes back in `last_restore_meta` — the gateway
-        stores its logical-study registry there."""
+        stores its logical-study registry there.
+
+        Checkpoints see only real state (DESIGN.md §12): fantasy-active
+        slots are truncated to their real ledger (bitwise) for the
+        snapshot and re-fantasized right after — a restored pool holds the
+        exact never-fantasized buffers, and the crash-orphaned pending
+        asks are re-served by the gateway, never replayed from disk."""
         if not self.cfg.ckpt_dir:
             return None
+        active = [s for s in range(self.n_studies) if self._fantasies[s]]
+        for sid in active:
+            self.engine.truncate_slot(
+                sid, self.engine.n(sid) - len(self._fantasies[sid]))
+            self.fantasy_rollbacks += 1
         self._done_at_last_ckpt = self._n_done
         meta = {
             "n_studies": self.n_studies,
@@ -514,9 +668,11 @@ class StudyPool:
         }
         if extra:
             meta.update(extra)
-        return ckpt_mod.save(self.cfg.ckpt_dir, self._n_done,
+        path = ckpt_mod.save(self.cfg.ckpt_dir, self._n_done,
                              dataclasses.asdict(self.engine.state),
                              metadata=meta)
+        self._refantasize_pending(active)
+        return path
 
     def restore(self) -> bool:
         if not self.cfg.ckpt_dir:
@@ -535,6 +691,9 @@ class StudyPool:
         # Re-place on the configured device mesh: a restored pool resumes
         # with the same sharding layout the closures were built for.
         self.engine.state = self.engine.place(gp_mod.LazyGPState(**tree))
+        # Snapshots hold only real state; pending q-asks died with the
+        # crash and are re-served upstream, so no fantasy rows survive.
+        self._fantasies = [[] for _ in range(self.n_studies)]
         for rec in json.loads(meta["studies"]):
             h = self.studies[rec["study_id"]]
             h.name = rec["name"]

@@ -38,6 +38,7 @@ a leading study axis per DESIGN.md §7):
   padded_tri_inverse | padded buffers    |   P    |  x  |  x  | yes      | §4
   padded_append_row  | padded buffers    |   ‡    |  ‡  |  ‡  | yes      | §4,§7
   lazy_append        | padded buffers    |   ‡    |  ‡  |  ‡  | yes      | §4,§7
+  lazy_append_rows   | padded buffers    |   ‡    |  ‡  |  ‡  | yes      | §4,§12
   fused_ei_grad      | (r,d) + padded    |   P§   |  x  |  x  | yes      | §11
 
   *  active-shape ops serve the tests and naive baselines; the batched hot
@@ -430,6 +431,58 @@ def lazy_append(l_buf: Array, li_buf: Array, p_pad: Array, c: Array,
     z = li_new @ resid
     alpha = z @ li_new           # == li_new.T @ z
     return l_new, li_new, jnp.where(idx <= n, alpha, 0.0), d, clamped
+
+
+def lazy_append_rows(l_buf: Array, li_buf: Array, p_pads: Array, cs: Array,
+                     resid: Array, n: Array, *, implementation: str = "auto"
+                     ) -> tuple[Array, Array, Array, Array, Array]:
+    """Append q bordered rows + one alpha refresh in a single dispatch.
+
+    The q-suggestion fast path (DESIGN.md §12): q sequential Alg. 3 border
+    steps — row i lands at index n + i — followed by ONE fused alpha refresh
+    against the final inverse.  Each border step is the same matmul-only
+    bordered-inverse math as `padded_append_row`, so the whole op stays on
+    the native GEMM path and batches over a study axis.  The alpha solves
+    run once per call instead of once per row, matching the deferred-alpha
+    economics of `append_batch` at the substrate level.
+
+    Args:
+      p_pads: (q, n_max) covariance columns; row i is the covariance of the
+        i-th new point against the first n + i rows of the *final* point
+        buffer (actives plus earlier new points), zero beyond index n + i.
+      cs: (q,) self-covariances k(x_i, x_i) + noise.
+      resid: (n_max,) residual y - mean *including* all q new rows, zero
+        beyond row n + q - 1.
+      n: active count before the appends (traced int32).
+
+    Returns (l_new, li_new, alpha, ds (q,), clamped) where `clamped` counts
+    how many of the q rows hit the CLAMP_EPS conditioning floor.
+
+    Batched form: stacked `(S, n_max, …)` buffers with `(S, q, n_max)`
+    columns, `(S, q)` self-covariances and per-study `n (S,)` run S × q
+    appends in one dispatch.
+    """
+    del implementation  # matmul-only: no substrate dispatch below this line
+    if l_buf.ndim == 3:
+        return jax.vmap(lambda l, li, p, cc, r, nn: lazy_append_rows(
+            l, li, p, cc, r, nn))(l_buf, li_buf, p_pads, cs, resid, n)
+    n_max = l_buf.shape[0]
+    q_rows = p_pads.shape[0]
+
+    def body(i, carry):
+        l, li, ds, cl = carry
+        l2, li2, d, c2 = padded_append_row(l, li, p_pads[i], cs[i], n + i)
+        return l2, li2, ds.at[i].set(d), cl + c2
+
+    l_new, li_new, ds, clamped = jax.lax.fori_loop(
+        0, q_rows, body,
+        (l_buf, li_buf, jnp.zeros((q_rows,), l_buf.dtype),
+         jnp.asarray(0, jnp.int32)))
+    idx = jnp.arange(n_max)
+    z = li_new @ resid
+    alpha = z @ li_new           # == li_new.T @ z
+    return (l_new, li_new, jnp.where(idx < n + q_rows, alpha, 0.0),
+            ds, clamped)
 
 
 # ---------------------------------------------------------------------------

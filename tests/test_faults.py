@@ -388,3 +388,197 @@ def test_pool_kill_mid_round_restores_to_last_commit():
         fresh.absorb(0, fresh._make_trial(0, units[2]), 0.3)
         np.testing.assert_array_equal(np.asarray(fresh.state(0).alpha),
                                       np.asarray(pool.state(0).alpha))
+
+
+# ---------------------------------------------------------------------------
+# qEI fantasy rollback exactness (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def _slot_bytes(pool, slot: int) -> dict:
+    """Every leaf of one slot's GP state as raw bytes — the comparison is
+    BITWISE, not approximate: rollback must leave no float dust behind."""
+    import jax
+    st = pool.engine.study_state(slot)
+    return {jax.tree_util.keystr(path): np.asarray(leaf).tobytes()
+            for path, leaf in jax.tree_util.tree_flatten_with_path(st)[0]}
+
+
+def _twin_pools(d1, d2, n_max=48):
+    pa = StudyPool([RESNET_SPACE], _cfg(d1, n_max=n_max))
+    pb = StudyPool([RESNET_SPACE], _cfg(d2, n_max=n_max))
+    rng = np.random.RandomState(7)
+    for _ in range(3):
+        u = rng.rand(RESNET_SPACE.dim).astype(np.float32)
+        v = obj(0, u)
+        pa.absorb(0, _foreign_trial(u), v)
+        pb.absorb(0, _foreign_trial(u), v)
+    return pa, pb
+
+
+@pytest.mark.parametrize("order", [
+    [0, 1, 2, 3],          # tell all, in suggestion order
+    [2, 0, 3, 1],          # out of order
+    [1, 3],                # partial — the rest told after MORE q-asks
+])
+def test_ask_q_rollback_bitwise_equals_never_fantasized(order):
+    """ask(q) appends fantasy rows; as the real tells arrive (any order,
+    any subset) the rollback must be exact: a twin pool fed the identical
+    real observations and no fantasies ends in a BITWISE-identical state."""
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        pa, pb = _twin_pools(d1, d2)
+        trials = pa.ask_q(0, 4)
+        assert pa.fantasy_active(0) == 4 and pa.n_real(0) == 3
+        told = []
+        for i in order:
+            tr = trials[i]
+            v = obj(0, tr.unit)
+            pa.absorb(0, tr, v)
+            pb.absorb(0, _foreign_trial(tr.unit), v)
+            told.append(i)
+        rest = [i for i in range(4) if i not in told]
+        if rest:
+            # keep fantasies live across another q-ask, then drain fully
+            more = pa.ask_q(0, 2)
+            for tr in [trials[i] for i in rest] + list(more):
+                v = obj(0, tr.unit)
+                pa.absorb(0, tr, v)
+                pb.absorb(0, _foreign_trial(tr.unit), v)
+        assert pa.fantasy_active(0) == 0
+        assert pa.engine.n(0) == pb.engine.n(0)
+        a, b = _slot_bytes(pa, 0), _slot_bytes(pb, 0)
+        for leaf in a:
+            assert a[leaf] == b[leaf], f"{leaf} differs after rollback"
+
+
+def test_ask_q_checkpoint_mid_fantasy_snapshots_only_real_state():
+    """A pool checkpoint taken with fantasy rows outstanding must write
+    only the real ledger (rollback → snapshot → re-fantasize): the
+    restored pool is bitwise the never-fantasized twin, while the live
+    pool keeps serving its pending fantasies."""
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        pa, pb = _twin_pools(d1, d2)
+        trials = pa.ask_q(0, 3)
+        rb0 = pa.fantasy_rollbacks
+        assert pa.checkpoint() is not None
+        # the live pool still has its fantasies (re-appended post-snapshot)
+        assert pa.fantasy_active(0) == 3
+        assert pa.fantasy_rollbacks == rb0 + 1
+        # kill/recover: the restored pool sees only real observations
+        pr = StudyPool([RESNET_SPACE], _cfg(d1, n_max=48))
+        assert pr.restore()
+        assert pr.fantasy_active(0) == 0 and pr.engine.n(0) == 3
+        a, b = _slot_bytes(pr, 0), _slot_bytes(pb, 0)
+        for leaf in a:
+            assert a[leaf] == b[leaf], f"{leaf} differs after restore"
+        # the orphaned suggestions are re-served, never replayed: telling
+        # their units into the restored pool works as plain observations
+        for tr in trials:
+            pr.absorb(0, _foreign_trial(tr.unit), obj(0, tr.unit))
+        assert pr.engine.n(0) == 6
+
+
+def test_export_refuses_fantasy_active_slot_and_eviction_pins():
+    """Eviction snapshots must see only real state: `export_study` refuses
+    a fantasy-active slot, and the gateway never selects one for LRU
+    eviction (fantasy-pinned) even with its counters artificially idle."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=32),
+                          GatewayConfig(slots=2, max_inflight=8))
+        a, b, c = (gw.create_study() for _ in range(3))
+        for sid in (a, b):
+            tr = await gw.ask(sid)
+            gw.tell(sid, tr, obj(sid, tr.unit))
+        await gw.drain()
+        batch = await gw.ask(a, q=2)
+        slot_a = gw._studies[a].slot
+        with pytest.raises(RuntimeError, match="fantasy"):
+            gw.pool.export_study(slot_a)
+        # white-box: even with in-flight bookkeeping zeroed, the fantasy
+        # rows alone pin the study
+        log = gw._studies[a]
+        saved = log.inflight
+        log.inflight = 0
+        assert not gw._evictable(log)
+        log.inflight = saved
+        # study c's first ask must evict b (idle), never a
+        tr_c = await gw.ask(c)
+        assert gw._studies[a].slot == slot_a
+        assert gw._studies[b].slot is None and gw._studies[b].evicted_ever
+        for tr in batch:
+            gw.tell(a, tr, obj(a, tr.unit))
+        gw.tell(c, tr_c, obj(c, tr_c.unit))
+        await gw.drain()
+        assert gw.summary()["fantasy_active"] == 0
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_gateway_kill_recover_with_fantasies_equals_real_ledger():
+    """Kill/recover through the GATEWAY with q-ask fantasies outstanding:
+    the recovered gateway serves from the real ledger only — bitwise the
+    state of a twin pool that absorbed the same real observations."""
+    async def main(d, d2):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=48),
+                          GatewayConfig(slots=1, max_inflight=8))
+        sid = gw.create_study()
+        pb = StudyPool([RESNET_SPACE], _cfg(d2, n_max=48))
+        for _ in range(3):
+            tr = await gw.ask(sid)
+            v = obj(sid, tr.unit)
+            gw.tell(sid, tr, v)
+            await gw.drain()
+            pb.absorb(0, _foreign_trial(tr.unit), v)
+        batch = await gw.ask(sid, q=3)
+        told = batch[1]
+        v = obj(sid, told.unit)
+        gw.tell(sid, told, v)
+        await gw.drain()
+        pb.absorb(0, _foreign_trial(told.unit), v)
+        assert gw.pool.fantasy_active(0) == 2
+        gw.checkpoint()     # rolls back around the snapshot
+        await gw.aclose()   # crash: 2 suggestions die with their clients
+
+        gw2 = StudyGateway(RESNET_SPACE, _cfg(d, n_max=48),
+                           GatewayConfig(slots=1, max_inflight=8))
+        assert gw2.restore()
+        assert gw2.study_info(sid)["n_obs"] == 4
+        assert gw2.summary()["fantasy_active"] == 0
+        # lifetime q telemetry survived
+        assert gw2.summary()["q_width_hist"].get("3") == 1
+        tr = await gw2.ask(sid)   # slot re-residency replays real state
+        a, b = _slot_bytes(gw2.pool, 0), _slot_bytes(pb, 0)
+        for leaf in a:
+            assert a[leaf] == b[leaf], f"{leaf} differs after recovery"
+        gw2.tell(sid, tr, obj(sid, tr.unit))
+        await gw2.drain()
+        await gw2.aclose()
+    with tempfile.TemporaryDirectory() as d, \
+            tempfile.TemporaryDirectory() as d2:
+        asyncio.run(main(d, d2))
+
+
+def test_failed_q_trial_releases_its_fantasy_row():
+    """tell_failure without a penalty must release the failed trial's
+    fantasy row (no tell will ever come), unpinning the study."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=32),
+                          GatewayConfig(slots=1, max_inflight=8))
+        sid = gw.create_study()
+        tr = await gw.ask(sid)
+        gw.tell(sid, tr, obj(sid, tr.unit))
+        await gw.drain()
+        batch = await gw.ask(sid, q=3)
+        assert gw.pool.fantasy_active(0) == 3
+        gw.tell_failure(sid, batch[0], "diverged")
+        assert gw.pool.fantasy_active(0) == 2
+        for tr in batch[1:]:
+            gw.tell(sid, tr, obj(sid, tr.unit))
+        await gw.drain()
+        assert gw.pool.fantasy_active(0) == 0
+        assert gw.study_info(sid)["n_obs"] == 3   # the failure absorbed no row
+        assert gw._evictable(gw._studies[sid])
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))

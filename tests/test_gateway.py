@@ -495,3 +495,110 @@ def test_telemetry_summary_fields():
         await gw.aclose()
     with tempfile.TemporaryDirectory() as d:
         asyncio.run(main(d))
+
+
+# ---------------------------------------------------------------------------
+# Batched q-suggestion serving (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def test_ask_q_serves_batch_coalesced_with_singles():
+    """One ask(q=4) returns 4 distinct suggestions, served on the SAME tick
+    as the other tenants' q=1 asks; q widths land in the telemetry."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=32),
+                          GatewayConfig(slots=3, max_inflight=8))
+        a, b, c = (gw.create_study() for _ in range(3))
+        # seed tenant a so its q-ask runs the fantasy path, not random seeds
+        tr = await gw.ask(a)
+        gw.tell(a, tr, obj(a, tr.unit))
+        await gw.drain()
+        t0 = gw.summary()["ticks"]
+        batch, tb, tc = await asyncio.gather(
+            gw.ask(a, q=4), gw.ask(b), gw.ask(c))
+        assert gw.summary()["ticks"] == t0 + 1   # one coalesced tick
+        assert isinstance(batch, list) and len(batch) == 4
+        units = {np.asarray(t.unit).tobytes() for t in batch}
+        assert len(units) == 4                   # jointly diverse
+        assert gw.stats[-1]["width"] == 3        # 3 asks...
+        assert gw.stats[-1]["suggestions"] == 6  # ...6 suggestions
+        assert gw._studies[a].inflight == 4
+        assert gw.study_info(a)["fantasy_active"] == 4
+        for tr in batch:
+            gw.tell(a, tr, obj(a, tr.unit))
+        gw.tell(b, tb, obj(b, tb.unit))
+        gw.tell(c, tc, obj(c, tc.unit))
+        await gw.drain()
+        assert gw.summary()["fantasy_active"] == 0
+        assert gw.summary()["q_width_hist"] == {"1": 3, "4": 1}
+        assert gw.study_info(a)["n_obs"] == 5
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_ask_q_admission_rejections():
+    """q-aware admission: q > max_inflight is unservable (clear error, not
+    a hang), inflight + q over the cap rejects, and committed + q beyond
+    n_max rejects — all BEFORE any fantasy row is appended."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=8),
+                          GatewayConfig(slots=1, max_inflight=4))
+        sid = gw.create_study()
+        with pytest.raises(GPCapacityError, match="max_inflight"):
+            await gw.ask(sid, q=5)     # unservable at any future time
+        with pytest.raises(ValueError, match="q"):
+            await gw.ask(sid, q=0)
+        batch = await gw.ask(sid, q=3)
+        with pytest.raises(GPCapacityError, match="in flight"):
+            await gw.ask(sid, q=2)     # 3 inflight + 2 > 4
+        for tr in batch:
+            gw.tell(sid, tr, obj(sid, tr.unit))
+        await gw.drain()
+        tr = await gw.ask(sid, q=4)    # 3 committed + 4 <= 8: fine
+        for t in tr:
+            gw.tell(sid, t, obj(sid, t.unit))
+        await gw.drain()
+        with pytest.raises(GPCapacityError, match="n_max"):
+            await gw.ask(sid, q=2)     # 7 committed + 2 > 8
+        one = await gw.ask(sid)        # the last row still serves q=1
+        gw.tell(sid, one, obj(sid, one.unit))
+        await gw.drain()
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_q_telemetry_persists_across_checkpoint_restore():
+    """`q_width_hist` and `fantasy_rollbacks` are lifetime totals: they ride
+    the checkpoint registry and keep counting after a restore."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=32),
+                          GatewayConfig(slots=1, max_inflight=8))
+        sid = gw.create_study()
+        tr = await gw.ask(sid)
+        gw.tell(sid, tr, obj(sid, tr.unit))
+        await gw.drain()
+        for tr in await gw.ask(sid, q=2):
+            gw.tell(sid, tr, obj(sid, tr.unit))
+        await gw.drain()
+        s1 = gw.summary()
+        assert s1["q_width_hist"] == {"1": 1, "2": 1}
+        assert s1["fantasy_rollbacks"] >= 1
+        gw.checkpoint()
+        await gw.aclose()
+
+        gw2 = StudyGateway(RESNET_SPACE, _cfg(d, n_max=32),
+                           GatewayConfig(slots=1, max_inflight=8))
+        assert gw2.restore()
+        s2 = gw2.summary()
+        assert s2["q_width_hist"] == s1["q_width_hist"]
+        assert s2["fantasy_rollbacks"] == s1["fantasy_rollbacks"]
+        # counters keep accumulating, not reset-and-overwrite
+        for tr in await gw2.ask(sid, q=2):
+            gw2.tell(sid, tr, obj(sid, tr.unit))
+        await gw2.drain()
+        s3 = gw2.summary()
+        assert s3["q_width_hist"]["2"] == 2
+        assert s3["fantasy_rollbacks"] > s2["fantasy_rollbacks"]
+        await gw2.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))

@@ -335,3 +335,89 @@ def test_mixed_append_posterior_matches_dense(seed, n):
                                rtol=1e-3, atol=5e-4)
     np.testing.assert_allclose(np.asarray(var), np.asarray(var_d),
                                rtol=1e-2, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# qEI fantasy rollback exactness under random interleavings (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+# One shared pool pair, reset per example: every example would otherwise
+# pay the jitted ask_q/absorb compile, and the family is about STATE, not
+# construction.  Pool A serves through the fantasy path; pool B is the
+# never-fantasized control fed the identical real observations.
+_FANTASY_POOLS: list = []
+
+
+def _fantasy_pools():
+    from repro.core.acquisition import AcqConfig
+    from repro.hpo.pool import SchedulerConfig, StudyPool
+    from repro.hpo.space import RESNET_SPACE
+    if not _FANTASY_POOLS:
+        cfg = SchedulerConfig(n_max=48, seed=0, ckpt_every=10_000,
+                              acq=AcqConfig(restarts=8, ascent_steps=4))
+        _FANTASY_POOLS.append(StudyPool([RESNET_SPACE], cfg))
+        _FANTASY_POOLS.append(StudyPool([RESNET_SPACE], cfg))
+    pa, pb = _FANTASY_POOLS
+    pa.reset_study(0)
+    pb.reset_study(0)
+    return pa, pb
+
+
+@settings(max_examples=8, deadline=None)
+@given(script=st.lists(st.sampled_from(["ask1", "ask2", "ask3",
+                                        "tell", "foreign", "release"]),
+                       min_size=3, max_size=10),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_fantasy_rollback_bitwise_under_random_interleavings(script, seed):
+    """Any interleaving of q-asks, (out-of-order) tells, foreign tells and
+    fantasy releases ends — once every pending row is drained — in a state
+    BITWISE equal to a control pool that absorbed the same real
+    observations and never fantasized (DESIGN.md §12 rollback contract)."""
+    from repro.hpo.pool import Trial
+    pa, pb = _fantasy_pools()
+    rng = np.random.RandomState(seed)
+
+    def value(u):
+        return float(-np.sum((np.asarray(u) - 0.3) ** 2))
+
+    # two real seed observations so the first ask_q works off a posterior
+    pending: list = []           # trials awaiting their real tell, pool A
+    for _ in range(2):
+        u = rng.rand(pa.studies[0].space.dim).astype(np.float32)
+        v = value(u)
+        pa.absorb(0, Trial(10_000, u, {}), v)
+        pb.absorb(0, Trial(10_000, u, {}), v)
+
+    for op in script:
+        if op.startswith("ask"):
+            q = int(op[3:])
+            if pa.n_real(0) + pa.fantasy_active(0) + q > 40:
+                continue
+            pending.extend(pa.ask_q(0, q))
+        elif op == "tell" and pending:
+            tr = pending.pop(rng.randint(len(pending)))
+            v = value(tr.unit)
+            pa.absorb(0, tr, v)
+            pb.absorb(0, Trial(10_000, np.asarray(tr.unit), {}), v)
+        elif op == "foreign":
+            u = rng.rand(pa.studies[0].space.dim).astype(np.float32)
+            v = value(u)
+            pa.absorb(0, Trial(10_000, u, {}), v)
+            pb.absorb(0, Trial(10_000, u, {}), v)
+        elif op == "release" and pending:
+            tr = pending.pop(rng.randint(len(pending)))
+            assert pa.release_fantasies(0, [np.asarray(tr.unit)]) == 1
+    # drain: tell every survivor in random order
+    while pending:
+        tr = pending.pop(rng.randint(len(pending)))
+        v = value(tr.unit)
+        pa.absorb(0, tr, v)
+        pb.absorb(0, Trial(10_000, np.asarray(tr.unit), {}), v)
+
+    assert pa.fantasy_active(0) == 0
+    assert pa.engine.n(0) == pb.engine.n(0) == pa.n_real(0)
+    import jax
+    for (path, la), (_, lb) in zip(
+            jax.tree_util.tree_flatten_with_path(pa.engine.study_state(0))[0],
+            jax.tree_util.tree_flatten_with_path(pb.engine.study_state(0))[0]):
+        assert np.asarray(la).tobytes() == np.asarray(lb).tobytes(), \
+            f"{jax.tree_util.keystr(path)} differs after drain"
