@@ -25,6 +25,16 @@ one-ask-per-tick rule serializes the farm — 8 workers asking the same
 study take 8 consecutive ticks (the pinned baseline).  At q=8/q=32 one
 `ask(sid, q=N)` delivers the whole batch from a single fused qEI fantasy
 dispatch.  Acceptance floor: q=8 >= 3x the q=1 serialized-tick baseline.
+
+The federation cells measure HORIZONTAL scale (DESIGN.md §13): 256
+simulated clients, one study each, on 1/2/4 shards of a fixed per-shard
+slot budget.  One shard (the pinned single-pool baseline) holds 144 slots
+for 256 tenants, so every round thrashes the eviction store; 2 shards
+double the resident set and the churn disappears — on a single-device
+host the win is CAPACITY scaling (eviction-churn elimination), not
+parallel compute.  Each cell runs the same per-client trial budget.
+Acceptance floor: 2 shards >= 1.6x the single-pool baseline's sustained
+suggestions/sec.
 """
 from __future__ import annotations
 
@@ -36,6 +46,7 @@ import time
 import numpy as np
 
 from repro.core.acquisition import AcqConfig
+from repro.hpo.federation import FederatedGateway, FederationConfig
 from repro.hpo.gateway import GatewayConfig, StudyGateway
 from repro.hpo.pool import SchedulerConfig, StudyPool
 from repro.hpo.space import RESNET_SPACE
@@ -45,6 +56,9 @@ JSON_PATH = "BENCH_serve.json"
 CLIENTS = 16
 FARM_WORKERS = 8
 FARM_QS = (1, 8, 32)
+FED_CLIENTS = 256
+FED_SLOTS = 144           # per shard: 1 shard churns 256 tenants, 2+ don't
+FED_SHARDS = (1, 2, 4)
 
 
 def _objective(sid: int, unit: np.ndarray) -> float:
@@ -151,6 +165,42 @@ def _bench_farm(d: str, q: int, per_round: int, n_max: int, warmup: int,
     return dt, per_round * rounds, gw.summary()
 
 
+def _bench_federation(root: str, n_shards: int, n_max: int, warmup: int,
+                      rounds: int) -> tuple[float, dict]:
+    """256 concurrent ask-tell clients over an N-shard federation (the
+    1-shard cell IS the pinned single-pool baseline: same gateway, same
+    slot budget, everything routed to one pool)."""
+    fg = FederatedGateway(RESNET_SPACE, _cfg(n_max, root),
+                          GatewayConfig(slots=FED_SLOTS),
+                          FederationConfig(n_shards=n_shards))
+    sids = [fg.create_study() for _ in range(FED_CLIENTS)]
+
+    async def one(s):
+        tr = await fg.ask(s)
+        fg.tell(s, tr, _objective(s, tr.unit))
+
+    async def round_all():
+        await asyncio.gather(*(one(s) for s in sids))
+        await fg.drain()
+
+    async def main():
+        for _ in range(warmup):
+            await round_all()
+        for _i, gw in fg._live_shards():
+            gw.stats.clear()   # p95 over measured ticks, not the compile
+        ev0 = fg.summary()["evictions"]
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            await round_all()
+        dt = time.perf_counter() - t0
+        summary = fg.summary()
+        summary["measured_evictions"] = summary["evictions"] - ev0
+        await fg.aclose()
+        return dt, summary
+
+    return asyncio.run(main())
+
+
 def run(full: bool = False, json_path: str = JSON_PATH):
     n_max = 128
     warmup, rounds = (3, 12) if full else (2, 8)
@@ -191,6 +241,34 @@ def run(full: bool = False, json_path: str = JSON_PATH):
         cell["speedup_vs_q1"] = cell["suggestions_per_sec"] / base
         farm_cells.append(cell)
     q1_base = base_cells[cell_shape[8]]["suggestions_per_sec"]
+
+    # federation cells: same per-client budget on every shard count; the
+    # 1-shard cell is the pinned single-pool baseline
+    fed_warm, fed_rounds = (2, 4) if full else (1, 3)
+    fed_n_max = 16
+    fed_cells = []
+    for n_shards in FED_SHARDS:
+        with tempfile.TemporaryDirectory() as d:
+            dt, fsum = _bench_federation(d, n_shards, fed_n_max,
+                                         fed_warm, fed_rounds)
+        sug = FED_CLIENTS * fed_rounds
+        fed_cells.append({
+            "n_shards": n_shards,
+            "clients": FED_CLIENTS,
+            "slots_per_shard": FED_SLOTS,
+            "suggestions_per_sec": sug / dt,
+            "round_ms": 1e3 * dt / fed_rounds,
+            "measured_evictions": fsum["measured_evictions"],
+            "p95_tick_ms": max(s["p95_tick_ms"]
+                               for s in fsum["per_shard"].values()),
+            "per_shard_p95_tick_ms": {i: s["p95_tick_ms"] for i, s in
+                                      sorted(fsum["per_shard"].items())},
+        })
+    fed_base = fed_cells[0]["suggestions_per_sec"]
+    for cell in fed_cells:
+        cell["speedup_vs_single_pool"] = \
+            cell["suggestions_per_sec"] / fed_base
+
     ops = CLIENTS * rounds
     rec = {
         "clients": CLIENTS,
@@ -210,6 +288,12 @@ def run(full: bool = False, json_path: str = JSON_PATH):
         "farm_workers": FARM_WORKERS,
         "farm_q1_baseline_suggestions_per_sec": q1_base,
         "farm_cells": farm_cells,
+        # horizontal scale-out: 256 clients over 1/2/4 shards (acceptance
+        # floor: 2 shards >= 1.6x the 1-shard single-pool baseline)
+        "fed_clients": FED_CLIENTS,
+        "fed_slots_per_shard": FED_SLOTS,
+        "fed_baseline_suggestions_per_sec": fed_base,
+        "fed_cells": fed_cells,
     }
     import jax
     payload = {"backend": jax.default_backend(), "results": [rec]}
@@ -229,6 +313,14 @@ def run(full: bool = False, json_path: str = JSON_PATH):
             f"{1e6 / cell['suggestions_per_sec']:.0f},"
             f"suggest_per_s={cell['suggestions_per_sec']:.1f} "
             f"speedup_vs_q1={cell['speedup_vs_q1']:.2f}x")
+    for cell in fed_cells:
+        rows.append(
+            f"serve_fed_{cell['n_shards']}shard,"
+            f"{1e6 / cell['suggestions_per_sec']:.0f},"
+            f"suggest_per_s={cell['suggestions_per_sec']:.1f} "
+            f"speedup={cell['speedup_vs_single_pool']:.2f}x "
+            f"p95_tick_ms={cell['p95_tick_ms']:.1f} "
+            f"evictions={cell['measured_evictions']}")
     rows.append(f"serve_json,,path={json_path}")
     return rows
 

@@ -1,10 +1,10 @@
 """Atomic checkpoint store (fault-tolerance substrate)."""
-from repro.checkpoint.store import (committed_steps, drop_studies,
-                                    latest_step, list_studies,
-                                    prune_studies, restore,
+from repro.checkpoint.store import (committed_steps, copy_study_version,
+                                    drop_studies, latest_step,
+                                    list_studies, prune_studies, restore,
                                     restore_latest, restore_study, save,
-                                    save_study, study_dir)
-__all__ = ["committed_steps", "drop_studies", "latest_step",
-           "list_studies",
+                                    save_study, study_dir, study_versions)
+__all__ = ["committed_steps", "copy_study_version", "drop_studies",
+           "latest_step", "list_studies",
            "prune_studies", "restore", "restore_latest", "restore_study",
-           "save", "save_study", "study_dir"]
+           "save", "save_study", "study_dir", "study_versions"]

@@ -208,6 +208,50 @@ def restore_study(ckpt_dir: str, study: str, like: PyTree,
     return version, tree, meta
 
 
+def study_versions(ckpt_dir: str, study: str) -> list[int]:
+    """Committed snapshot versions of one study (empty if none)."""
+    return committed_steps(study_dir(ckpt_dir, study))
+
+
+def copy_study_version(src_dir: str, dst_dir: str, study: str,
+                       version: int) -> str:
+    """Copy ONE committed study snapshot between checkpoint stores —
+    the transport primitive of study migration between federation shards
+    (DESIGN.md §13).
+
+    Same all-or-nothing protocol as `save`: files land in a temp dir, the
+    COMMITTED marker is written last, and an atomic rename publishes the
+    version on the destination.  A fault mid-copy leaves the destination
+    without the version and never touches the source, so the migration
+    orchestrator can abort with the study fully intact on its source
+    shard."""
+    src = os.path.join(study_dir(src_dir, study), f"step_{version:09d}")
+    if not os.path.exists(os.path.join(src, _COMMIT)):
+        raise FileNotFoundError(
+            f"study {study!r} version {version} is not committed under "
+            f"{src_dir}")
+    dst_root = study_dir(dst_dir, study)
+    os.makedirs(dst_root, exist_ok=True)
+    final = os.path.join(dst_root, f"step_{version:09d}")
+    if os.path.exists(os.path.join(final, _COMMIT)):
+        return final  # a retried migration finds it already published
+    tmp = tempfile.mkdtemp(prefix=".tmp_migrate_", dir=dst_root)
+    try:
+        for name in os.listdir(src):
+            if name != _COMMIT:
+                shutil.copy2(os.path.join(src, name),
+                             os.path.join(tmp, name))
+        with open(os.path.join(tmp, _COMMIT), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)  # uncommitted debris from a prior crash
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
 def prune_studies(ckpt_dir: str, keep_from: dict[str, int]) -> None:
     """Drop per-study snapshot versions below each study's floor.
 

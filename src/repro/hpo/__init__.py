@@ -2,8 +2,11 @@
 multi-tenant StudyPool, and the async ask–tell StudyGateway — all sharing
 one batched suggest/absorb engine (DESIGN.md §7), optionally sharded over a
 device mesh via `repro.hpo.mesh` (DESIGN.md §8, `SchedulerConfig.mesh`);
-the gateway serving semantics are DESIGN.md §9."""
+the gateway serving semantics are DESIGN.md §9, and `FederatedGateway`
+shards the study population over N gateways with pipelined ticks
+(DESIGN.md §13)."""
 from repro.hpo.engine import StudyEngine
+from repro.hpo.federation import FederatedGateway, FederationConfig
 from repro.hpo.gateway import GatewayConfig, StudyGateway
 from repro.hpo.pool import SchedulerConfig, StudyPool, Trial
 from repro.hpo.scheduler import TrialScheduler
@@ -13,7 +16,8 @@ from repro.hpo.space import (LENET_SPACE, LM_SPACE, MIXED_DEMO_SPACE,
                              space_to_dicts)
 
 __all__ = [
-    "Categorical", "Conditional", "Dim", "Float", "GatewayConfig", "Int",
+    "Categorical", "Conditional", "Dim", "FederatedGateway",
+    "FederationConfig", "Float", "GatewayConfig", "Int",
     "LENET_SPACE", "LM_SPACE", "MIXED_DEMO_SPACE", "RESNET_SPACE",
     "SchedulerConfig", "SearchSpace", "StudyEngine", "StudyGateway",
     "StudyPool", "Trial", "TrialScheduler", "space_from_dicts",

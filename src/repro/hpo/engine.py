@@ -381,6 +381,15 @@ class StudyEngine:
         """All studies' conditioning-floor counters in one transfer."""
         return np.asarray(self.state.clamp_count)
 
+    def sync(self) -> None:
+        """Block until every dispatched program has committed to the state.
+
+        The pipelined serving layer (DESIGN.md §13) leaves fused rounds in
+        flight while the host stages the next tick; timing code and
+        migration/export paths call this to pin a quiescent point.
+        """
+        jax.block_until_ready(self._state)
+
     def study_state(self, study: int) -> gp_mod.LazyGPState:
         """Unstacked single-study view (static index)."""
         return gp_mod.unstack_state(self.state, study)
@@ -483,7 +492,12 @@ class StudyEngine:
         buffers donated (updated in place, not copied).
 
         The previous `self.state` is consumed by donation — callers must
-        not hold references to its buffers across this call.
+        not hold references to its buffers across this call.  Pipelined
+        callers (DESIGN.md §13) may defer fetching the RETURNED arrays —
+        those are fresh outputs, not donated — but any host read of
+        `self.state` leaves (or a copy taken for later, like the pool's
+        clamp vector) must be a new dispatch output, never a buffer that a
+        subsequent `advance` will donate.
         """
         flags = np.asarray(flags, bool)
         flagged = np.flatnonzero(flags)

@@ -76,6 +76,15 @@ class GatewayConfig:
     # explicit checkpoint() calls).  The pool's own per-absorb cadence is
     # disabled under a gateway: a bare pool snapshot has no gateway
     # registry and could shadow a restorable one.
+    pipeline: bool = True     # double-buffer the ticker (DESIGN.md §13):
+    # stage tick t+1's host-side gather/validation/dispatch while tick t's
+    # fused round is still in flight on the device, finishing t afterwards.
+    # Residency changes, q>1 asks, and checkpoints flush the pipeline first
+    # (they would otherwise race the donated dispatch); the staged device
+    # program stream is identical either way, so pipeline on/off produce
+    # bitwise-identical pool state for the same traffic trace
+    # (test-enforced).  Off = every tick is served start-to-finish like
+    # the sync tick().
 
 
 @dataclasses.dataclass
@@ -96,6 +105,30 @@ class _Logical:
     last_tick: int = 0        # LRU stamp
     version: int = 0          # eviction snapshot counter (monotonic)
     evicted_ever: bool = False
+
+
+@dataclasses.dataclass
+class _PendingTick:
+    """A staged-but-unfinished coalesced tick (pipelined serving, §13).
+
+    Holds everything `_tick_finish` needs to commit the round once the
+    in-flight device program materializes: the popped queues, the slot
+    placements, and the pool's pending round handle.
+    """
+
+    round: object                 # pool._PendingRound
+    tells: list                   # (sid, Trial, value) popped this tick
+    take: list                    # (sid, fut, q) being served this tick
+    events: list                  # (slot, Trial, value) placed tells
+    ask_slots: dict               # sid -> slot
+    deferred: int                 # asks that could not place (requeued)
+    t0: float
+    evictions: int
+    restores: int
+
+    @property
+    def size(self) -> int:
+        return len(self.take) + len(self.events)
 
 
 class StudyGateway:
@@ -154,6 +187,8 @@ class StudyGateway:
         self._restores_this_tick = 0
         self._evictions_this_tick = 0
         self._retry_absorb = False
+        self._pending: _PendingTick | None = None  # at most ONE staged
+        # tick in flight (depth-1 double buffering, DESIGN.md §13)
         # Tells that can never be absorbed (study at capacity) land here
         # instead of poisoning the queue forever; the trial records the
         # error.
@@ -161,12 +196,17 @@ class StudyGateway:
 
     # -- lifecycle ----------------------------------------------------------
     def create_study(self, space: SearchSpace | None = None,
-                     name: str | None = None) -> int:
+                     name: str | None = None, sid: int | None = None) -> int:
         """Register a logical study; no slot is claimed until its first ask.
 
         Random streams are seeded `cfg.seed + logical_id`, so two gateways
         with the same creation order serve identical suggestion streams
-        regardless of slot churn.
+        regardless of slot churn.  A federation front end passes an
+        explicit `sid` from its GLOBAL id space (DESIGN.md §13): shards
+        then seed by global identity, so WHERE a study is routed never
+        changes WHAT it is suggested — the single-pool-equivalence
+        contract.  Explicit sids must be fresh (never used or closed on
+        this shard).
         """
         space = space if space is not None else self._template_space
         if space.dim != self.pool.engine.gp_cfg.dim:
@@ -179,8 +219,11 @@ class StudyGateway:
                 "space has int/categorical dims but the gateway was built "
                 "without mixed-space closures; construct it with a mixed "
                 "template space or SchedulerConfig(mixed=True)")
-        sid = self._next_sid
-        self._next_sid += 1
+        if sid is None:
+            sid = self._next_sid
+        elif sid in self._studies or sid in self._closed_sids:
+            raise ValueError(f"study id {sid} already used on this gateway")
+        self._next_sid = max(self._next_sid, sid + 1)
         self._studies[sid] = _Logical(
             sid, name if name is not None else f"study{sid}", space,
             seed=self.cfg.seed + sid)
@@ -465,6 +508,115 @@ class StudyGateway:
         except GPCapacityError:
             return None
 
+    # -- federation support (DESIGN.md §13) ---------------------------------
+    def export_for_migration(self, sid: int) -> dict:
+        """Quiesce one study and hand back a portable registry record.
+
+        The study must be idle (nothing in flight or queued); if resident
+        it is evicted first, so its latest state sits in THIS gateway's
+        eviction store as a committed snapshot at `record["version"]`.
+        The federation front end then copies that snapshot to the
+        destination store (`checkpoint.copy_study_version`), adopts the
+        record there, and finally `detach_study` here — a fault anywhere
+        before the detach leaves the study fully intact on this shard.
+        """
+        self.tick_flush()
+        log = self._require(sid)
+        if log.inflight or log.pending_asks or log.pending_tells:
+            raise RuntimeError(
+                f"study {sid} has work in flight "
+                f"(inflight={log.inflight}, asks={log.pending_asks}, "
+                f"tells={log.pending_tells}); drain before migrating")
+        if log.slot is not None:
+            if self.pool.fantasy_active(log.slot):
+                raise RuntimeError(
+                    f"study {sid} has outstanding q-ask fantasies; their "
+                    "tells must arrive before it can migrate")
+            self._free.append(self._evict(log))
+        return {
+            "sid": log.sid, "name": log.name, "seed": log.seed,
+            "dims": space_to_dicts(log.space), "n_obs": log.n_obs,
+            "best_value": log.best_value, "version": log.version,
+            "evicted_ever": log.evicted_ever,
+            "key": self._study_key(log),
+        }
+
+    def adopt_study(self, record: dict, *,
+                    require_snapshot: bool = True) -> None:
+        """Register a study exported from another shard.
+
+        With `require_snapshot` (migration): the record's snapshot version
+        must already be committed in THIS gateway's eviction store, or the
+        adoption refuses — all-or-nothing, the source keeps the study.
+        Without it (crash-recovery reconcile, where the snapshot may have
+        lived only on the lost timeline): a missing snapshot degrades to a
+        fresh study — its uncommitted observations are lost, never
+        silently replayed."""
+        sid = int(record["sid"])
+        if sid in self._studies:
+            raise ValueError(f"study id {sid} already lives on this shard")
+        if sid in self._closed_sids:
+            raise ValueError(f"study id {sid} was closed on this shard")
+        space = space_from_dicts(record["dims"])
+        if space.dim != self.pool.engine.gp_cfg.dim:
+            raise ValueError(
+                f"space dim {space.dim} != gateway dim "
+                f"{self.pool.engine.gp_cfg.dim}")
+        if space.has_discrete and not self.pool.engine.mixed:
+            raise ValueError(
+                "record has int/categorical dims but this shard was built "
+                "without mixed-space closures")
+        log = _Logical(sid, record["name"], space, int(record["seed"]),
+                       n_obs=int(record["n_obs"]),
+                       best_value=record.get("best_value"),
+                       last_tick=self._tick_count,
+                       version=int(record["version"]),
+                       evicted_ever=bool(record["evicted_ever"]))
+        if log.evicted_ever and log.version not in \
+                ckpt_mod.study_versions(self.cfg.ckpt_dir,
+                                        self._study_key(log)):
+            if require_snapshot:
+                raise RuntimeError(
+                    f"study {sid} snapshot version {log.version} is not "
+                    f"committed under {self.cfg.ckpt_dir}; copy it before "
+                    "adopting (all-or-nothing migration)")
+            log.n_obs = 0
+            log.best_value = None
+            log.version = 0
+            log.evicted_ever = False
+        self._studies[sid] = log
+        self._next_sid = max(self._next_sid, sid + 1)
+        if self._wake is not None:
+            self._wake.set()
+
+    def detach_study(self, sid: int) -> None:
+        """Drop a migrated-away study from the registry WITHOUT a
+        tombstone: the sid stays globally valid (it lives on another shard
+        now, and may even migrate back).  This shard's copy of its
+        snapshots is reclaimed at the next checkpoint commit."""
+        log = self._require(sid)
+        if log.slot is not None or log.inflight or log.pending_asks \
+                or log.pending_tells:
+            raise RuntimeError(
+                f"study {sid} is not quiescent; export_for_migration first")
+        if log.evicted_ever:
+            self._closed_gc.append(self._study_key(log))
+        del self._studies[sid]
+
+    def expel_study(self, sid: int) -> None:
+        """Remove a study this shard no longer owns (federation restore
+        reconcile: the federation registry is newer than this shard's
+        restored one — the study closed or migrated away on a timeline
+        this shard lost).  Nothing is in flight after a restore, so this
+        is pure registry surgery; snapshot files are left for the owning
+        shard's GC."""
+        log = self._studies.pop(sid, None)
+        if log is None:
+            return
+        if log.slot is not None:
+            self._owner[log.slot] = None
+            self._free.append(log.slot)
+
     # -- the coalescing tick ------------------------------------------------
     def tick(self) -> int:
         """Serve one coalesced round synchronously; returns the number of
@@ -477,9 +629,54 @@ class StudyGateway:
         get a slot this tick (every slot pinned by in-flight work) stay
         queued and are retried when a tell frees a study; tells always
         place, or the tick fails without absorbing anything.
+
+        `tick()` == `_tick_stage()` + `_tick_finish()` back to back (no
+        overlap); the pipelined ticker drives the same two halves with one
+        staged tick left in flight (`tick_begin`/`tick_flush`, §13).
         """
-        self._restores_this_tick = 0
-        self._evictions_this_tick = 0
+        self.tick_flush()
+        staged = self._tick_stage()
+        if staged is None:
+            return 0
+        return self._tick_finish(staged)
+
+    def tick_begin(self) -> int:
+        """Stage one coalesced round, finishing the PREVIOUSLY staged one
+        after the new round's dispatch is issued — the pipelined tick:
+        while tick t runs on the device, the host pops/validates/places
+        tick t+1 and then commits t's results.  Returns the staged round's
+        size (asks taken + tells placed; 0 = nothing to stage).
+
+        Pipeline hazards flush first (inside `_tick_stage`): residency
+        changes and q>1 asks must not be staged over an in-flight round.
+        q-ask ticks are additionally barriers on their OWN finish — their
+        fused fantasy dispatches must run against this tick's posterior,
+        before any later round is staged.
+        """
+        staged = self._tick_stage()
+        if staged is None:
+            return 0
+        if any(q > 1 for _sid, _fut, q in staged.take):
+            # the residency/q hazard check already flushed the previous
+            # tick; finishing this one immediately keeps its ask_q
+            # dispatches ordered before the next staged round
+            self._tick_finish(staged)
+            return staged.size
+        prev, self._pending = self._pending, staged
+        if prev is not None:
+            self._tick_finish(prev)
+        return staged.size
+
+    def tick_flush(self) -> int:
+        """Finish the staged in-flight tick, if any (pipeline drain)."""
+        prev, self._pending = self._pending, None
+        if prev is None:
+            return 0
+        return self._tick_finish(prev)
+
+    def _tick_stage(self) -> _PendingTick | None:
+        """Pop the queues, place the involved studies, dispatch the fused
+        round — everything up to (but not including) materialization."""
         tells, self._tells = self._tells, []
         # one ask per study per tick; respect max_batch; keep queue order
         take: list[tuple[int, asyncio.Future | None, int]] = []
@@ -495,7 +692,27 @@ class StudyGateway:
                 take.append((sid, fut, q))
         self._asks = requeue
         if not tells and not take:
-            return 0
+            # nothing new to stage — let the in-flight tick (if any) land
+            self.tick_flush()
+            return None
+        if self._pending is not None and (
+                any(q > 1 for _sid, _fut, q in take)
+                or any(self._studies[sid].slot is None
+                       for sid, _fut, _q in take)
+                or any(self._studies[sid].slot is None
+                       for sid, _tr, _val in tells)):
+            # pipeline hazards (§13): residency changes re-rank the LRU and
+            # snapshot engine state, and q>1 asks append fantasy rows whose
+            # rollback bookkeeping the next round's staging reads — neither
+            # may overlap an unfinished tick.  Flush it first.
+            try:
+                self.tick_flush()
+            except BaseException:
+                self._tells = tells + self._tells
+                self._asks.extendleft(reversed(take))
+                raise
+        self._restores_this_tick = 0
+        self._evictions_this_tick = 0
         t0 = time.perf_counter()
         # Tells MUST place (their observation has nowhere else to go); their
         # pending counters pin them against the evictions they trigger.
@@ -540,10 +757,10 @@ class StudyGateway:
         self._asks.extendleft(reversed(deferred))
         take = served
         if not events and not take:
-            return 0
+            return None
         one_slots = sorted(ask_slots[sid] for sid, _f, q in take if q == 1)
         try:
-            suggestions = self.pool.advance_round(
+            round_ = self.pool.advance_round_begin(
                 events, t=1, studies=one_slots)
         except GPCapacityError as e:
             # advance_round capacity-checks the WHOLE round before mutating
@@ -557,28 +774,47 @@ class StudyGateway:
             # unexpected fault inside the fused dispatch (units are
             # validated at tell(), so this is an engine/runtime error):
             # observations must not vanish and clients must not hang.
-            # The pool flips a trial's status to "done" only AFTER its
-            # append committed to the GP, so requeue exactly the
-            # uncommitted tells — re-absorbing a committed one would
-            # silently duplicate its row — and settle the committed ones'
-            # counters here.  The tick's asks fail at their futures; the
-            # error propagates so the operator sees it.
-            requeue = []
-            for sid, tr, val in tells:
-                log = self._studies[sid]
-                if tr.status == "done":
-                    log.pending_tells -= 1
-                    log.n_obs += 1
-                    if tr.error is None and (log.best_value is None
-                                             or val > log.best_value):
-                        log.best_value = val
-                else:
-                    requeue.append((sid, tr, val))
-            self._tells = requeue + self._tells
-            for sid, fut, q in take:
-                self._studies[sid].pending_asks -= q
-                if fut is not None and not fut.done():
-                    fut.set_exception(e)
+            self._fail_tick(tells, take, e)
+            raise
+        return _PendingTick(round=round_, tells=tells, take=take,
+                            events=events, ask_slots=ask_slots,
+                            deferred=len(deferred), t0=t0,
+                            evictions=self._evictions_this_tick,
+                            restores=self._restores_this_tick)
+
+    def _fail_tick(self, tells, take, err) -> None:
+        """Settle a failed tick so observations don't vanish and clients
+        don't hang.  The pool flips a trial's status to "done" only AFTER
+        its append committed to the GP, so requeue exactly the uncommitted
+        tells — re-absorbing a committed one would silently duplicate its
+        row — and settle the committed ones' counters here.  The tick's
+        asks fail at their futures; the caller re-raises so the operator
+        sees the error."""
+        requeue = []
+        for sid, tr, val in tells:
+            log = self._studies[sid]
+            if tr.status == "done":
+                log.pending_tells -= 1
+                log.n_obs += 1
+                if tr.error is None and (log.best_value is None
+                                         or val > log.best_value):
+                    log.best_value = val
+            else:
+                requeue.append((sid, tr, val))
+        self._tells = requeue + self._tells
+        for sid, fut, q in take:
+            self._studies[sid].pending_asks -= q
+            if fut is not None and not fut.done():
+                fut.set_exception(err)
+
+    def _tick_finish(self, p: _PendingTick) -> int:
+        """Materialize a staged round and commit it: settle ledgers,
+        resolve futures, record telemetry, run the checkpoint cadence."""
+        tells, take, ask_slots = p.tells, p.take, p.ask_slots
+        try:
+            suggestions = p.round.finish()
+        except Exception as e:  # noqa: BLE001 — partitioned by status
+            self._fail_tick(tells, take, e)
             raise
         # q>1 asks: one fused qEI fantasy dispatch per study, issued after
         # the round so each batch conditions on this tick's absorbs.  A
@@ -592,7 +828,7 @@ class StudyGateway:
                 q_results[sid] = self.pool.ask_q(ask_slots[sid], q)
             except Exception as e:  # noqa: BLE001 — meted to the future
                 q_results[sid] = e
-        latency_ms = 1e3 * (time.perf_counter() - t0)
+        latency_ms = 1e3 * (time.perf_counter() - p.t0)
         self._tick_count += 1
         for sid, tr, val in tells:
             log = self._studies[sid]
@@ -644,19 +880,19 @@ class StudyGateway:
             "tick": self._tick_count,
             "width": len(take),
             "suggestions": n_suggested,
-            "absorbed": len(events),
-            "deferred": len(deferred),
+            "absorbed": len(p.events),
+            "deferred": p.deferred,
             "queued_after": len(self._asks),
             "latency_ms": latency_ms,
-            "evictions": self._evictions_this_tick,
-            "restores": self._restores_this_tick,
+            "evictions": p.evictions,
+            "restores": p.restores,
         })
         self._totals["asks_served"] += n_suggested
-        self._totals["absorbed"] += len(events)
+        self._totals["absorbed"] += len(p.events)
         if self.gw.ckpt_every_ticks and \
                 self._tick_count % self.gw.ckpt_every_ticks == 0:
             self.checkpoint()
-        return len(take) + len(events)
+        return p.size
 
     def _unwind_capacity_failure(self, tells, take, err) -> bool:
         """Rebuild the queues after an all-or-nothing capacity abort.
@@ -689,7 +925,7 @@ class StudyGateway:
         has died — its exception re-raises here).  Parks on the per-tick
         event instead of busy-polling: a waiter re-checks only after the
         ticker attempts a round (or exits)."""
-        while self._asks or self._tells or (
+        while self._asks or self._tells or self._pending is not None or (
                 self._wake is not None and self._wake.is_set()):
             if self._ticker is None:
                 break  # nothing will ever serve; sync callers drive tick()
@@ -701,7 +937,8 @@ class StudyGateway:
             self._tick_done.clear()
             # re-check after the clear: a tick that completed between the
             # loop condition and the clear must not be waited out
-            if not (self._asks or self._tells or self._wake.is_set()):
+            if not (self._asks or self._tells or self._wake.is_set()
+                    or self._pending is not None):
                 break
             await self._tick_done.wait()
 
@@ -729,20 +966,47 @@ class StudyGateway:
                 progressed = 0
                 self._retry_absorb = False
                 try:
-                    progressed = self.tick()
+                    if self.gw.pipeline:
+                        progressed = self.tick_begin()
+                        if progressed and self._pending is not None:
+                            # one cooperative yield: clients woken by the
+                            # round that just finished enqueue NOW, so the
+                            # next begin can stage them while this round is
+                            # still in flight — without it the staged round
+                            # always drains at the tail below and nothing
+                            # ever overlaps
+                            await asyncio.sleep(0)
+                        if self._pending is not None and not (
+                                self._asks or self._tells):
+                            # pipeline tail: no new traffic arrived — land
+                            # the staged round so its clients aren't parked
+                            # behind an idle gateway
+                            progressed += self.tick_flush()
+                            await asyncio.sleep(0)
+                    else:
+                        progressed = self.tick()
                 except GPCapacityError:
                     # already meted out to the affected futures/queues;
                     # retry once when absorbable tells were requeued (their
-                    # round is guaranteed to fit now)
+                    # round is guaranteed to fit now).  A staged tick can't
+                    # be the raiser (capacity is checked at stage), but it
+                    # must still land or its clients park forever.
+                    if self._pending is not None:
+                        self.tick_flush()
                     if self._retry_absorb:
                         self._wake.set()
                 except Exception as e:
-                    # non-capacity fault (e.g. eviction-store IO): tick()
+                    # non-capacity fault (e.g. eviction-store IO): the tick
                     # requeued everything untouched, but dying silently
                     # would park every client awaiting ask() forever —
                     # fail their futures loudly instead.  Tells stay
                     # queued (observations are never dropped); the next
                     # ask() re-creates the ticker and retries them.
+                    if self._pending is not None:
+                        try:
+                            self.tick_flush()
+                        except Exception:  # noqa: BLE001 — already failing
+                            pass
                     while self._asks:
                         sid, fut, q = self._asks.popleft()
                         self._studies[sid].pending_asks -= q
@@ -772,6 +1036,7 @@ class StudyGateway:
                 await self._ticker
             except asyncio.CancelledError:
                 pass
+        self.tick_flush()  # land any round the ticker left in flight
         for sid, fut, q in self._asks:
             if fut is not None and not fut.done():
                 fut.cancel()
@@ -844,6 +1109,10 @@ class StudyGateway:
         never replays a pre-crash batch.  Fantasy rows never reach disk:
         `pool.checkpoint` rolls every fantasy-active slot back to real
         observations before snapshotting and re-fantasizes after."""
+        # a staged tick is half-committed state: land it before snapshotting
+        # (no-op when the cadence fires from _tick_finish — the pending
+        # record was popped before finish ran)
+        self.tick_flush()
         self._sync_fantasy_totals()
         registry = {
             "next_sid": self._next_sid,
@@ -867,8 +1136,13 @@ class StudyGateway:
                 self._study_key(log): log.version
                 for log in self._studies.values() if log.evicted_ever})
             # studies closed since the last commit are now unreferenced by
-            # any restorable registry — their snapshot dirs can go
-            ckpt_mod.drop_studies(self.cfg.ckpt_dir, self._closed_gc)
+            # any restorable registry — their snapshot dirs can go.  A key
+            # that came BACK (study migrated away and returned before this
+            # commit) is live again and must keep its files.
+            live = {self._study_key(log) for log in self._studies.values()}
+            ckpt_mod.drop_studies(self.cfg.ckpt_dir,
+                                  [k for k in self._closed_gc
+                                   if k not in live])
             self._closed_gc = []
         return path
 
@@ -879,6 +1153,7 @@ class StudyGateway:
         state, ledgers, PRNG streams, slot map, and LRU/eviction bookkeeping
         come back exactly as checkpointed.
         """
+        self.tick_flush()  # resolve any staged round on the old timeline
         if not self.pool.restore():
             return False
         meta = self.pool.last_restore_meta or {}

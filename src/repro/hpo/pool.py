@@ -112,6 +112,72 @@ def _trial_from_dict(t: dict) -> Trial:
                  t.get("clamp_count"))
 
 
+def _materialize(x) -> np.ndarray:
+    """Host fetch of a staged round's device outputs.
+
+    Module-level so fault tests can inject a device-side failure at the
+    materialization boundary — the point where a pipelined tick's in-flight
+    runtime error actually surfaces to the host.
+    """
+    return np.asarray(x)
+
+
+class _PendingRound:
+    """A dispatched-but-unmaterialized fused serving round.
+
+    `advance_round(...)` == `advance_round_begin(...).finish()`.  Every
+    device dispatch is ISSUED at begin time in exactly the serial order
+    (fantasy rollback, overflow drain, fused advance, clamp copy,
+    refantasize), so the device program stream — and therefore the final
+    state bits — are identical whether or not the host defers `finish()`.
+    `finish()` only does host work: materialize the suggestions, flip the
+    absorbed trials' ledger status, and mint the ledger Trial objects.
+
+    The pending record holds ONLY fresh dispatch outputs (`units`, a
+    copied clamp vector) — never a reference into `engine.state`, whose
+    buffers the NEXT staged round consumes by donation.
+    """
+
+    __slots__ = ("_pool", "_first", "_ids", "_need_seed", "_t",
+                 "_units", "_clamps", "_finished")
+
+    def __init__(self, pool: "StudyPool", first: dict, ids: list,
+                 need_seed: set, t: int, units, clamps):
+        self._pool = pool
+        self._first = first
+        self._ids = ids
+        self._need_seed = need_seed
+        self._t = t
+        self._units = units
+        self._clamps = clamps
+        self._finished = False
+
+    def finish(self) -> dict[int, list[Trial]]:
+        """Materialize the round: commit ledger flips, mint suggestions."""
+        if self._finished:
+            raise RuntimeError("pending round already finished")
+        self._finished = True
+        pool = self._pool
+        units = None if self._units is None else _materialize(self._units)
+        if self._first:
+            clamps = np.asarray(self._clamps)
+            # "done" only after the fused round committed (see absorb())
+            for sid, (tr, val) in self._first.items():
+                tr.status = "done"
+                tr.value = float(val)
+                tr.finished = time.time()
+                tr.clamp_count = int(clamps[sid])
+            pool._n_done += len(self._first)
+        out: dict[int, list[Trial]] = {}
+        for s in self._ids:
+            if s in self._need_seed:
+                out[s] = pool.seed_trials(s, self._t)
+            else:
+                out[s] = [pool._make_trial(s, u) for u in units[s]]
+        pool._maybe_checkpoint()
+        return out
+
+
 @dataclasses.dataclass
 class StudyHandle:
     """Host-side per-tenant record: ledger, id counter, PRNG streams."""
@@ -365,33 +431,42 @@ class StudyPool:
                 out[s] = self.seed_trials(s, t)
         return out
 
-    def advance_round(self, events: Sequence[tuple[int, Trial, float]],
-                      t: int = 1,
-                      studies: Sequence[int] | None = None
-                      ) -> dict[int, list[Trial]]:
-        """Fused serving round: absorb completions + suggest in ONE dispatch.
+    def advance_round_begin(self,
+                            events: Sequence[tuple[int, Trial, float]],
+                            t: int = 1,
+                            studies: Sequence[int] | None = None
+                            ) -> _PendingRound:
+        """Stage a fused serving round: dispatch everything, defer commits.
 
-        The hot path of a request-driven service (`examples/hpo_service.py`,
-        `benchmarks/bench_shard.py`): one jitted program absorbs at most
-        one completed trial per study and suggests the next t points from
-        the updated posteriors (state buffers donated — no copy of the
-        stacked factors per round).  Suggestions are materialized as ledger
-        trials only for `studies` (default all) — e.g. tenants that hit
-        their budget absorb results without drawing new trials.  Events
-        beyond one per study fall back to an `absorb_many` drain first;
-        studies still empty after the absorb get host-side seed trials
-        instead of their EI lane's output, exactly like `suggest_all`.
-        Rounds with nothing to absorb skip the absorb half and delegate to
-        `suggest_all`; rounds with nobody to suggest for delegate to
-        `absorb_many`.
+        Issues the round's whole device program stream (fantasy rollback,
+        overflow drain, fused donated advance, refantasize) in the serial
+        order and returns a `_PendingRound` whose `finish()` performs the
+        host-side half — materialize suggestions, flip told trials to
+        "done", mint ledger Trials.  The pipelined gateway stages tick t+1
+        while tick t's program is still in flight on the device; calling
+        `finish()` immediately is exactly `advance_round`.
+
+        All-or-nothing guards run at STAGE time: a capacity error raises
+        here with no ledger or buffer mutated (beyond the fantasy rollback,
+        which is bitwise-restorable by re-fantasizing).  Once staged, the
+        only failure left is a device runtime fault, which surfaces at
+        `finish()` before any ledger flip.
         """
         ids = list(studies) if studies is not None else \
             list(range(self.n_studies))
         if not events:
-            return self.suggest_all(t=t, studies=ids)
+            # deferred suggest_all: same stream staging and seed routing,
+            # with the materialization/minting left to finish()
+            need_ei = sorted(s for s in ids if self.engine.n(s) > 0)
+            units = None
+            if need_ei:
+                units = self.engine.suggest_all(self._staged_keys(need_ei),
+                                                top_t=t)[0]
+            return _PendingRound(self, {}, ids, set(ids) - set(need_ei),
+                                 t, units, None)
         if not ids:
             self.absorb_many(events)
-            return {}
+            return _PendingRound(self, {}, [], set(), t, None, None)
         first: dict[int, tuple[Trial, float]] = {}
         overflow = []
         for sid, tr, val in events:
@@ -422,24 +497,37 @@ class StudyPool:
         ei_ids = [s for s in ids if s not in need_seed]
         units, _ = self.engine.advance(flags, xs, ys,
                                        self._staged_keys(ei_ids), top_t=t)
-        units = np.asarray(units)
-        clamps = self.engine.clamp_counts()       # one transfer for all S
-        # "done" only after the fused round committed (see absorb())
-        for sid, (tr, val) in first.items():
-            tr.status = "done"
-            tr.value = float(val)
-            tr.finished = time.time()
-            tr.clamp_count = int(clamps[sid])
-        self._n_done += len(first)
-        out: dict[int, list[Trial]] = {}
-        for s in ids:
-            if s in need_seed:
-                out[s] = self.seed_trials(s, t)
-            else:
-                out[s] = [self._make_trial(s, u) for u in units[s]]
+        # Clamp telemetry is copied into a FRESH device array before the
+        # refantasize (serial read point) — holding `state.clamp_count`
+        # itself would break when the next staged round donates it.
+        clamps = self.engine.state.clamp_count + 0
         self._refantasize_pending(first.keys())
-        self._maybe_checkpoint()
-        return out
+        return _PendingRound(self, first, ids, need_seed, t, units, clamps)
+
+    def advance_round(self, events: Sequence[tuple[int, Trial, float]],
+                      t: int = 1,
+                      studies: Sequence[int] | None = None
+                      ) -> dict[int, list[Trial]]:
+        """Fused serving round: absorb completions + suggest in ONE dispatch.
+
+        The hot path of a request-driven service (`examples/hpo_service.py`,
+        `benchmarks/bench_shard.py`): one jitted program absorbs at most
+        one completed trial per study and suggests the next t points from
+        the updated posteriors (state buffers donated — no copy of the
+        stacked factors per round).  Suggestions are materialized as ledger
+        trials only for `studies` (default all) — e.g. tenants that hit
+        their budget absorb results without drawing new trials.  Events
+        beyond one per study fall back to an `absorb_many` drain first;
+        studies still empty after the absorb get host-side seed trials
+        instead of their EI lane's output, exactly like `suggest_all`.
+        Rounds with nothing to absorb skip the absorb half and delegate to
+        `suggest_all`; rounds with nobody to suggest for delegate to
+        `absorb_many`.
+
+        Implemented as `advance_round_begin(...).finish()` — the pipelined
+        gateway (DESIGN.md §13) drives the two halves separately.
+        """
+        return self.advance_round_begin(events, t=t, studies=studies).finish()
 
     # -- absorb -------------------------------------------------------------
     def absorb(self, study_id: int, trial: Trial, value: float) -> None:

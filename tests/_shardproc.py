@@ -1,0 +1,58 @@
+"""Cross-process shard worker: hosts one StudyGateway over a
+multiprocessing Pipe so the fault suite can SIGKILL a real shard process
+mid-traffic and restart a fresh one over the same checkpoint store
+(DESIGN.md §13; the in-process analogue is
+`FederatedGateway.kill_shard`/`revive_shard`).
+
+Protocol — one request tuple in, one response tuple out:
+
+  ("create", name)  -> ("ok", sid)
+  ("round", sid)    -> ("ok", unit)    # ask -> tell(objective) -> drain
+  ("checkpoint",)   -> ("ok", None)    # quiescent epoch commit
+  ("info", sid)     -> ("ok", study_info dict)
+  ("close",)        -> ("ok", None), then the process exits cleanly
+
+The worker sends ("ready", restored) once its gateway is up; `restored`
+reports whether a previous incarnation's epoch was found in the store.
+The parent never shuts the worker down on the crash path — that is the
+point: it SIGKILLs the pid and restarts over the same directory.
+"""
+import numpy as np
+
+
+def shard_main(conn, ckpt_dir, slots=2, n_max=24):
+    import asyncio
+
+    # tests/ rides sys.path into the spawned child (multiprocessing
+    # forwards the parent's sys.path), so the shared helpers resolve
+    from _traffic import make_cfg, objective
+    from repro.hpo import GatewayConfig, StudyGateway
+    from repro.hpo.space import RESNET_SPACE
+
+    async def serve():
+        gw = StudyGateway(RESNET_SPACE, make_cfg(ckpt_dir, n_max=n_max),
+                          GatewayConfig(slots=slots))
+        conn.send(("ready", gw.restore()))
+        while True:
+            cmd, *args = conn.recv()
+            if cmd == "create":
+                conn.send(("ok", gw.create_study(name=args[0])))
+            elif cmd == "round":
+                sid = args[0]
+                tr = await gw.ask(sid)
+                gw.tell(sid, tr, objective(sid, tr.unit))
+                await gw.drain()
+                conn.send(("ok", tuple(np.asarray(tr.unit).tolist())))
+            elif cmd == "checkpoint":
+                gw.checkpoint()
+                conn.send(("ok", None))
+            elif cmd == "info":
+                conn.send(("ok", gw.study_info(args[0])))
+            elif cmd == "close":
+                await gw.aclose()
+                conn.send(("ok", None))
+                return
+            else:
+                conn.send(("err", f"unknown command {cmd!r}"))
+
+    asyncio.run(serve())

@@ -1,0 +1,113 @@
+"""Shared traffic-generation + twin-comparison helpers for the gateway
+fault/soak suites (deduplicated out of tests/test_faults.py and
+tests/test_soak.py; the federation suites reuse them unchanged — a
+`FederatedGateway` exposes the same ask/tell/drain surface).
+
+Everything here is deterministic: objectives are pure functions of
+(sid, unit), traces are seeded, and the comparisons are bitwise — the
+suites assert exact equivalence between runs, never approximate.
+"""
+import asyncio
+
+import numpy as np
+
+from repro.core.acquisition import AcqConfig
+from repro.hpo import SchedulerConfig
+from repro.hpo.pool import Trial
+
+
+def make_cfg(d, n_max=16, **kw):
+    """Small-budget SchedulerConfig for fast fault/soak tests (the pool's
+    own per-absorb snapshot cadence off unless a test asks)."""
+    kw.setdefault("acq", AcqConfig(restarts=8, ascent_steps=4))
+    kw.setdefault("ckpt_every", 10_000)
+    kw.setdefault("seed", 0)
+    return SchedulerConfig(n_max=n_max, ckpt_dir=d, **kw)
+
+
+def objective(sid, unit):
+    """Deterministic per-study objective (optimum seeded by sid)."""
+    c = 0.15 + 0.7 * ((sid * 0.37) % 1.0)
+    return float(-np.sum((np.asarray(unit) - c) ** 2))
+
+
+def foreign_trial(unit) -> Trial:
+    """An observation told out-of-band (never asked) — the injection
+    vector for capacity faults the ask-side admission cannot see, and the
+    future-less tell used by synchronous tick scripts."""
+    return Trial(10_000, np.asarray(unit, np.float32), {})
+
+
+def slot_bytes(pool, slot: int) -> dict:
+    """Every leaf of one slot's GP state as raw bytes — the comparison is
+    BITWISE, not approximate: rollback/restore/migration must leave no
+    float dust behind."""
+    import jax
+    st = pool.engine.study_state(slot)
+    return {jax.tree_util.keystr(path): np.asarray(leaf).tobytes()
+            for path, leaf in jax.tree_util.tree_flatten_with_path(st)[0]}
+
+
+def assert_slots_equal(pool_a, slot_a, pool_b, slot_b, ctx=""):
+    a, b = slot_bytes(pool_a, slot_a), slot_bytes(pool_b, slot_b)
+    assert a.keys() == b.keys()
+    for leaf in a:
+        assert a[leaf] == b[leaf], f"{leaf} differs {ctx}".rstrip()
+
+
+def assert_streams_identical(a, b):
+    """Two {sid: [unit, ...]} suggestion traces must match bitwise."""
+    assert set(a) == set(b)
+    for s in a:
+        assert len(a[s]) == len(b[s]), \
+            f"study {s}: {len(a[s])} vs {len(b[s])} suggestions"
+        for k, (x, y) in enumerate(zip(a[s], b[s])):
+            assert np.array_equal(x, y), \
+                f"study {s} suggestion {k} diverged: {x} vs {y}"
+
+
+async def run_traffic(gw, sids, rounds, *, streams=None, traffic_seed=7,
+                      p_ask=0.6, on_round=None):
+    """Seeded random ask→tell traffic; returns ({sid: [unit, ...]}, gw).
+
+    Each round a random subset of `sids` asks concurrently (the asks
+    coalesce; with fewer slots than studies they churn the LRU), tells
+    its objective value back, and the gateway drains.  `on_round(r, gw)`
+    — an async hook called after each round's drain — injects restarts,
+    shard kills, migrations, or checkpoints; returning a gateway swaps
+    the one being driven (restart-style harnesses).  Works for
+    StudyGateway and FederatedGateway alike.
+    """
+    streams = {s: [] for s in sids} if streams is None else streams
+    rng = np.random.default_rng(traffic_seed)
+
+    async def one(s):
+        # ask→tell per client task: tells free slots for the asks the
+        # tick deferred, so an active set wider than the slot count drains
+        tr = await gw.ask(s)
+        streams[s].append(np.asarray(tr.unit).copy())
+        gw.tell(s, tr, objective(s, tr.unit))
+
+    for r in range(rounds):
+        active = [s for s in sids if rng.random() < p_ask]
+        if active:
+            await asyncio.gather(*(one(s) for s in active))
+            await gw.drain()
+        if on_round is not None:
+            swapped = await on_round(r, gw)
+            if swapped is not None:
+                gw = swapped
+    return streams, gw
+
+
+async def drive_serial(gw, sids, rounds, streams=None):
+    """One ask→tell→drain at a time, every study every round — the fully
+    serialized trace the kill/restore equivalence tests replay."""
+    streams = {s: [] for s in sids} if streams is None else streams
+    for _ in range(rounds):
+        for s in sids:
+            tr = await gw.ask(s)
+            streams[s].append(tuple(np.asarray(tr.unit).tolist()))
+            gw.tell(s, tr, objective(s, tr.unit))
+            await gw.drain()
+    return streams

@@ -1,37 +1,29 @@
-"""Fault-injection suite for StudyPool + StudyGateway: trials raising
-mid-round, capacity overflow mid-drain, checkpoint/eviction write failures,
-and kill/restore — asserting the all-or-nothing absorb contract and that
-recovery never replays a pre-crash batch (DESIGN.md §9)."""
+"""Fault-injection suite for StudyPool + StudyGateway + the federation:
+trials raising mid-round, capacity overflow mid-drain, checkpoint/eviction
+write failures, kill/restore, shard crashes (in-process AND real SIGKILLed
+processes via tests/_shardproc.py), and migration IO faults — asserting
+the all-or-nothing contracts and that recovery never replays a pre-crash
+batch (DESIGN.md §9, §13).  Shared helpers live in tests/_traffic.py."""
 import asyncio
 import os
+import signal
 import tempfile
 
 import numpy as np
 import pytest
 
+from _traffic import assert_slots_equal, assert_streams_identical, \
+    drive_serial
+from _traffic import foreign_trial as _foreign_trial
+from _traffic import make_cfg as _cfg
+from _traffic import objective as obj
+from _traffic import slot_bytes as _slot_bytes
 from repro import checkpoint as ckpt_mod
 from repro.checkpoint import store as store_mod
 from repro.core import GPCapacityError
-from repro.core.acquisition import AcqConfig
-from repro.hpo import GatewayConfig, SchedulerConfig, StudyGateway, StudyPool
-from repro.hpo.pool import Trial
+from repro.hpo import (FederatedGateway, FederationConfig, GatewayConfig,
+                       StudyGateway, StudyPool)
 from repro.hpo.space import RESNET_SPACE
-
-
-def _cfg(d, n_max=16, **kw):
-    kw.setdefault("acq", AcqConfig(restarts=8, ascent_steps=4))
-    kw.setdefault("ckpt_every", 10_000)
-    return SchedulerConfig(n_max=n_max, seed=0, ckpt_dir=d, **kw)
-
-
-def obj(sid, unit):
-    return float(-np.sum((np.asarray(unit) - 0.2 - 0.12 * sid) ** 2))
-
-
-def _foreign_trial(unit) -> Trial:
-    """An observation told out-of-band (never asked) — the injection vector
-    for capacity faults the ask-side admission cannot see."""
-    return Trial(10_000, np.asarray(unit, np.float32), {})
 
 
 # ---------------------------------------------------------------------------
@@ -393,15 +385,6 @@ def test_pool_kill_mid_round_restores_to_last_commit():
 # ---------------------------------------------------------------------------
 # qEI fantasy rollback exactness (DESIGN.md §12)
 # ---------------------------------------------------------------------------
-def _slot_bytes(pool, slot: int) -> dict:
-    """Every leaf of one slot's GP state as raw bytes — the comparison is
-    BITWISE, not approximate: rollback must leave no float dust behind."""
-    import jax
-    st = pool.engine.study_state(slot)
-    return {jax.tree_util.keystr(path): np.asarray(leaf).tobytes()
-            for path, leaf in jax.tree_util.tree_flatten_with_path(st)[0]}
-
-
 def _twin_pools(d1, d2, n_max=48):
     pa = StudyPool([RESNET_SPACE], _cfg(d1, n_max=n_max))
     pb = StudyPool([RESNET_SPACE], _cfg(d2, n_max=n_max))
@@ -582,3 +565,228 @@ def test_failed_q_trial_releases_its_fantasy_row():
         await gw.aclose()
     with tempfile.TemporaryDirectory() as d:
         asyncio.run(main(d))
+
+
+# ---------------------------------------------------------------------------
+# Federation: shard crashes and migration faults (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def _mk_fed(root, n_shards=2, slots=2, n_max=24):
+    return FederatedGateway(RESNET_SPACE, _cfg(root, n_max=n_max),
+                            GatewayConfig(slots=slots),
+                            FederationConfig(n_shards=n_shards))
+
+
+def test_fed_shard_kill_restore_keeps_committed_loses_uncommitted():
+    """Kill one shard mid-traffic (no checkpoint at the crash): revive
+    restores it from ITS latest epoch — every committed tell survives, the
+    uncommitted round is gone, and NOTHING pre-crash is ever replayed (the
+    lost round re-derives bitwise from the persisted PRNG streams).  The
+    surviving shard keeps its uncommitted work untouched."""
+    async def main(root):
+        fg = _mk_fed(root)
+        sids = [fg.create_study(name=f"s{i}") for i in range(4)]
+        by_shard = {i: [s for s in sids if fg.shard_of(s) == i]
+                    for i in (0, 1)}
+        assert by_shard[0] and by_shard[1]   # the ring populated both
+        victim = 0
+        pre = await drive_serial(fg, sids, 2)
+        fg.checkpoint()                      # epoch: 2 obs/study committed
+        lost = await drive_serial(fg, sids, 1)
+        fg.kill_shard(victim)
+        fg.revive_shard(victim)
+        for s in sids:
+            n = fg.study_info(s)["n_obs"]
+            assert n == (2 if fg.shard_of(s) == victim else 3), \
+                f"study {s}: {n} obs after revive"
+        post = await drive_serial(fg, sids, 2)
+        for s in sids:
+            assert set(pre[s]).isdisjoint(post[s]), \
+                "revived shard replayed a pre-crash suggestion"
+            if fg.shard_of(s) == victim:
+                # the lost round re-derives exactly from the epoch's PRNG
+                assert post[s][0] == lost[s][0]
+            else:
+                assert set(lost[s]).isdisjoint(post[s])
+        await fg.aclose()
+    with tempfile.TemporaryDirectory() as root:
+        asyncio.run(main(root))
+
+
+def test_fed_shard_kill_cancels_parked_asks():
+    """A crash severs parked clients: their futures cancel instead of
+    hanging forever, and the revived shard serves fresh asks."""
+    async def main(root):
+        fg = _mk_fed(root)
+        sids = [fg.create_study(name=f"s{i}") for i in range(4)]
+        victim_sid = next(s for s in sids if fg.shard_of(s) == 0)
+        await drive_serial(fg, [victim_sid], 1)
+        fg.checkpoint()
+        fut = asyncio.ensure_future(fg.ask(victim_sid))
+        await asyncio.sleep(0)               # parked, tick not yet run
+        fg.kill_shard(0)
+        with pytest.raises(asyncio.CancelledError):
+            await fut
+        fg.revive_shard(0)
+        tr = await fg.ask(victim_sid)
+        fg.tell(victim_sid, tr, obj(victim_sid, tr.unit))
+        await fg.drain()
+        assert fg.study_info(victim_sid)["n_obs"] == 2
+        await fg.aclose()
+    with tempfile.TemporaryDirectory() as root:
+        asyncio.run(main(root))
+
+
+def test_fed_migration_io_fault_is_all_or_nothing(monkeypatch):
+    """A migration whose snapshot copy dies mid-transfer must leave the
+    study fully intact on its SOURCE shard — still owned, still servable,
+    bitwise the state of an unmigrated twin — and leave no committed (or
+    half-copied) version on the destination."""
+    async def main(d_a, d_b):
+        fa, fb = _mk_fed(d_a), _mk_fed(d_b)
+        sids = [fa.create_study(name=f"s{i}") for i in range(2)]
+        for s in sids:
+            assert fb.create_study(name=f"s{s}") == s
+        streams_a = await drive_serial(fa, sids, 2)
+        streams_b = await drive_serial(fb, sids, 2)
+        sid = sids[0]
+        src = fa.shard_of(sid)
+        dst = 1 - src
+
+        def boom(*a, **k):
+            raise OSError("migration link down")
+        monkeypatch.setattr(store_mod.shutil, "copy2", boom)
+        with pytest.raises(OSError, match="migration link down"):
+            fa.migrate_study(sid, dst)
+        monkeypatch.undo()
+        # still owned by the source; the destination saw nothing durable
+        assert fa.shard_of(sid) == src
+        src_gw, dst_gw = fa.shards[src], fa.shards[dst]
+        key = src_gw._study_key(src_gw._studies[sid])
+        assert not ckpt_mod.study_versions(dst_gw.cfg.ckpt_dir, key)
+        sdir = store_mod.study_dir(dst_gw.cfg.ckpt_dir, key)
+        if os.path.exists(sdir):
+            assert not [f for f in os.listdir(sdir)
+                        if f.startswith(".tmp_migrate_")], \
+                "aborted migration left debris on the destination"
+        # the study keeps serving from the source, identically to the twin
+        # federation that never attempted the migration
+        await drive_serial(fa, sids, 2, streams=streams_a)
+        await drive_serial(fb, sids, 2, streams=streams_b)
+        assert_streams_identical(streams_a, streams_b)
+        la = fa.shards[src]._studies[sid]
+        lb = fb.shards[src]._studies[sid]
+        assert la.slot is not None and lb.slot is not None
+        assert_slots_equal(fa.shards[src].pool, la.slot,
+                           fb.shards[src].pool, lb.slot,
+                           ctx="after aborted migration")
+        await fa.aclose()
+        await fb.aclose()
+    with tempfile.TemporaryDirectory() as d_a, \
+            tempfile.TemporaryDirectory() as d_b:
+        asyncio.run(main(d_a, d_b))
+
+
+def test_fed_retried_migration_succeeds_after_io_fault(monkeypatch):
+    """The abort is recoverable: once the link is back, retrying the SAME
+    migration completes and the study serves from the destination with its
+    ledger intact."""
+    async def main(root):
+        fg = _mk_fed(root)
+        sids = [fg.create_study(name=f"s{i}") for i in range(2)]
+        await drive_serial(fg, sids, 2)
+        sid = sids[0]
+        src = fg.shard_of(sid)
+        dst = 1 - src
+
+        def boom(*a, **k):
+            raise OSError("migration link down")
+        monkeypatch.setattr(store_mod.shutil, "copy2", boom)
+        with pytest.raises(OSError):
+            fg.migrate_study(sid, dst)
+        monkeypatch.undo()
+        fg.migrate_study(sid, dst)           # retry on a healthy link
+        assert fg.shard_of(sid) == dst
+        info = fg.study_info(sid)
+        assert info["n_obs"] == 2 and info["shard"] == dst
+        post = await drive_serial(fg, [sid], 1)
+        assert len(post[sid]) == 1
+        await fg.aclose()
+    with tempfile.TemporaryDirectory() as root:
+        asyncio.run(main(root))
+
+
+# ---------------------------------------------------------------------------
+# Cross-process shard crash: a real SIGKILL via tests/_shardproc.py
+# ---------------------------------------------------------------------------
+def _spawn_shard(d, ctx):
+    import _shardproc
+    parent, child = ctx.Pipe()
+    p = ctx.Process(target=_shardproc.shard_main, args=(child, d),
+                    daemon=True)
+    p.start()
+    child.close()
+    tag, restored = parent.recv()
+    assert tag == "ready"
+    return p, parent, restored
+
+
+def _rpc(conn, *msg):
+    conn.send(msg)
+    tag, val = conn.recv()
+    assert tag == "ok", val
+    return val
+
+
+def test_crossproc_shard_sigkill_restores_from_epoch():
+    """Two real shard PROCESSES over one federation root.  SIGKILL one
+    mid-traffic: the survivor never notices, and a fresh process started
+    over the dead shard's store restores from its epoch — committed tells
+    survive, nothing pre-crash replays, and the round the crash destroyed
+    re-derives bitwise (the in-process analogue is
+    FederatedGateway.kill_shard/revive_shard)."""
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")
+    with tempfile.TemporaryDirectory() as root:
+        d0 = os.path.join(root, "shard-0")
+        d1 = os.path.join(root, "shard-1")
+        p0, c0, restored = _spawn_shard(d0, ctx)
+        assert not restored
+        p1, c1, _ = _spawn_shard(d1, ctx)
+        s0a = _rpc(c0, "create", "a")
+        s0b = _rpc(c0, "create", "b")
+        s1a = _rpc(c1, "create", "c")
+        pre = {s: [] for s in (s0a, s0b)}
+        for _ in range(2):
+            for s in pre:
+                pre[s].append(_rpc(c0, "round", s))
+            _rpc(c1, "round", s1a)
+        _rpc(c0, "checkpoint")
+        _rpc(c1, "checkpoint")
+        lost = {s: _rpc(c0, "round", s) for s in pre}
+        _rpc(c1, "round", s1a)               # survivor's round 3 (kept)
+
+        os.kill(p0.pid, signal.SIGKILL)      # the real thing
+        p0.join(timeout=30)
+        assert p0.exitcode is not None
+        c0.close()
+
+        # the survivor is undisturbed mid-crash
+        _rpc(c1, "round", s1a)
+        assert _rpc(c1, "info", s1a)["n_obs"] == 4
+
+        # restart over the SAME store: epoch restore, not a fresh shard
+        p0b, c0b, restored = _spawn_shard(d0, ctx)
+        assert restored
+        for s in pre:
+            assert _rpc(c0b, "info", s)["n_obs"] == 2, \
+                "a committed tell was lost in the crash"
+        post = {s: [_rpc(c0b, "round", s) for _ in range(2)] for s in pre}
+        for s in pre:
+            assert set(pre[s]).isdisjoint(post[s]), \
+                "restarted shard replayed a pre-crash suggestion"
+            assert post[s][0] == lost[s], \
+                "the crashed round did not re-derive from the epoch's PRNG"
+        _rpc(c0b, "close")
+        _rpc(c1, "close")
+        p0b.join(timeout=30)
+        p1.join(timeout=30)

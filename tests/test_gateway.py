@@ -602,3 +602,181 @@ def test_q_telemetry_persists_across_checkpoint_restore():
         await gw2.aclose()
     with tempfile.TemporaryDirectory() as d:
         asyncio.run(main(d))
+
+
+# ---------------------------------------------------------------------------
+# Pipelined ticks: on/off bitwise equivalence + in-flight faults (§13)
+# ---------------------------------------------------------------------------
+def _enq(gw, loop, sid, q=1):
+    """White-box ask enqueue (no ticker): the returned future resolves when
+    a manual tick_begin/tick_flush finishes the tick that served it."""
+    fut = loop.create_future()
+    gw._studies[sid].pending_asks += q
+    gw._asks.append((sid, fut, q))
+    return fut
+
+
+async def _scripted_run(d, pipelined, rounds=10):
+    """One deterministic TRACE — rotating 2-study ask subsets over 4
+    studies on 2 slots (eviction churn every round), a q=3 fantasy batch
+    every third round — driven by tick_begin() when pipelined, plain
+    tick() otherwise.  The trace is fixed by ENQUEUE round, not by future
+    resolution time: a trial asked at round r is told at the start of
+    round r+2 in BOTH modes (pipelined futures resolve one round later
+    than serial ones; scheduling tells off resolution time would change
+    the event order itself, which no scheduler can be expected to hide)."""
+    gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=48),
+                      GatewayConfig(slots=2, max_inflight=8))
+    sids = [gw.create_study() for _ in range(4)]
+    loop = asyncio.get_running_loop()
+    streams = {s: [] for s in sids}
+    inflight = []                     # (enqueue_round, sid, future)
+    to_tell = []                      # (ready_round, sid, trial)
+    step = gw.tick_begin if pipelined else gw.tick
+
+    def collect():
+        for item in inflight[:]:
+            r0, s, f = item
+            if f.done():
+                res = f.result()
+                for tr in (res if isinstance(res, list) else [res]):
+                    streams[s].append(tuple(np.asarray(tr.unit).tolist()))
+                    to_tell.append((r0 + 2, s, tr))
+                inflight.remove(item)
+
+    overlapped = False
+    for r in range(rounds):
+        for item in [x for x in to_tell if x[0] <= r]:
+            _, s, tr = item
+            gw.tell(s, tr, obj(s, tr.unit))
+            to_tell.remove(item)
+        # two studies per round (never three: a deferral would shift the
+        # resolution round); the q-batch rides the first study's ask
+        a1, a2 = sids[r % 4], sids[(r + 1) % 4]
+        inflight.append((r, a1, _enq(gw, loop, a1, q=3 if r % 3 == 2 else 1)))
+        inflight.append((r, a2, _enq(gw, loop, a2)))
+        step()
+        overlapped = overlapped or gw._pending is not None
+        collect()
+    # land the tail: flush the staged tick, then serial ticks until the
+    # last tell absorbs (both modes converge on the same serial sequence)
+    gw.tick_flush()
+    while True:
+        collect()
+        for _rr, s, tr in to_tell:
+            gw.tell(s, tr, obj(s, tr.unit))
+        to_tell = []
+        if not (inflight or gw._tells or gw._asks
+                or gw._pending is not None):
+            break
+        gw.tick()
+    assert overlapped == pipelined, \
+        "pipelined run never actually overlapped ticks"
+    reg = {s: (gw._studies[s].n_obs, gw._studies[s].version,
+               gw._studies[s].best_value, gw._studies[s].slot is not None)
+           for s in sids}
+    from _traffic import slot_bytes
+    resident = {s: slot_bytes(gw.pool, gw._studies[s].slot)
+                for s in sids if gw._studies[s].slot is not None}
+    summary = gw.summary()
+    await gw.aclose()
+    return streams, reg, resident, summary
+
+
+def test_pipelined_ticks_bitwise_equal_serial_ticks():
+    """Tick pipelining is a SCHEDULING change only: the same scripted
+    traffic (eviction churn every round, q=3 fantasy batches outstanding
+    across the overlap boundary, tells landing mid-flight) produces
+    bitwise-identical suggestion streams, registries, and resident GP
+    state with tick_begin/tick_flush as with plain serial tick()."""
+    async def main(d1, d2):
+        on = await _scripted_run(d1, pipelined=True)
+        off = await _scripted_run(d2, pipelined=False)
+        assert on[0] == off[0], "suggestion streams diverged"
+        assert on[1] == off[1], "study registries diverged"
+        assert on[2].keys() == off[2].keys()
+        for s in on[2]:
+            for leaf in on[2][s]:
+                assert on[2][s][leaf] == off[2][s][leaf], \
+                    f"study {s} leaf {leaf} differs pipelined vs serial"
+        for k in ("ticks", "asks_served", "absorbed", "evictions",
+                  "restores", "fantasy_rollbacks", "q_width_hist"):
+            assert on[3][k] == off[3][k], f"summary[{k}] diverged"
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        asyncio.run(main(d1, d2))
+
+
+def test_async_ticker_pipeline_on_off_identical_streams():
+    """The asyncio ticker path: the same concurrent client traffic under
+    GatewayConfig(pipeline=True) and pipeline=False serves bitwise-equal
+    suggestion streams and absorbs the same telemetry."""
+    async def run(d, pipeline):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=24),
+                          GatewayConfig(slots=2, pipeline=pipeline))
+        sids = [gw.create_study() for _ in range(3)]
+        outs = {s: [] for s in sids}
+        for _ in range(3):
+            await asyncio.gather(*(_loop(gw, s, 2, outs[s]) for s in sids))
+        summary = gw.summary()
+        await gw.aclose()
+        return outs, summary
+
+    async def main(d1, d2):
+        on, s_on = await run(d1, True)
+        off, s_off = await run(d2, False)
+        assert set(on) == set(off)
+        for s in on:
+            assert len(on[s]) == len(off[s]) == 6
+            for x, y in zip(on[s], off[s]):
+                np.testing.assert_array_equal(x, y)
+        assert s_on["absorbed"] == s_off["absorbed"]
+        assert s_on["asks_served"] == s_off["asks_served"]
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        asyncio.run(main(d1, d2))
+
+
+def test_pipelined_inflight_fault_fails_exactly_that_ticks_futures(
+        monkeypatch):
+    """A device fault surfacing when the IN-FLIGHT tick materializes must
+    fail exactly that tick's futures: the next tick — already staged —
+    stays staged and serves once the fault clears."""
+    import repro.hpo.pool as pool_mod
+
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=24),
+                          GatewayConfig(slots=2))
+        a, b = gw.create_study(), gw.create_study()
+        loop = asyncio.get_running_loop()
+        for s in (a, b):              # both resident: no residency hazard
+            f = _enq(gw, loop, s)
+            gw.tick()
+            tr = f.result()
+            gw.tell(s, tr, obj(s, tr.unit))
+        gw.tick()
+
+        fa = _enq(gw, loop, a)
+        assert gw.tick_begin() == 1 and gw._pending is not None
+        fb = _enq(gw, loop, b)
+
+        def boom(x):
+            raise RuntimeError("device fault")
+        monkeypatch.setattr(pool_mod, "_materialize", boom)
+        # staging B succeeds (dispatch only); finishing A hits the fault
+        with pytest.raises(RuntimeError, match="device fault"):
+            gw.tick_begin()
+        monkeypatch.undo()
+        assert fa.done() and isinstance(fa.exception(), RuntimeError), \
+            "the in-flight tick's future did not receive the fault"
+        assert not fb.done() and gw._pending is not None, \
+            "the fault leaked into the staged-but-not-in-flight tick"
+        assert gw.tick_flush() == 1   # fault cleared: B lands untouched
+        tr = fb.result()
+        gw.tell(b, tr, obj(b, tr.unit))
+        gw.tick()
+        assert gw.study_info(b)["n_obs"] == 2
+        assert gw.study_info(a)["n_obs"] == 1   # A's round died with its tick
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))

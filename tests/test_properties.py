@@ -2,7 +2,7 @@
 conftest shim when the package is absent — either way these RUN, they do
 not skip).
 
-Four families:
+Five families:
   * search-space round-trips under *random* specs (not just the presets),
   * append→posterior invariants against the ref substrate's dense GP,
   * an `li_buf` drift bound across random append/re-anchor interleavings —
@@ -11,19 +11,30 @@ Four families:
   * mixed-space invariants under *random typed* specs (DESIGN.md §10):
     encode∘decode round-trips for every dim type, one-hot argmax
     stability, mixed-gram PSD + substrate parity, and round-and-repair
-    feasibility.
+    feasibility,
+  * federation observational equivalence (DESIGN.md §13): ANY interleaving
+    of asks, tells, migrations, and shard kill/revive over a 2-shard
+    federation is observably a single-pool run of the same event order,
+    and routing is a deterministic pure function of (sid, shard count).
 """
+import asyncio
 import dataclasses
+import hashlib
+import tempfile
+import types
 
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from _traffic import make_cfg, objective
 from repro.core import (GPConfig, append, dense_posterior, init_state,
                         matern52, posterior, refactor)
 from repro.core import descriptor as desc_mod
+from repro.hpo import (FederatedGateway, FederationConfig, GatewayConfig,
+                       StudyGateway)
 from repro.hpo.space import (Categorical, Conditional, Dim, Int,
-                             SearchSpace)
+                             RESNET_SPACE, SearchSpace)
 from repro.kernels import ops as kops
 
 
@@ -421,3 +432,110 @@ def test_fantasy_rollback_bitwise_under_random_interleavings(script, seed):
             jax.tree_util.tree_flatten_with_path(pb.engine.study_state(0))[0]):
         assert np.asarray(la).tobytes() == np.asarray(lb).tobytes(), \
             f"{jax.tree_util.keystr(path)} differs after drain"
+
+
+# ---------------------------------------------------------------------------
+# Federation: routing determinism + single-pool equivalence (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def _route(sid: int, n_shards: int) -> int:
+    # route() reads only self.fed — a shim avoids building n_shards pools
+    # per hypothesis example
+    shim = types.SimpleNamespace(fed=FederationConfig(n_shards=n_shards))
+    return FederatedGateway.route(shim, sid)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sid=st.integers(0, 100_000), n_shards=st.integers(1, 16))
+def test_routing_deterministic_pure_function(sid, n_shards):
+    """route(sid) is a pure function of (sid, shard count): repeated calls
+    agree, and the winner IS the rendezvous argmax recomputed from first
+    principles — no process state (PYTHONHASHSEED, dict order) leaks in."""
+    got = _route(sid, n_shards)
+    assert got == _route(sid, n_shards)
+    assert 0 <= got < n_shards
+    want = max(range(n_shards), key=lambda s: hashlib.sha256(
+        f"{s}:{sid}".encode()).digest())
+    assert got == want
+
+
+def test_routing_stable_and_spread_under_fixed_shard_count():
+    """Under a fixed shard count the ring never reroutes an existing study
+    (pure function ⇒ later creates cannot move earlier sids), and the hash
+    actually spreads a contiguous sid block over every shard."""
+    for n_shards in (2, 3, 4):
+        first = [_route(s, n_shards) for s in range(64)]
+        assert first == [_route(s, n_shards) for s in range(64)]
+        assert set(first) == set(range(n_shards)), \
+            f"{n_shards} shards: some shard never routed"
+
+
+_FED_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("round"), st.integers(0, 3)),
+        st.tuples(st.just("migrate"), st.integers(0, 3)),
+        st.tuples(st.just("kill"), st.integers(0, 1)),
+    ), min_size=4, max_size=12)
+
+
+@settings(max_examples=5, deadline=None)
+@given(script=_FED_OPS)
+def test_fed_random_interleavings_equal_single_pool(script):
+    """ANY random interleaving of ask/tell rounds, migrations, and shard
+    kill/revive cycles (checkpointed at the kill point, i.e. a crash at a
+    durable instant) over a 2-shard federation is OBSERVABLY a single-pool
+    run of the same per-study event order: identical suggestion streams,
+    ledgers (n_obs, best_value), and absorb telemetry.  The federation
+    shards run 2 slots each (eviction churn + migrations); the reference
+    holds everything resident."""
+    async def run_fed(root):
+        fg = FederatedGateway(RESNET_SPACE, make_cfg(root, n_max=24),
+                              GatewayConfig(slots=2),
+                              FederationConfig(n_shards=2))
+        sids = [fg.create_study(name=f"s{i}") for i in range(4)]
+        streams = {s: [] for s in sids}
+        for op in script:
+            if op[0] == "round":
+                s = sids[op[1]]
+                tr = await fg.ask(s)
+                streams[s].append(tuple(np.asarray(tr.unit).tolist()))
+                fg.tell(s, tr, objective(s, tr.unit))
+                await fg.drain()
+            elif op[0] == "migrate":
+                s = sids[op[1]]
+                fg.migrate_study(s, 1 - fg.shard_of(s))
+            else:
+                fg.checkpoint()
+                fg.kill_shard(op[1])
+                fg.revive_shard(op[1])
+        info = {s: (fg.study_info(s)["n_obs"],
+                    fg.study_info(s)["best_value"]) for s in sids}
+        absorbed = fg.summary()["absorbed"]
+        await fg.aclose()
+        return streams, info, absorbed
+
+    async def run_single(d):
+        gw = StudyGateway(RESNET_SPACE, make_cfg(d, n_max=24),
+                          GatewayConfig(slots=4))
+        sids = [gw.create_study(name=f"s{i}") for i in range(4)]
+        streams = {s: [] for s in sids}
+        for op in script:
+            if op[0] != "round":
+                continue             # migrations/kills are fed-internal
+            s = sids[op[1]]
+            tr = await gw.ask(s)
+            streams[s].append(tuple(np.asarray(tr.unit).tolist()))
+            gw.tell(s, tr, objective(s, tr.unit))
+            await gw.drain()
+        info = {s: (gw.study_info(s)["n_obs"],
+                    gw.study_info(s)["best_value"]) for s in sids}
+        absorbed = gw.summary()["absorbed"]
+        await gw.aclose()
+        return streams, info, absorbed
+
+    with tempfile.TemporaryDirectory() as root, \
+            tempfile.TemporaryDirectory() as d_ref:
+        fed = asyncio.run(run_fed(root))
+        ref = asyncio.run(run_single(d_ref))
+    assert fed[0] == ref[0], "suggestion streams diverged"
+    assert fed[1] == ref[1], "study ledgers diverged"
+    assert fed[2] == ref[2], "absorb telemetry diverged"

@@ -1,79 +1,92 @@
 """Long-soak determinism: a gateway serving random client traffic with
 slot-eviction churn AND periodic kill/restore must produce bitwise-
 identical per-study suggestion streams to an uninterrupted gateway with
-every study resident.
+every study resident — and a FEDERATION under the same traffic plus
+periodic shard kill/restore and forced migrations must match an
+uninterrupted single-pool run (DESIGN.md §13 single-pool equivalence).
 
-The tier-1 copy runs a short soak; the full 500+-tick soak is slow-marked
-and gated behind REPRO_SOAK=1 (a dedicated CI job runs it — see
-.github/workflows/ci.yml `soak`).
+The tier-1 copies run short soaks; the full 500+-tick soaks are
+slow-marked and gated behind REPRO_SOAK=1 (a dedicated CI job runs them —
+see .github/workflows/ci.yml `soak`).  Traffic generation and the stream
+comparison live in tests/_traffic.py (shared with the fault suite).
 """
 import asyncio
 import os
 import tempfile
 
-import numpy as np
 import pytest
 
-from repro.core.acquisition import AcqConfig
-from repro.hpo import GatewayConfig, SchedulerConfig, StudyGateway
+from _traffic import assert_streams_identical, make_cfg, run_traffic
+from repro.hpo import (FederatedGateway, FederationConfig, GatewayConfig,
+                       StudyGateway)
 from repro.hpo.space import RESNET_SPACE
 
 
-def _objective(sid, unit):
-    c = 0.15 + 0.7 * ((sid * 0.37) % 1.0)
-    return float(-np.sum((np.asarray(unit) - c) ** 2))
-
-
 def _mk(d, slots, n_max):
-    cfg = SchedulerConfig(n_max=n_max, seed=0, ckpt_dir=d,
-                          ckpt_every=10_000,
-                          acq=AcqConfig(restarts=8, ascent_steps=4))
-    return StudyGateway(RESNET_SPACE, cfg, GatewayConfig(slots=slots))
+    return StudyGateway(RESNET_SPACE, make_cfg(d, n_max=n_max),
+                        GatewayConfig(slots=slots))
 
 
 async def _soak(d, *, slots, n_studies, rounds, n_max, restart_every=None,
                 traffic_seed=7):
     """Deterministic random traffic; returns (per-study streams, ticks).
 
-    Each round a random subset of studies asks (concurrently — the asks
-    coalesce, and with slots < n_studies they also churn the LRU), then
-    tells its result; `restart_every` rounds, the gateway checkpoints at a
-    quiescent point, is dropped, and a fresh gateway restores.
+    `restart_every` rounds, the gateway checkpoints at a quiescent point,
+    is dropped, and a fresh gateway restores.
     """
     gw = _mk(d, slots, n_max)
     sids = [gw.create_study(name=f"t{i}") for i in range(n_studies)]
-    streams = {s: [] for s in sids}
-    rng = np.random.default_rng(traffic_seed)
 
-    async def one(s):
-        # ask→tell per client task: tells free slots for the asks the
-        # tick deferred, so an active set wider than the slot count drains
-        tr = await gw.ask(s)
-        streams[s].append(np.asarray(tr.unit).copy())
-        gw.tell(s, tr, _objective(s, tr.unit))
-
-    for r in range(rounds):
-        active = [s for s in sids if rng.random() < 0.6]
-        if not active:
-            continue
-        await asyncio.gather(*(one(s) for s in active))
-        await gw.drain()
+    async def on_round(r, cur):
         if restart_every and (r + 1) % restart_every == 0:
-            gw.checkpoint()
-            await gw.aclose()
-            gw = _mk(d, slots, n_max)
-            assert gw.restore(), "soak restore failed"
+            cur.checkpoint()
+            await cur.aclose()
+            nxt = _mk(d, slots, n_max)
+            assert nxt.restore(), "soak restore failed"
+            return nxt
+        return None
+
+    streams, gw = await run_traffic(gw, sids, rounds,
+                                    traffic_seed=traffic_seed,
+                                    on_round=on_round)
     ticks = gw._tick_count          # cumulative: rides the registry
     await gw.aclose()
     return streams, ticks
 
 
-def _assert_identical(a, b):
-    for s in a:
-        assert len(a[s]) == len(b[s])
-        for k, (x, y) in enumerate(zip(a[s], b[s])):
-            assert np.array_equal(x, y), \
-                f"study {s} suggestion {k} diverged: {x} vs {y}"
+async def _fed_soak(d, *, n_shards, slots, n_studies, rounds, n_max,
+                    kill_every=None, migrate_every=None, traffic_seed=7):
+    """Federation under the same seeded traffic, with eviction churn
+    (slots < studies per shard), periodic shard kill/restore (checkpointed
+    immediately before the kill — a crash at a durable point, so the
+    equivalence to the uninterrupted run is exact), and forced round-robin
+    migrations.  Returns (streams, fed summary)."""
+    cfg = make_cfg(d, n_max=n_max)
+    fg = FederatedGateway(RESNET_SPACE, cfg, GatewayConfig(slots=slots),
+                          FederationConfig(n_shards=n_shards))
+    sids = [fg.create_study(name=f"t{i}") for i in range(n_studies)]
+    state = {"kill": 0}
+
+    async def on_round(r, cur):
+        if migrate_every and (r + 1) % migrate_every == 0:
+            sid = sids[r % len(sids)]
+            src = cur.shard_of(sid)
+            cur.migrate_study(sid, (src + 1) % n_shards)
+        if kill_every and (r + 1) % kill_every == 0:
+            cur.checkpoint()
+            i = state["kill"] % n_shards
+            state["kill"] += 1
+            cur.kill_shard(i)
+            cur.revive_shard(i)
+        return None
+
+    streams, _ = await run_traffic(fg, sids, rounds,
+                                   traffic_seed=traffic_seed,
+                                   on_round=on_round)
+    summary = fg.summary()
+    info = {s: fg.study_info(s) for s in sids}
+    await fg.aclose()
+    return streams, summary, info
 
 
 def test_soak_determinism_short():
@@ -85,7 +98,30 @@ def test_soak_determinism_short():
         churn, ticks = await _soak(d_b, slots=2, n_studies=5, rounds=18,
                                    n_max=24, restart_every=7)
         assert ticks >= 30
-        _assert_identical(ref, churn)
+        assert_streams_identical(ref, churn)
+    with tempfile.TemporaryDirectory() as d_a, \
+            tempfile.TemporaryDirectory() as d_b:
+        asyncio.run(main(d_a, d_b))
+
+
+def test_fed_soak_equals_single_pool_short():
+    """Tier-1 federation mini-soak: 2 shards with eviction churn, a shard
+    killed+revived twice, and periodic forced migrations serve every study
+    the SAME suggestion stream as one uninterrupted all-resident pool."""
+    async def main(d_a, d_b):
+        ref, _ = await _soak(d_a, slots=6, n_studies=6, rounds=12,
+                             n_max=24, traffic_seed=11)
+        fed, summary, info = await _fed_soak(
+            d_b, n_shards=2, slots=2, n_studies=6, rounds=12, n_max=24,
+            kill_every=5, migrate_every=3, traffic_seed=11)
+        assert_streams_identical(ref, fed)
+        # the churn actually happened: evictions, migrations (restores on
+        # the destination shard), and two kill/revive cycles
+        assert summary["evictions"] >= 1
+        assert summary["epoch"] >= 2
+        # final per-study state matches the reference ledgers
+        for s, i in info.items():
+            assert i["n_obs"] == len(ref[s])
     with tempfile.TemporaryDirectory() as d_a, \
             tempfile.TemporaryDirectory() as d_b:
         asyncio.run(main(d_a, d_b))
@@ -105,7 +141,32 @@ def test_soak_determinism_500_ticks():
         churn, ticks = await _soak(d_b, slots=3, n_studies=6, rounds=260,
                                    n_max=220, restart_every=40)
         assert ticks >= 500, f"soak only reached {ticks} ticks"
-        _assert_identical(ref, churn)
+        assert_streams_identical(ref, churn)
+    with tempfile.TemporaryDirectory() as d_a, \
+            tempfile.TemporaryDirectory() as d_b:
+        asyncio.run(main(d_a, d_b))
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not os.environ.get("REPRO_SOAK"),
+                    reason="500+-tick soak; set REPRO_SOAK=1 (dedicated CI "
+                           "job) to run")
+def test_fed_soak_500_ticks():
+    """The full federation soak: 500+ ticks of random traffic over 8
+    studies on 2 shards x 2 slots (heavy eviction churn), a shard killed
+    and revived every 25 rounds, a forced migration every 10 — final
+    streams and ledgers equal to an uninterrupted single-pool run."""
+    async def main(d_a, d_b):
+        ref, _ = await _soak(d_a, slots=8, n_studies=8, rounds=220,
+                             n_max=220, traffic_seed=13)
+        fed, summary, info = await _fed_soak(
+            d_b, n_shards=2, slots=2, n_studies=8, rounds=220, n_max=220,
+            kill_every=25, migrate_every=10, traffic_seed=13)
+        assert summary["ticks"] >= 500, \
+            f"soak only reached {summary['ticks']} ticks"
+        assert_streams_identical(ref, fed)
+        for s, i in info.items():
+            assert i["n_obs"] == len(ref[s])
     with tempfile.TemporaryDirectory() as d_a, \
             tempfile.TemporaryDirectory() as d_b:
         asyncio.run(main(d_a, d_b))
