@@ -35,6 +35,21 @@ host the win is CAPACITY scaling (eviction-churn elimination), not
 parallel compute.  Each cell runs the same per-client trial budget.
 Acceptance floor: 2 shards >= 1.6x the single-pool baseline's sustained
 suggestions/sec.
+
+The transport cells measure the CROSS-PROCESS deployment (DESIGN.md
+§14): the same 2-shard federation served by 2 real worker PROCESSES
+behind the socket RPC front end (`repro.hpo.transport`), against the
+in-process `FederatedGateway` at the identical shape.  In-process, the
+two shard tickers time-slice one interpreter; over the transport their
+fused rounds can overlap in wall-clock on separate cores.  The cells
+run a REALISTIC acquisition budget (restarts=128, ascent_steps=32,
+n_max=64 — unlike the deliberately tiny budget of the scheduling-bound
+cells above), so per-round device work dominates and the per-suggestion
+RPC cost — micro-batched frames, base64 unit buffers — amortizes to
+noise.  Acceptance floor: the 2-process cell's aggregate
+suggestions/sec >= the in-process 2-shard baseline at the same shape
+(parity on a single-core host, where cross-process rounds cannot
+physically overlap; strictly better with one core per worker).
 """
 from __future__ import annotations
 
@@ -50,6 +65,7 @@ from repro.hpo.federation import FederatedGateway, FederationConfig
 from repro.hpo.gateway import GatewayConfig, StudyGateway
 from repro.hpo.pool import SchedulerConfig, StudyPool
 from repro.hpo.space import RESNET_SPACE
+from repro.hpo.transport import TransportConfig, TransportFederation
 
 JSON_PATH = "BENCH_serve.json"
 
@@ -59,6 +75,11 @@ FARM_QS = (1, 8, 32)
 FED_CLIENTS = 256
 FED_SLOTS = 144           # per shard: 1 shard churns 256 tenants, 2+ don't
 FED_SHARDS = (1, 2, 4)
+TX_CLIENTS = 256          # transport cells: the FED shape, resident on
+TX_SLOTS = 144            # 2 shards (no churn) at a realistic acquisition
+TX_SHARDS = 2             # budget — per-round device work dominates, so
+TX_N_MAX = 64             # the cross-process hop is measured against real
+TX_ACQ = AcqConfig(restarts=128, ascent_steps=32)  # serving work
 
 
 def _objective(sid: int, unit: np.ndarray) -> float:
@@ -66,12 +87,14 @@ def _objective(sid: int, unit: np.ndarray) -> float:
     return float(-np.sum((np.asarray(unit) - c) ** 2))
 
 
-def _cfg(n_max: int, ckpt_dir: str | None = None) -> SchedulerConfig:
-    # Small acquisition budget: the bench measures serving overhead, not
-    # ascent quality.  Identical on both sides.
+def _cfg(n_max: int, ckpt_dir: str | None = None,
+         acq: AcqConfig | None = None) -> SchedulerConfig:
+    # Small acquisition budget by default: most cells measure serving
+    # overhead, not ascent quality.  Identical on both sides of a pair.
     return SchedulerConfig(n_max=n_max, seed=0, ckpt_dir=ckpt_dir,
                            ckpt_every=10 ** 9,
-                           acq=AcqConfig(restarts=16, ascent_steps=8))
+                           acq=acq or AcqConfig(restarts=16,
+                                                ascent_steps=8))
 
 
 def _bench_coalesced(d: str, n_max: int, warmup: int,
@@ -166,14 +189,16 @@ def _bench_farm(d: str, q: int, per_round: int, n_max: int, warmup: int,
 
 
 def _bench_federation(root: str, n_shards: int, n_max: int, warmup: int,
-                      rounds: int) -> tuple[float, dict]:
-    """256 concurrent ask-tell clients over an N-shard federation (the
-    1-shard cell IS the pinned single-pool baseline: same gateway, same
-    slot budget, everything routed to one pool)."""
-    fg = FederatedGateway(RESNET_SPACE, _cfg(n_max, root),
-                          GatewayConfig(slots=FED_SLOTS),
+                      rounds: int, clients: int = FED_CLIENTS,
+                      slots: int = FED_SLOTS,
+                      acq: AcqConfig | None = None) -> tuple[float, dict]:
+    """`clients` concurrent ask-tell clients over an N-shard federation
+    (the 1-shard cell IS the pinned single-pool baseline: same gateway,
+    same slot budget, everything routed to one pool)."""
+    fg = FederatedGateway(RESNET_SPACE, _cfg(n_max, root, acq),
+                          GatewayConfig(slots=slots),
                           FederationConfig(n_shards=n_shards))
-    sids = [fg.create_study() for _ in range(FED_CLIENTS)]
+    sids = [fg.create_study() for _ in range(clients)]
 
     async def one(s):
         tr = await fg.ask(s)
@@ -196,6 +221,46 @@ def _bench_federation(root: str, n_shards: int, n_max: int, warmup: int,
         summary = fg.summary()
         summary["measured_evictions"] = summary["evictions"] - ev0
         await fg.aclose()
+        return dt, summary
+
+    return asyncio.run(main())
+
+
+def _bench_transport(root: str, n_shards: int, n_max: int, warmup: int,
+                     rounds: int, clients: int = TX_CLIENTS,
+                     slots: int = TX_SLOTS,
+                     acq: AcqConfig | None = None) -> tuple[float, dict]:
+    """The same federation shape served by `n_shards` REAL worker
+    processes behind the socket RPC front end — per-shard fused rounds
+    can overlap in wall-clock instead of time-slicing one interpreter."""
+    async def main():
+        tf = TransportFederation(RESNET_SPACE, _cfg(n_max, root, acq),
+                                 GatewayConfig(slots=slots),
+                                 FederationConfig(n_shards=n_shards),
+                                 TransportConfig(heartbeat_s=0.0))
+        await tf.start()
+        sids = []
+        for _ in range(clients):
+            sids.append(await tf.create_study())
+
+        async def one(s):
+            tr = await tf.ask(s)
+            await tf.tell(s, tr, _objective(s, tr.unit))
+
+        async def round_all():
+            await asyncio.gather(*(one(s) for s in sids))
+            await tf.drain()
+
+        for _ in range(warmup):
+            await round_all()
+        ev0 = (await tf.summary())["evictions"]
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            await round_all()
+        dt = time.perf_counter() - t0
+        summary = await tf.summary()
+        summary["measured_evictions"] = summary["evictions"] - ev0
+        await tf.aclose()
         return dt, summary
 
     return asyncio.run(main())
@@ -269,6 +334,32 @@ def run(full: bool = False, json_path: str = JSON_PATH):
         cell["speedup_vs_single_pool"] = \
             cell["suggestions_per_sec"] / fed_base
 
+    # transport cells: the identical 2-shard shape in-process vs behind
+    # 2 real worker processes (acceptance floor: transport >= in-process
+    # at the same shard count).  warmup >= 2: the first rounds carry the
+    # jit compile on each side and would otherwise own the measurement.
+    tx_warm, tx_rounds = (2, 6) if full else (2, 4)
+    tx_sug = TX_CLIENTS * tx_rounds
+    with tempfile.TemporaryDirectory() as d:
+        in_dt, _ = _bench_federation(d, TX_SHARDS, TX_N_MAX, tx_warm,
+                                     tx_rounds, clients=TX_CLIENTS,
+                                     slots=TX_SLOTS, acq=TX_ACQ)
+    with tempfile.TemporaryDirectory() as d:
+        tx_dt, tsum = _bench_transport(d, TX_SHARDS, TX_N_MAX, tx_warm,
+                                       tx_rounds, acq=TX_ACQ)
+    tx_cells = [{
+        "n_shards": TX_SHARDS,
+        "clients": TX_CLIENTS,
+        "slots_per_shard": TX_SLOTS,
+        "n_max": TX_N_MAX,
+        "restarts": TX_ACQ.restarts,
+        "suggestions_per_sec": tx_sug / tx_dt,
+        "round_ms": 1e3 * tx_dt / tx_rounds,
+        "measured_evictions": tsum["measured_evictions"],
+        "inproc_suggestions_per_sec": tx_sug / in_dt,
+        "speedup_vs_inproc": in_dt / tx_dt,
+    }]
+
     ops = CLIENTS * rounds
     rec = {
         "clients": CLIENTS,
@@ -294,6 +385,12 @@ def run(full: bool = False, json_path: str = JSON_PATH):
         "fed_slots_per_shard": FED_SLOTS,
         "fed_baseline_suggestions_per_sec": fed_base,
         "fed_cells": fed_cells,
+        # cross-process deployment: 2 real shard workers over socket RPC
+        # vs the in-process federation at the identical shape (acceptance
+        # floor: transport >= in-process at the same shard count)
+        "tx_clients": TX_CLIENTS,
+        "tx_slots_per_shard": TX_SLOTS,
+        "tx_cells": tx_cells,
     }
     import jax
     payload = {"backend": jax.default_backend(), "results": [rec]}
@@ -321,6 +418,12 @@ def run(full: bool = False, json_path: str = JSON_PATH):
             f"speedup={cell['speedup_vs_single_pool']:.2f}x "
             f"p95_tick_ms={cell['p95_tick_ms']:.1f} "
             f"evictions={cell['measured_evictions']}")
+    for cell in tx_cells:
+        rows.append(
+            f"serve_tx_{cell['n_shards']}proc,"
+            f"{1e6 / cell['suggestions_per_sec']:.0f},"
+            f"suggest_per_s={cell['suggestions_per_sec']:.1f} "
+            f"speedup_vs_inproc={cell['speedup_vs_inproc']:.2f}x")
     rows.append(f"serve_json,,path={json_path}")
     return rows
 

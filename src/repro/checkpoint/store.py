@@ -25,6 +25,7 @@ import json
 import os
 import shutil
 import tempfile
+import time
 from typing import Any
 
 import jax
@@ -33,6 +34,45 @@ import numpy as np
 PyTree = Any
 
 _COMMIT = "COMMITTED"
+
+# Writers stage into `.tmp_ckpt_*` (save) / `.tmp_migrate_*`
+# (copy_study_version) dirs that an atomic rename publishes; a SIGKILLed
+# writer leaves its tmp dir behind forever.  `sweep_tmp` reclaims that
+# debris with an age guard: another shard process may be mid-write in the
+# same store right now, and its fresh tmp dir (every file write bumps the
+# dir mtime) must never be swept out from under it.  One hour is ~5 orders
+# of magnitude above any real save; REPRO_CKPT_TMP_TTL overrides (seconds).
+_TMP_PREFIXES = (".tmp_ckpt_", ".tmp_migrate_")
+_TMP_TTL_S = 3600.0
+
+
+def _tmp_ttl() -> float:
+    return float(os.environ.get("REPRO_CKPT_TMP_TTL", _TMP_TTL_S))
+
+
+def sweep_tmp(ckpt_dir: str, ttl_s: float | None = None) -> list[str]:
+    """Remove stale writer-staging tmp dirs under `ckpt_dir` (non-recursive).
+
+    Only dirs older than `ttl_s` (mtime) go — a concurrent writer from
+    another shard process keeps its in-flight tmp dir.  Returns the swept
+    paths (tests assert on them)."""
+    ttl = _tmp_ttl() if ttl_s is None else ttl_s
+    if not os.path.isdir(ckpt_dir):
+        return []
+    now = time.time()
+    swept = []
+    for d in os.listdir(ckpt_dir):
+        if not d.startswith(_TMP_PREFIXES):
+            continue
+        p = os.path.join(ckpt_dir, d)
+        try:
+            age = now - os.path.getmtime(p)
+        except OSError:
+            continue  # the owning writer just published or cleaned it up
+        if age > ttl:
+            shutil.rmtree(p, ignore_errors=True)
+            swept.append(p)
+    return swept
 
 
 def _flatten_with_paths(tree: PyTree):
@@ -98,6 +138,9 @@ def _gc(ckpt_dir: str, keep: int) -> None:
         if d.startswith("step_") and not os.path.exists(
                 os.path.join(p, _COMMIT)):
             shutil.rmtree(p, ignore_errors=True)
+    # ... and the tmp staging dirs a SIGKILLed writer never published
+    # (age-guarded: a concurrent writer's in-flight tmp dir stays)
+    sweep_tmp(ckpt_dir)
 
 
 def committed_steps(ckpt_dir: str) -> list[int]:
@@ -232,6 +275,10 @@ def copy_study_version(src_dir: str, dst_dir: str, study: str,
             f"{src_dir}")
     dst_root = study_dir(dst_dir, study)
     os.makedirs(dst_root, exist_ok=True)
+    # a SIGKILLed copier (front-end crash mid-migration) leaves its
+    # `.tmp_migrate_*` staging dir here; the retry is the natural sweep
+    # point (study dirs see no regular `save` traffic after adoption)
+    sweep_tmp(dst_root)
     final = os.path.join(dst_root, f"step_{version:09d}")
     if os.path.exists(os.path.join(final, _COMMIT)):
         return final  # a retried migration finds it already published

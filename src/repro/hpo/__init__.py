@@ -2,11 +2,13 @@
 multi-tenant StudyPool, and the async ask–tell StudyGateway — all sharing
 one batched suggest/absorb engine (DESIGN.md §7), optionally sharded over a
 device mesh via `repro.hpo.mesh` (DESIGN.md §8, `SchedulerConfig.mesh`);
-the gateway serving semantics are DESIGN.md §9, and `FederatedGateway`
-shards the study population over N gateways with pipelined ticks
-(DESIGN.md §13)."""
+the gateway serving semantics are DESIGN.md §9, `FederatedGateway` shards
+the study population over N gateways with pipelined ticks (DESIGN.md §13),
+and `TransportFederation` (repro.hpo.transport) deploys the same federation
+over one shard worker process per host (DESIGN.md §14)."""
 from repro.hpo.engine import StudyEngine
-from repro.hpo.federation import FederatedGateway, FederationConfig
+from repro.hpo.federation import (FederatedGateway, FederationBase,
+                                  FederationConfig, rendezvous_shard)
 from repro.hpo.gateway import GatewayConfig, StudyGateway
 from repro.hpo.pool import SchedulerConfig, StudyPool, Trial
 from repro.hpo.scheduler import TrialScheduler
@@ -14,12 +16,17 @@ from repro.hpo.space import (LENET_SPACE, LM_SPACE, MIXED_DEMO_SPACE,
                              RESNET_SPACE, Categorical, Conditional, Dim,
                              Float, Int, SearchSpace, space_from_dicts,
                              space_to_dicts)
+from repro.hpo.transport import (ShardClient, ShardConnectionError,
+                                 ShardServer, TransportConfig,
+                                 TransportError, TransportFederation)
 
 __all__ = [
     "Categorical", "Conditional", "Dim", "FederatedGateway",
-    "FederationConfig", "Float", "GatewayConfig", "Int",
+    "FederationBase", "FederationConfig", "Float", "GatewayConfig", "Int",
     "LENET_SPACE", "LM_SPACE", "MIXED_DEMO_SPACE", "RESNET_SPACE",
-    "SchedulerConfig", "SearchSpace", "StudyEngine", "StudyGateway",
-    "StudyPool", "Trial", "TrialScheduler", "space_from_dicts",
-    "space_to_dicts",
+    "SchedulerConfig", "SearchSpace", "ShardClient",
+    "ShardConnectionError", "ShardServer", "StudyEngine", "StudyGateway",
+    "StudyPool", "TransportConfig", "TransportError",
+    "TransportFederation", "Trial", "TrialScheduler", "rendezvous_shard",
+    "space_from_dicts", "space_to_dicts",
 ]

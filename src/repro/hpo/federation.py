@@ -37,10 +37,15 @@ shard that currently holds the study:
     persist in the snapshots, so a retried round never repeats a
     pre-crash batch).
 
-The front end is asyncio-native like the shards: every shard ticker runs
-on the same event loop, so one process hosts the whole federation (the
-cross-process deployment drives one `StudyGateway` per process instead —
-see tests/_shardproc.py for the harness used by the fault suite).
+The routing/registry/reconcile core lives in `FederationBase` and is
+shared with the cross-host deployment: `FederatedGateway` applies it with
+in-memory method calls (every shard ticker on one event loop — the
+degenerate single-process case), while `repro.hpo.transport`'s
+`TransportFederation` applies the SAME core over a socket RPC connection
+per shard process (DESIGN.md §14).  Shards are only ever touched through
+the public `StudyGateway` federation surface (`is_quiescent`,
+`registry_record`, `sync_registry`, `adopt_study`/`detach_study`/
+`expel_study`, `abandon`) — privates don't cross process boundaries.
 """
 from __future__ import annotations
 
@@ -53,9 +58,20 @@ import os
 from repro import checkpoint as ckpt_mod
 from repro.hpo.gateway import GatewayConfig, StudyGateway
 from repro.hpo.pool import SchedulerConfig, Trial
-from repro.hpo.space import SearchSpace, space_to_dicts
+from repro.hpo.space import SearchSpace
 
-__all__ = ["FederationConfig", "FederatedGateway"]
+__all__ = ["FederationConfig", "FederationBase", "FederatedGateway",
+           "rendezvous_shard"]
+
+
+def rendezvous_shard(sid: int, n_shards: int) -> int:
+    """Rendezvous (HRW) ring position of study `sid` over `n_shards`."""
+    best, best_w = 0, b""
+    for shard in range(n_shards):
+        w = hashlib.sha256(f"{shard}:{sid}".encode()).digest()
+        if w > best_w:
+            best, best_w = shard, w
+    return best
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,8 +85,17 @@ class FederationConfig:
     # None = SchedulerConfig.ckpt_dir is the root.
 
 
-class FederatedGateway:
-    """Route one global study population across N StudyGateway shards."""
+class FederationBase:
+    """Routing + registry + reconcile core of a shard federation.
+
+    Owns everything that is a pure function of the front end's own state:
+    the global sid space, the placement map, the fallback records, the
+    epoch registry payload (build/parse/validate), and the reconcile plan
+    for a restored shard.  Subclasses apply the plans to their shards —
+    `FederatedGateway` with in-memory method calls, `TransportFederation`
+    (repro.hpo.transport) with socket RPCs — so the two deployments can
+    never drift on routing or recovery semantics.
+    """
 
     def __init__(self, template_space: SearchSpace, cfg: SchedulerConfig,
                  gw: GatewayConfig | None = None,
@@ -81,15 +106,13 @@ class FederatedGateway:
         root = self.fed.ckpt_dir or cfg.ckpt_dir
         if root is None:
             raise ValueError(
-                "FederatedGateway needs a checkpoint root "
+                "a federation needs a checkpoint root "
                 "(FederationConfig.ckpt_dir or SchedulerConfig.ckpt_dir)")
         self._root = root
         self._fed_dir = os.path.join(root, "fed")
         self._template_space = template_space
         self.cfg = cfg
         self.gw = gw or GatewayConfig()
-        self.shards: list[StudyGateway | None] = [
-            self._build_shard(i) for i in range(self.fed.n_shards)]
         self._placement: dict[int, int] = {}   # sid -> shard index
         self._records: dict[int, dict] = {}    # last-known fallback record
         # per study (kept fresh at checkpoint; serves studies whose shard
@@ -98,20 +121,10 @@ class FederatedGateway:
         self._next_sid = 0
         self._epoch = 0
 
-    def _build_shard(self, i: int) -> StudyGateway:
-        cfg = dataclasses.replace(
-            self.cfg, ckpt_dir=os.path.join(self._root, f"shard-{i}"))
-        return StudyGateway(self._template_space, cfg, self.gw)
-
     # -- routing ------------------------------------------------------------
     def route(self, sid: int) -> int:
         """Ring position of a study: rendezvous hash over the shard set."""
-        best, best_w = 0, b""
-        for shard in range(self.fed.n_shards):
-            w = hashlib.sha256(f"{shard}:{sid}".encode()).digest()
-            if w > best_w:
-                best, best_w = shard, w
-        return best
+        return rendezvous_shard(sid, self.fed.n_shards)
 
     def shard_of(self, sid: int) -> int:
         """Current placement (ring position unless migrated)."""
@@ -120,6 +133,127 @@ class FederatedGateway:
         if sid not in self._placement:
             raise KeyError(f"unknown study id {sid}")
         return self._placement[sid]
+
+    def shard_dir(self, i: int) -> str:
+        """Shard i's checkpoint store under the shared federation root."""
+        return os.path.join(self._root, f"shard-{i}")
+
+    def study_ids(self) -> list[int]:
+        return sorted(self._placement)
+
+    # -- the epoch registry (build / persist / parse) -----------------------
+    def _registry_payload(self, records: dict[int, dict]) -> dict:
+        """Federation registry payload: placement + one fallback record
+        per study so a shard restored from an older epoch can re-adopt
+        studies it forgot."""
+        return {
+            "epoch": self._epoch,
+            "n_shards": self.fed.n_shards,
+            "next_sid": self._next_sid,
+            "closed_sids": sorted(self._closed_sids),
+            "placement": {str(s): sh for s, sh in
+                          sorted(self._placement.items())},
+            "records": {str(s): r for s, r in sorted(records.items())},
+        }
+
+    def _save_epoch(self, records: dict[int, dict]) -> int:
+        """Commit epoch N of the federation registry under `<root>/fed/`.
+        Must be written BEFORE the shard checkpoints (it may never
+        reference shard state newer than itself)."""
+        self._epoch += 1
+        self._records.update(records)
+        ckpt_mod.save(self._fed_dir, self._epoch, {},
+                      metadata={"federation":
+                                json.dumps(self._registry_payload(records))},
+                      keep=3)
+        return self._epoch
+
+    def _load_epoch(self) -> bool:
+        """Parse the latest committed federation epoch into the front
+        end's bookkeeping; False when none exists.
+
+        Fails fast when the recorded shard count disagrees with the live
+        `FederationConfig`: with FEWER live shards, placements recorded on
+        the missing shards would strand every routed call on an
+        out-of-range index; with MORE, `route()` sends NEW sids onto
+        shards the old placements know nothing about while existing
+        studies stay put — two silently different topologies.  Resizing a
+        federation is a migration (move the studies, then re-checkpoint),
+        not a restore-time reinterpretation.
+        """
+        out = ckpt_mod.restore_latest(self._fed_dir, {})
+        if out is None:
+            return False
+        _epoch, _tree, meta = out
+        reg = json.loads(meta["federation"])
+        saved_shards = int(reg["n_shards"])
+        if saved_shards != self.fed.n_shards:
+            raise ValueError(
+                f"federation registry under {self._fed_dir} was written "
+                f"with n_shards={saved_shards} but the live "
+                f"FederationConfig has n_shards={self.fed.n_shards}; "
+                "restore with the recorded shard count (resizing is a "
+                "migration, not a restore)")
+        self._epoch = int(reg["epoch"])
+        self._next_sid = int(reg["next_sid"])
+        self._closed_sids = set(int(s) for s in reg["closed_sids"])
+        self._placement = {int(s): int(sh)
+                           for s, sh in reg["placement"].items()}
+        self._records = {int(s): r for s, r in reg["records"].items()}
+        return True
+
+    def _merge_summaries(self, per_shard: dict[int, dict],
+                         dead: list[int]) -> dict:
+        """Federation-wide telemetry from per-shard summaries: lifetime
+        counters summed, q-width histograms merged."""
+        out = {"ticks": 0, "asks_served": 0, "absorbed": 0,
+               "evictions": 0, "restores": 0, "fantasy_rollbacks": 0,
+               "fantasy_active": 0, "q_width_hist": {},
+               "n_shards": self.fed.n_shards,
+               "dead_shards": sorted(dead),
+               "studies": len(self._placement),
+               "epoch": self._epoch}
+        for i in sorted(per_shard):
+            s = per_shard[i]
+            for k in ("ticks", "asks_served", "absorbed", "evictions",
+                      "restores", "fantasy_rollbacks", "fantasy_active"):
+                out[k] += s[k]
+            for w, n in s["q_width_hist"].items():
+                out["q_width_hist"][w] = out["q_width_hist"].get(w, 0) + n
+        out["per_shard"] = {str(i): s for i, s in sorted(per_shard.items())}
+        return out
+
+    # -- reconcile planning -------------------------------------------------
+    def _reconcile_plan(self, i: int, present: set[int]
+                        ) -> tuple[list[int], list[int]]:
+        """What a just-restored shard `i` must change, given the study ids
+        `present` in its restored registry: (expel, missing) — `expel` are
+        studies it no longer owns (closed or migrated away on a timeline
+        it lost), `missing` are studies the federation placed on it after
+        its epoch (re-adopt from the fallback record, or recreate empty
+        when none exists — same seed law as create_study)."""
+        owned = {sid for sid, shard in self._placement.items()
+                 if shard == i}
+        return sorted(present - owned), sorted(owned - present)
+
+
+class FederatedGateway(FederationBase):
+    """Route one global study population across N in-process StudyGateway
+    shards — the single-process degenerate case of the federation (every
+    shard ticker shares this process's event loop); the cross-host
+    deployment is `repro.hpo.transport.TransportFederation` over the same
+    `FederationBase` core."""
+
+    def __init__(self, template_space: SearchSpace, cfg: SchedulerConfig,
+                 gw: GatewayConfig | None = None,
+                 fed: FederationConfig | None = None):
+        super().__init__(template_space, cfg, gw, fed)
+        self.shards: list[StudyGateway | None] = [
+            self._build_shard(i) for i in range(self.fed.n_shards)]
+
+    def _build_shard(self, i: int) -> StudyGateway:
+        cfg = dataclasses.replace(self.cfg, ckpt_dir=self.shard_dir(i))
+        return StudyGateway(self._template_space, cfg, self.gw)
 
     def _live(self, i: int) -> StudyGateway:
         gw = self.shards[i]
@@ -182,9 +316,6 @@ class FederatedGateway:
             await gw.aclose()
 
     # -- introspection ------------------------------------------------------
-    def study_ids(self) -> list[int]:
-        return sorted(self._placement)
-
     def study_info(self, sid: int) -> dict:
         info = self._gw_for(sid).study_info(sid)
         info["shard"] = self.shard_of(sid)
@@ -193,24 +324,9 @@ class FederatedGateway:
     def summary(self) -> dict:
         """Federation-wide telemetry: lifetime counters summed across live
         shards, q-width histograms merged, plus the per-shard summaries."""
-        per_shard: dict[str, dict] = {}
-        out = {"ticks": 0, "asks_served": 0, "absorbed": 0,
-               "evictions": 0, "restores": 0, "fantasy_rollbacks": 0,
-               "fantasy_active": 0, "q_width_hist": {},
-               "n_shards": self.fed.n_shards,
-               "dead_shards": sorted(i for i, gw in enumerate(self.shards)
-                                     if gw is None),
-               "studies": len(self._placement),
-               "epoch": self._epoch}
-        for i, gw in self._live_shards():
-            s = per_shard[str(i)] = gw.summary()
-            for k in ("ticks", "asks_served", "absorbed", "evictions",
-                      "restores", "fantasy_rollbacks", "fantasy_active"):
-                out[k] += s[k]
-            for w, n in s["q_width_hist"].items():
-                out["q_width_hist"][w] = out["q_width_hist"].get(w, 0) + n
-        out["per_shard"] = per_shard
-        return out
+        return self._merge_summaries(
+            {i: gw.summary() for i, gw in self._live_shards()},
+            [i for i, gw in enumerate(self.shards) if gw is None])
 
     # -- migration / rebalancing --------------------------------------------
     def migrate_study(self, sid: int, dst: int) -> None:
@@ -236,13 +352,6 @@ class FederatedGateway:
         self._placement[sid] = dst
         self._records[sid] = dict(record, shard=dst)
 
-    def _quiescent(self, gw: StudyGateway, sid: int) -> bool:
-        log = gw._studies.get(sid)
-        return (log is not None and not log.inflight
-                and not log.pending_asks and not log.pending_tells
-                and not (log.slot is not None
-                         and gw.pool.fantasy_active(log.slot)))
-
     def rebalance(self) -> list[tuple[int, int, int]]:
         """Even out study counts across live shards by migrating quiescent
         studies from the fullest shard to the emptiest (lowest sid first —
@@ -260,7 +369,7 @@ class FederatedGateway:
                 return moves
             movable = sorted(
                 sid for sid, s in self._placement.items()
-                if s == src and self._quiescent(self.shards[src], sid))
+                if s == src and self.shards[src].is_quiescent(sid))
             if not movable:
                 return moves
             sid = movable[0]
@@ -268,35 +377,17 @@ class FederatedGateway:
             moves.append((sid, src, dst))
 
     # -- epochs: checkpoint / crash / restore -------------------------------
-    def _registry(self) -> dict:
-        """Federation registry payload: placement + one fallback record
-        per study so a shard restored from an older epoch can re-adopt
-        studies it forgot."""
-        records = {}
+    def _collect_records(self) -> dict[int, dict]:
+        """One fallback record per placed study: fresh from its live
+        shard, else the last one seen (its shard is dead right now)."""
+        records: dict[int, dict] = {}
         for sid, shard in sorted(self._placement.items()):
             gw = self.shards[shard]
-            log = None if gw is None else gw._studies.get(sid)
-            if log is not None:
-                records[sid] = {
-                    "sid": sid, "shard": shard, "name": log.name,
-                    "seed": log.seed,
-                    "dims": space_to_dicts(log.space),
-                    "n_obs": log.n_obs, "best_value": log.best_value,
-                    "version": log.version,
-                    "evicted_ever": log.evicted_ever,
-                    "key": gw._study_key(log),
-                }
+            if gw is not None and sid in set(gw.study_ids()):
+                records[sid] = dict(gw.registry_record(sid), shard=shard)
             elif sid in self._records:
                 records[sid] = self._records[sid]
-        return {
-            "epoch": self._epoch,
-            "n_shards": self.fed.n_shards,
-            "next_sid": self._next_sid,
-            "closed_sids": sorted(self._closed_sids),
-            "placement": {str(s): sh for s, sh in
-                          sorted(self._placement.items())},
-            "records": {str(s): r for s, r in records.items()},
-        }
+        return records
 
     def checkpoint(self) -> int:
         """Write federation epoch N: the federation registry commits FIRST
@@ -306,15 +397,10 @@ class FederatedGateway:
         committed observations survive either way.  Dead shards are
         skipped (their fallback records ride the registry).  Returns the
         epoch number."""
-        self._epoch += 1
-        self._records.update(
-            {int(s): r for s, r in self._registry()["records"].items()})
-        ckpt_mod.save(self._fed_dir, self._epoch, {},
-                      metadata={"federation": json.dumps(self._registry())},
-                      keep=3)
+        epoch = self._save_epoch(self._collect_records())
         for _i, gw in self._live_shards():
             gw.checkpoint()
-        return self._epoch
+        return epoch
 
     def kill_shard(self, i: int) -> None:
         """Simulate a shard crash: the in-memory gateway is discarded
@@ -323,17 +409,8 @@ class FederatedGateway:
         severs their connections the same way."""
         gw = self.shards[i]
         self.shards[i] = None
-        if gw is None:
-            return
-        gw._closed = True
-        if gw._wake is not None:
-            gw._wake.set()
-        pending = list(gw._asks)
-        if gw._pending is not None:
-            pending += gw._pending.take
-        for _sid, fut, _q in pending:
-            if fut is not None and not fut.done():
-                fut.cancel()
+        if gw is not None:
+            gw.abandon()
 
     def revive_shard(self, i: int) -> None:
         """Bring a dead shard back from ITS latest committed epoch and
@@ -351,10 +428,10 @@ class FederatedGateway:
 
     def _reconcile_shard(self, i: int) -> None:
         gw = self.shards[i]
-        mine = {sid for sid, shard in self._placement.items() if shard == i}
-        for sid in sorted(set(gw._studies) - mine):
+        expel, missing = self._reconcile_plan(i, set(gw.study_ids()))
+        for sid in expel:
             gw.expel_study(sid)
-        for sid in sorted(mine - set(gw._studies)):
+        for sid in missing:
             rec = self._records.get(sid)
             if rec is None:
                 # never checkpointed anywhere: recreate empty from the
@@ -362,32 +439,19 @@ class FederatedGateway:
                 gw.create_study(self._template_space, sid=sid)
             else:
                 gw.adopt_study(rec, require_snapshot=False)
-        gw._next_sid = max(gw._next_sid, self._next_sid)
-        for sid in self._closed_sids:
-            gw._closed_sids.add(sid)
+        gw.sync_registry(self._next_sid, self._closed_sids)
         # refresh fallback records from the authoritative shard registry
-        for sid in sorted(mine):
-            log = gw._studies[sid]
-            self._records[sid] = dict(
-                sid=sid, shard=i, name=log.name, seed=log.seed,
-                dims=space_to_dicts(log.space), n_obs=log.n_obs,
-                best_value=log.best_value, version=log.version,
-                evicted_ever=log.evicted_ever, key=gw._study_key(log))
+        for sid in gw.study_ids():
+            if self._placement.get(sid) == i:
+                self._records[sid] = dict(gw.registry_record(sid), shard=i)
 
     def restore(self) -> bool:
         """Resume the whole federation: latest federation epoch for the
-        registry, each shard from ITS latest epoch, then reconcile."""
-        out = ckpt_mod.restore_latest(self._fed_dir, {})
-        if out is None:
+        registry, each shard from ITS latest epoch, then reconcile.
+        Refuses a registry whose recorded shard count differs from the
+        live config (see `FederationBase._load_epoch`)."""
+        if not self._load_epoch():
             return False
-        epoch, _tree, meta = out
-        reg = json.loads(meta["federation"])
-        self._epoch = int(reg["epoch"])
-        self._next_sid = int(reg["next_sid"])
-        self._closed_sids = set(int(s) for s in reg["closed_sids"])
-        self._placement = {int(s): int(sh)
-                           for s, sh in reg["placement"].items()}
-        self._records = {int(s): r for s, r in reg["records"].items()}
         self.shards = [None] * self.fed.n_shards
         for i in range(self.fed.n_shards):
             gw = self._build_shard(i)

@@ -50,6 +50,7 @@ import dataclasses
 import json
 import time
 from collections import deque
+from typing import Sequence
 
 import numpy as np
 
@@ -508,7 +509,71 @@ class StudyGateway:
         except GPCapacityError:
             return None
 
-    # -- federation support (DESIGN.md §13) ---------------------------------
+    # -- federation support (DESIGN.md §13/§14) -----------------------------
+    # The federation front end (in-memory FederatedGateway or the socket
+    # RPC TransportFederation) sees shards ONLY through this public
+    # surface: quiescence, portable registry records, global-id sync, and
+    # the migrate/adopt/detach/expel protocol.  Privates don't cross
+    # process boundaries — anything the front end needs must live here.
+
+    def is_quiescent(self, sid: int) -> bool:
+        """True when the study exists and has NOTHING in motion: no
+        suggestions outstanding, no queued asks or tells, no q-ask fantasy
+        rows pinning its slot.  The public gate for migration/rebalance
+        candidate scans (unknown or closed sids are simply not quiescent);
+        `detach_study` and `export_for_migration` enforce the same
+        predicate, so the in-memory and RPC paths can never drift."""
+        log = self._studies.get(sid)
+        if log is None:
+            return False
+        return (not log.inflight and not log.pending_asks
+                and not log.pending_tells
+                and not (log.slot is not None
+                         and self.pool.fantasy_active(log.slot)))
+
+    def registry_record(self, sid: int) -> dict:
+        """Portable (JSON-safe) registry record of one study — the
+        federation's fallback record and the migration manifest.  Pure
+        read: unlike `export_for_migration` it neither quiesces nor
+        evicts, so `record["version"]` only names a restorable snapshot
+        when the study is non-resident (`evicted_ever` + not resident)."""
+        log = self._require(sid)
+        return {
+            "sid": log.sid, "name": log.name, "seed": log.seed,
+            "dims": space_to_dicts(log.space), "n_obs": log.n_obs,
+            "best_value": log.best_value, "version": log.version,
+            "evicted_ever": log.evicted_ever,
+            "key": self._study_key(log),
+        }
+
+    def sync_registry(self, next_sid: int | None = None,
+                      closed_sids: Sequence[int] = ()) -> None:
+        """Merge global-id bookkeeping pushed down by a federation front
+        end: the global sid watermark (fresh-sid collisions with studies
+        created elsewhere must be impossible) and globally closed sids
+        (tombstones, so a stale shard can't resurrect a closed study)."""
+        if next_sid is not None:
+            self._next_sid = max(self._next_sid, int(next_sid))
+        for sid in closed_sids:
+            self._closed_sids.add(int(sid))
+
+    def abandon(self) -> None:
+        """Crash semantics WITHOUT a checkpoint (the in-memory analogue of
+        SIGKILL, used by `FederatedGateway.kill_shard`): stop the ticker,
+        cancel every parked ask future — a real crash severs those client
+        connections the same way — and discard the staged tick.  The
+        object must not be used afterwards; uncommitted work is lost."""
+        self._closed = True
+        if self._wake is not None:
+            self._wake.set()
+        pending = list(self._asks)
+        if self._pending is not None:
+            pending += self._pending.take
+        self._pending = None
+        for _sid, fut, _q in pending:
+            if fut is not None and not fut.done():
+                fut.cancel()
+
     def export_for_migration(self, sid: int) -> dict:
         """Quiesce one study and hand back a portable registry record.
 
@@ -522,24 +587,16 @@ class StudyGateway:
         """
         self.tick_flush()
         log = self._require(sid)
-        if log.inflight or log.pending_asks or log.pending_tells:
+        if not self.is_quiescent(sid):
             raise RuntimeError(
                 f"study {sid} has work in flight "
                 f"(inflight={log.inflight}, asks={log.pending_asks}, "
-                f"tells={log.pending_tells}); drain before migrating")
+                f"tells={log.pending_tells}, fantasies="
+                f"{self.pool.fantasy_active(log.slot) if log.slot is not None else 0}"
+                "); drain before migrating")
         if log.slot is not None:
-            if self.pool.fantasy_active(log.slot):
-                raise RuntimeError(
-                    f"study {sid} has outstanding q-ask fantasies; their "
-                    "tells must arrive before it can migrate")
             self._free.append(self._evict(log))
-        return {
-            "sid": log.sid, "name": log.name, "seed": log.seed,
-            "dims": space_to_dicts(log.space), "n_obs": log.n_obs,
-            "best_value": log.best_value, "version": log.version,
-            "evicted_ever": log.evicted_ever,
-            "key": self._study_key(log),
-        }
+        return self.registry_record(sid)
 
     def adopt_study(self, record: dict, *,
                     require_snapshot: bool = True) -> None:
@@ -595,8 +652,7 @@ class StudyGateway:
         now, and may even migrate back).  This shard's copy of its
         snapshots is reclaimed at the next checkpoint commit."""
         log = self._require(sid)
-        if log.slot is not None or log.inflight or log.pending_asks \
-                or log.pending_tells:
+        if log.slot is not None or not self.is_quiescent(sid):
             raise RuntimeError(
                 f"study {sid} is not quiescent; export_for_migration first")
         if log.evicted_ever:

@@ -1,0 +1,17 @@
+"""Entry point for a federation shard worker process.
+
+    python -m repro.hpo.shard_worker --ckpt-dir <root>/shard-<i> \
+        [--spec spec.json] [--host 0.0.0.0] [--port 7341]
+
+Kept separate from `repro.hpo.transport` (which `repro.hpo` imports at
+package load) so `-m` never re-executes an already-imported module.
+See `repro.hpo.transport` for the protocol and `DESIGN.md` §14 for the
+deployment shape (one worker per host, every store under one shared
+root).
+"""
+import sys
+
+from repro.hpo.transport import main
+
+if __name__ == "__main__":
+    sys.exit(main())

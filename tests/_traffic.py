@@ -111,3 +111,17 @@ async def drive_serial(gw, sids, rounds, streams=None):
             gw.tell(s, tr, objective(s, tr.unit))
             await gw.drain()
     return streams
+
+
+async def drive_serial_rpc(tf, sids, rounds, streams=None):
+    """`drive_serial` for a TransportFederation, whose `tell` is a
+    coroutine (it crosses a process boundary).  Identical trace, so the
+    two drivers feed the bitwise cross-deployment equivalence tests."""
+    streams = {s: [] for s in sids} if streams is None else streams
+    for _ in range(rounds):
+        for s in sids:
+            tr = await tf.ask(s)
+            streams[s].append(tuple(np.asarray(tr.unit).tolist()))
+            await tf.tell(s, tr, objective(s, tr.unit))
+            await tf.drain()
+    return streams

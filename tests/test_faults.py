@@ -1,13 +1,18 @@
 """Fault-injection suite for StudyPool + StudyGateway + the federation:
 trials raising mid-round, capacity overflow mid-drain, checkpoint/eviction
 write failures, kill/restore, shard crashes (in-process AND real SIGKILLed
-processes via tests/_shardproc.py), and migration IO faults — asserting
-the all-or-nothing contracts and that recovery never replays a pre-crash
-batch (DESIGN.md §9, §13).  Shared helpers live in tests/_traffic.py."""
+worker processes via repro.hpo.shard_worker), and migration IO faults —
+asserting the all-or-nothing contracts and that recovery never replays a
+pre-crash batch (DESIGN.md §9, §13).  The socket-transport fault matrix
+lives in tests/test_transport.py; shared helpers in tests/_traffic.py."""
 import asyncio
+import json
 import os
 import signal
+import subprocess
+import sys
 import tempfile
+import time
 
 import numpy as np
 import pytest
@@ -23,6 +28,7 @@ from repro.checkpoint import store as store_mod
 from repro.core import GPCapacityError
 from repro.hpo import (FederatedGateway, FederationConfig, GatewayConfig,
                        StudyGateway, StudyPool)
+from repro.hpo import transport as tx
 from repro.hpo.space import RESNET_SPACE
 
 
@@ -716,77 +722,160 @@ def test_fed_retried_migration_succeeds_after_io_fault(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
-# Cross-process shard crash: a real SIGKILL via tests/_shardproc.py
+# Cross-process shard crash: a real SIGKILL against the PRODUCTION worker
+# (repro.hpo.shard_worker + ShardClient — no federation front end, so
+# this exercises the worker CLI, spec/endpoint publishing, and the bare
+# self-restore path; the front-end orchestration of the same crash lives
+# in tests/test_transport.py)
 # ---------------------------------------------------------------------------
-def _spawn_shard(d, ctx):
-    import _shardproc
-    parent, child = ctx.Pipe()
-    p = ctx.Process(target=_shardproc.shard_main, args=(child, d),
-                    daemon=True)
-    p.start()
-    child.close()
-    tag, restored = parent.recv()
-    assert tag == "ready"
-    return p, parent, restored
+def _spawn_worker(d):
+    import repro
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, tx.SPEC_FILE), "w") as f:
+        json.dump(tx.build_spec(RESNET_SPACE, _cfg(d, n_max=16)), f)
+    ep = os.path.join(d, tx.ENDPOINT_FILE)
+    if os.path.exists(ep):
+        os.unlink(ep)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(repro.__file__)) \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    p = subprocess.Popen([sys.executable, "-m", "repro.hpo.shard_worker",
+                          "--ckpt-dir", d], env=env)
+    deadline = time.time() + 180
+    while not os.path.exists(ep):
+        assert p.poll() is None, \
+            f"worker exited rc={p.returncode} during startup"
+        assert time.time() < deadline, "worker never published endpoint"
+        time.sleep(0.05)
+    with open(ep) as f:
+        return p, json.load(f)
 
 
-def _rpc(conn, *msg):
-    conn.send(msg)
-    tag, val = conn.recv()
-    assert tag == "ok", val
-    return val
+async def _worker_round(c, sid):
+    (w,) = await c.call("ask", sid=sid, q=1)
+    unit = tx.trial_from_wire(w).unit
+    await c.call("tell", sid=sid, trial=w, value=obj(sid, unit))
+    await c.call("drain")
+    return tuple(unit)
 
 
 def test_crossproc_shard_sigkill_restores_from_epoch():
-    """Two real shard PROCESSES over one federation root.  SIGKILL one
-    mid-traffic: the survivor never notices, and a fresh process started
-    over the dead shard's store restores from its epoch — committed tells
-    survive, nothing pre-crash replays, and the round the crash destroyed
-    re-derives bitwise (the in-process analogue is
+    """Two real shard worker PROCESSES over one federation root.  SIGKILL
+    one mid-traffic: the survivor never notices, and a fresh process
+    started over the dead shard's store restores from its epoch —
+    committed tells survive, nothing pre-crash replays, and the round the
+    crash destroyed re-derives bitwise (the in-process analogue is
     FederatedGateway.kill_shard/revive_shard)."""
-    import multiprocessing as mp
-    ctx = mp.get_context("spawn")
-    with tempfile.TemporaryDirectory() as root:
-        d0 = os.path.join(root, "shard-0")
-        d1 = os.path.join(root, "shard-1")
-        p0, c0, restored = _spawn_shard(d0, ctx)
-        assert not restored
-        p1, c1, _ = _spawn_shard(d1, ctx)
-        s0a = _rpc(c0, "create", "a")
-        s0b = _rpc(c0, "create", "b")
-        s1a = _rpc(c1, "create", "c")
+    async def main(d0, d1):
+        p0, ep0 = _spawn_worker(d0)
+        assert not ep0["restored"]
+        p1, ep1 = _spawn_worker(d1)
+        c0 = await tx.ShardClient.connect(ep0["host"], ep0["port"])
+        c1 = await tx.ShardClient.connect(ep1["host"], ep1["port"])
+        s0a = await c0.call("create_study", name="a")
+        s0b = await c0.call("create_study", name="b")
+        s1a = await c1.call("create_study", name="c")
         pre = {s: [] for s in (s0a, s0b)}
         for _ in range(2):
             for s in pre:
-                pre[s].append(_rpc(c0, "round", s))
-            _rpc(c1, "round", s1a)
-        _rpc(c0, "checkpoint")
-        _rpc(c1, "checkpoint")
-        lost = {s: _rpc(c0, "round", s) for s in pre}
-        _rpc(c1, "round", s1a)               # survivor's round 3 (kept)
+                pre[s].append(await _worker_round(c0, s))
+            await _worker_round(c1, s1a)
+        await c0.call("checkpoint")
+        await c1.call("checkpoint")
+        lost = {}
+        for s in pre:
+            lost[s] = await _worker_round(c0, s)
+        await _worker_round(c1, s1a)         # survivor's round 3 (kept)
 
         os.kill(p0.pid, signal.SIGKILL)      # the real thing
-        p0.join(timeout=30)
-        assert p0.exitcode is not None
+        assert p0.wait(timeout=30) == -signal.SIGKILL
         c0.close()
 
         # the survivor is undisturbed mid-crash
-        _rpc(c1, "round", s1a)
-        assert _rpc(c1, "info", s1a)["n_obs"] == 4
+        await _worker_round(c1, s1a)
+        assert (await c1.call("study_info", sid=s1a))["n_obs"] == 4
 
         # restart over the SAME store: epoch restore, not a fresh shard
-        p0b, c0b, restored = _spawn_shard(d0, ctx)
-        assert restored
+        p0b, ep0b = _spawn_worker(d0)
+        assert ep0b["restored"]
+        c0b = await tx.ShardClient.connect(ep0b["host"], ep0b["port"])
         for s in pre:
-            assert _rpc(c0b, "info", s)["n_obs"] == 2, \
+            assert (await c0b.call("study_info", sid=s))["n_obs"] == 2, \
                 "a committed tell was lost in the crash"
-        post = {s: [_rpc(c0b, "round", s) for _ in range(2)] for s in pre}
+        post = {s: [] for s in pre}
+        for _ in range(2):
+            for s in pre:
+                post[s].append(await _worker_round(c0b, s))
         for s in pre:
             assert set(pre[s]).isdisjoint(post[s]), \
                 "restarted shard replayed a pre-crash suggestion"
             assert post[s][0] == lost[s], \
                 "the crashed round did not re-derive from the epoch's PRNG"
-        _rpc(c0b, "close")
-        _rpc(c1, "close")
-        p0b.join(timeout=30)
-        p1.join(timeout=30)
+        for c in (c0b, c1):
+            await c.call("shutdown")
+            c.close()
+        p0b.wait(timeout=30)
+        p1.wait(timeout=30)
+    with tempfile.TemporaryDirectory() as d0, \
+            tempfile.TemporaryDirectory() as d1:
+        asyncio.run(main(d0, d1))
+
+
+# ---------------------------------------------------------------------------
+# Federation restore/store regressions (found moving shards cross-process)
+# ---------------------------------------------------------------------------
+def test_fed_restore_refuses_shard_count_mismatch():
+    """A federation registry written with N shards must refuse to restore
+    under a different count: fewer live shards would strand placements on
+    out-of-range indices, more would silently split routing between old
+    placements and the new ring.  The error names both counts."""
+    async def main(root):
+        fg = _mk_fed(root, n_shards=2)
+        sids = [fg.create_study(name=f"s{i}") for i in range(3)]
+        await drive_serial(fg, sids, 1)
+        fg.checkpoint()
+        await fg.aclose()
+
+        fg3 = _mk_fed(root, n_shards=3)
+        with pytest.raises(ValueError, match=r"n_shards=2.*n_shards=3"):
+            fg3.restore()
+        # the recorded count restores fine (the registry is intact)
+        fg2 = _mk_fed(root, n_shards=2)
+        assert fg2.restore()
+        assert fg2.study_ids() == sids
+        for s in sids:
+            assert fg2.study_info(s)["n_obs"] == 1
+        await fg2.aclose()
+    with tempfile.TemporaryDirectory() as root:
+        asyncio.run(main(root))
+
+
+def test_store_sweeps_stale_tmp_dirs_not_inflight_ones():
+    """A writer SIGKILLed mid-save leaks its `.tmp_ckpt_*`/`.tmp_migrate_*`
+    staging dir.  The sweep is age-guarded: stale debris goes (directly
+    and on the `save` path), a concurrent writer's fresh in-flight dir
+    stays."""
+    with tempfile.TemporaryDirectory() as d:
+        stale_a = os.path.join(d, ".tmp_ckpt_dead0")
+        stale_b = os.path.join(d, ".tmp_migrate_dead1")
+        fresh = os.path.join(d, ".tmp_ckpt_inflight")
+        for p in (stale_a, stale_b, fresh):
+            os.makedirs(p)
+            with open(os.path.join(p, "arrays.npz"), "wb") as f:
+                f.write(b"partial")
+        old = time.time() - 7200.0           # default TTL is 3600s
+        for p in (stale_a, stale_b):
+            os.utime(p, (old, old))
+        swept = ckpt_mod.sweep_tmp(d)
+        assert sorted(swept) == sorted([stale_a, stale_b])
+        assert os.path.isdir(fresh), "swept a concurrent writer's tmp dir"
+
+        # the save path GCs the same way: plant new stale debris and let
+        # a committed save reclaim it while the fresh dir still survives
+        stale_c = os.path.join(d, ".tmp_migrate_dead2")
+        os.makedirs(stale_c)
+        os.utime(stale_c, (old, old))
+        ckpt_mod.save(d, 1, {"x": np.zeros(2)})
+        assert not os.path.exists(stale_c), "_gc skipped stale tmp debris"
+        assert os.path.isdir(fresh)
+        assert ckpt_mod.restore_latest(d, {"x": np.zeros(2)}) is not None
