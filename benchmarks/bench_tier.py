@@ -1,0 +1,177 @@
+"""Saturation-tier benchmark: serving cost past n_max (DESIGN.md §15).
+
+Two claims, one JSON:
+
+  * **Flat suggest latency past n_max.**  The lazy GP's per-suggest cost
+    grows with the ledger (the acquisition ascent solves against an
+    O(n^2) posterior); the escalated neural-basis tier's posterior is
+    GEMMs against an m x m feature Gram (m = basis width), so its
+    per-suggest latency is flat in n.  The bench measures one routed
+    `StudyPool.suggest` at matched observation counts: the GP lane
+    re-provisioned with n_max = n per checkpoint (padded buffers make
+    per-suggest cost track the PROVISIONED size — to keep serving at n
+    observations a GP pool must pay the quadratic at n), the NB lane
+    promoted once at a small n_max and grown through the SAME counts.
+
+  * **EI-per-unit-cost reaches the target cheaper.**  On a synthetic
+    objective whose evaluation cost climbs along x0 (the FABOLAS shape:
+    cheap evaluations carry information about the expensive optimum), an
+    escalated study running `ei_per_cost` acquisition (EI divided by the
+    predicted cost from the learned log-cost head) is measured against
+    plain EI at the SAME evaluation-cost budget: cost-to-target and best
+    value at budget.
+
+Emits `name,us_per_call,derived` CSV rows for `benchmarks.run` and
+writes `BENCH_tier.json`.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import NeuralConfig
+from repro.core.acquisition import AcqConfig
+from repro.hpo.pool import SchedulerConfig, StudyPool
+from repro.hpo.space import RESNET_SPACE, Dim, SearchSpace
+
+JSON_PATH = "BENCH_tier.json"
+
+NB_CFG = NeuralConfig()          # the production default (DESIGN.md §15)
+NB_NMAX = 32                     # promotion point of the NB lane
+CHECKPOINTS = (64, 192, 576)     # observation counts measured, all > n_max
+
+COST_SPACE = SearchSpace((Dim("x0", 0.0, 1.0), Dim("x1", 0.0, 1.0)))
+COST_SEED_N = 8                  # shared seed trials before the BO loop
+COST_TARGET = -0.002             # best value to reach (optimum is 0.0)
+
+
+def _rng_obs(rng: np.random.RandomState, d: int) -> tuple[np.ndarray, float]:
+    u = rng.rand(d).astype(np.float32)
+    return u, float(-np.sum((u - 0.37) ** 2))
+
+
+def _grow_to(pool: StudyPool, rng: np.random.RandomState, n: int) -> None:
+    d = pool.studies[0].space.dim
+    while pool.n_real(0) < n:
+        u, v = _rng_obs(rng, d)
+        pool.absorb(0, pool._make_trial(0, u), v)
+
+
+def _suggest_us(pool: StudyPool, warmup: int, reps: int) -> float:
+    for _ in range(warmup):
+        pool.suggest(0, 1)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        pool.suggest(0, 1)       # Trial units land on host: synced
+    return 1e6 * (time.perf_counter() - t0) / reps
+
+
+def _cfg(n_max: int, acq: AcqConfig | None = None) -> SchedulerConfig:
+    return SchedulerConfig(n_max=n_max, seed=0, ckpt_every=10 ** 9,
+                           neural=NB_CFG,
+                           acq=acq or AcqConfig(restarts=16,
+                                                ascent_steps=8))
+
+
+def _bench_latency(warmup: int, reps: int) -> list[dict]:
+    """Per-suggest latency at each checkpoint, GP lane vs NB lane.
+
+    The lazy GP computes over its PADDED buffer, so per-suggest cost
+    tracks the provisioned n_max, not the live count: a GP that must
+    keep serving at n observations has to be provisioned with n_max >= n
+    and pays the quadratic posterior at that size.  The GP lane therefore
+    re-provisions n_max = n per checkpoint; the NB lane is promoted once
+    at NB_NMAX and grown through the same counts — flat in n."""
+    nb = StudyPool([RESNET_SPACE], _cfg(NB_NMAX))
+    rng_nb = np.random.RandomState(5)
+    _grow_to(nb, rng_nb, NB_NMAX)
+    nb.promote(0)
+    cells = []
+    for n in CHECKPOINTS:
+        gp = StudyPool([RESNET_SPACE], _cfg(n))
+        _grow_to(gp, np.random.RandomState(5), n)
+        _grow_to(nb, rng_nb, n)
+        cells.append({"n": n,
+                      "gp_suggest_us": _suggest_us(gp, warmup, reps),
+                      "nb_suggest_us": _suggest_us(nb, warmup, reps)})
+    return cells
+
+
+def _cost_fn(u: np.ndarray) -> float:
+    # evaluation cost climbs steeply along x0; the optimum sits mid-cheap
+    return float(0.2 + 3.0 * u[0] ** 2)
+
+
+def _cost_obj(u: np.ndarray) -> float:
+    return float(-np.sum((np.asarray(u) - (0.25, 0.7)) ** 2))
+
+
+def _bench_cost_mode(name: str, budget: float) -> dict:
+    """Drive one escalated study to an evaluation-cost budget."""
+    pool = StudyPool([COST_SPACE],
+                     _cfg(COST_SEED_N, AcqConfig(name=name, restarts=24,
+                                                 ascent_steps=10)))
+    rng = np.random.RandomState(17)
+    for _ in range(COST_SEED_N):   # identical seed design in both modes
+        u = rng.rand(2).astype(np.float32)
+        pool.absorb(0, pool._make_trial(0, u), _cost_obj(u),
+                    cost=_cost_fn(u))
+    pool.promote(0)
+    spent, best, trials = 0.0, -np.inf, 0
+    cost_to_target = None
+    while spent < budget:
+        tr = pool.suggest(0, 1)[0]
+        c, v = _cost_fn(tr.unit), _cost_obj(tr.unit)
+        pool.absorb(0, tr, v, cost=c)
+        spent += c
+        trials += 1
+        best = max(best, v)
+        if cost_to_target is None and best >= COST_TARGET:
+            cost_to_target = spent
+    return {"acq": name, "cost_budget": budget, "trials": trials,
+            "best_value": best, "mean_cost_per_trial": spent / trials,
+            "cost_to_target": cost_to_target}
+
+
+def run(full: bool = False, json_path: str = JSON_PATH):
+    warmup, reps = (3, 20) if full else (2, 8)
+    budget = 40.0 if full else 18.0
+    cells = _bench_latency(warmup, reps)
+    first, last = cells[0], cells[-1]
+    gp_growth = last["gp_suggest_us"] / first["gp_suggest_us"]
+    nb_growth = last["nb_suggest_us"] / first["nb_suggest_us"]
+    out = []
+    for c in cells:
+        out.append(f"tier_n{c['n']},{c['nb_suggest_us']:.0f},"
+                   f"gp_us={c['gp_suggest_us']:.0f} "
+                   f"nb_over_gp={c['nb_suggest_us'] / c['gp_suggest_us']:.2f}")
+    modes = {m: _bench_cost_mode(m, budget) for m in ("ei", "ei_per_cost")}
+    for m, rec in modes.items():
+        ctt = rec["cost_to_target"]
+        out.append(f"tier_{m},,trials={rec['trials']} "
+                   f"best={rec['best_value']:.4f} "
+                   f"mean_cost={rec['mean_cost_per_trial']:.2f} "
+                   f"cost_to_target={'-' if ctt is None else f'{ctt:.1f}'}")
+    import jax
+    payload = {
+        "backend": jax.default_backend(),
+        "nb_n_max": NB_NMAX,
+        "neural": {"hidden": NB_CFG.hidden, "features": NB_CFG.features},
+        "latency_cells": cells,
+        # growth of per-suggest latency from the first to the last
+        # checkpoint (9x the observations): the GP lane grows with its
+        # ledger, the escalated lane stays flat
+        "gp_latency_growth": gp_growth,
+        "nb_latency_growth": nb_growth,
+        "cost_modes": list(modes.values()),
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    out.append(f"tier_json,,path={json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -18,6 +18,10 @@ Prints ``name,us_per_call,derived`` CSV rows.
   * bench_mixed    — mixed (float/int/categorical) space through the
                       gateway + mixed-gram substrate parity at 1 and 8
                       virtual devices, emits BENCH_mixed.json
+  * bench_tier     — saturation escalation tier: suggest latency past
+                      n_max (lazy-GP quadratic vs flat neural-basis) and
+                      EI-per-unit-cost vs plain EI at a fixed evaluation
+                      cost budget, emits BENCH_tier.json
 
 `python -m benchmarks.run [--full] [--only NAME]`.  The roofline analysis
 (§Roofline) is separate: `python -m benchmarks.roofline results/*.jsonl`
@@ -40,7 +44,7 @@ def main() -> None:
     from benchmarks import (bench_cholesky, bench_lag, bench_levy,
                             bench_mixed, bench_nn_hpo, bench_parallel,
                             bench_pool, bench_serve, bench_shard,
-                            bench_substrate)
+                            bench_substrate, bench_tier)
     suites = {
         "cholesky": lambda: bench_cholesky.run(full=args.full),
         "levy": lambda: bench_levy.run(full=args.full),
@@ -52,6 +56,7 @@ def main() -> None:
         "shard": lambda: bench_shard.run(full=args.full),
         "serve": lambda: bench_serve.run(full=args.full),
         "mixed": lambda: bench_mixed.run(full=args.full),
+        "tier": lambda: bench_tier.run(full=args.full),
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -14,21 +14,27 @@ from repro.core.cholesky import (cholesky_naive, cholesky_xla, lazy_append_row,
                                  lazy_full_refactor, padded_trsv)
 from repro.core.descriptor import (TypeDescriptor, all_continuous,
                                    project_units, stack_descriptors)
-from repro.core.gp import (GPCapacityError, GPConfig, LazyGPState, append,
+from repro.core.gp import (BackpressureError, GPCapacityError, GPConfig,
+                           LazyGPState, StudySaturatedError, append,
                            append_batch, dense_posterior, ensure_capacity,
                            init_pool_state, init_state,
                            log_marginal_likelihood, maybe_refit, posterior,
                            refactor, refit_params, stack_states,
                            unstack_state)
+from repro.core.neural_basis import (NeuralBasisState, NeuralConfig,
+                                     nb_from_data, nb_posterior)
 from repro.core.kernels import (KERNELS, KernelParams, gram,
                                 make_mixed_kernel, matern32, matern52,
                                 mixed_matern52, rbf)
 from repro.core.levy import levy, levy_1d, levy_bounds, neg_levy
 
 __all__ = [
-    "AcqConfig", "BayesOpt", "BOConfig", "BOHistory", "GPCapacityError",
+    "AcqConfig", "BackpressureError", "BayesOpt", "BOConfig", "BOHistory",
+    "GPCapacityError",
     "GPConfig", "KERNELS",
-    "KernelParams", "LazyGPState", "TypeDescriptor", "all_continuous",
+    "KernelParams", "LazyGPState", "NeuralBasisState", "NeuralConfig",
+    "StudySaturatedError", "TypeDescriptor", "all_continuous",
+    "nb_from_data", "nb_posterior",
     "append", "append_batch", "cholesky_naive",
     "cholesky_xla", "dense_posterior", "ensure_capacity",
     "expected_improvement", "gram",

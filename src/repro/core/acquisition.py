@@ -74,8 +74,25 @@ def upper_confidence_bound(mean: Array, var: Array, f_best: Array,
 
 ACQUISITIONS: dict[str, Callable[..., Array]] = {
     "ei": expected_improvement,
+    # EI-per-unit-cost (FABOLAS-style): the posterior term is plain EI; the
+    # division by the predicted cost happens in `_acq_value` when the caller
+    # supplies a `log_cost_fn` (a learned log-cost head — see
+    # repro.core.neural_basis).  Without one it degrades to plain EI, so a
+    # study configured for cost-aware acquisition still serves on tiers
+    # that carry no cost model.
+    "ei_per_cost": expected_improvement,
     "ucb": upper_confidence_bound,
 }
+
+# Predicted log-cost is clipped before exponentiation so a wild early cost
+# head can never zero out (or explode) the acquisition surface.
+_LOG_COST_CLIP = 20.0
+
+
+def cost_scaled(value: Array, log_cost: Array) -> Array:
+    """acq / exp(log_cost): EI per unit of predicted cost (FABOLAS)."""
+    return value * jnp.exp(-jnp.clip(log_cost, -_LOG_COST_CLIP,
+                                     _LOG_COST_CLIP))
 
 
 FUSED_MODES = ("auto", "on", "off")
@@ -97,11 +114,15 @@ class AcqConfig:
 def _acq_value(state: gp_mod.LazyGPState, kernel: KernelFn, x: Array,
                f_best: Array, cfg: AcqConfig,
                implementation: str = "auto",
-               ymean: Array | None = None) -> Array:
+               ymean: Array | None = None,
+               log_cost_fn: Callable[[Array], Array] | None = None) -> Array:
     mean, var = gp_mod.posterior(state, kernel, x[None, :],
                                  implementation=implementation, ymean=ymean)
     fn = ACQUISITIONS[cfg.name]
-    return fn(mean, var, f_best, cfg.xi)[0]
+    val = fn(mean, var, f_best, cfg.xi)[0]
+    if cfg.name == "ei_per_cost" and log_cost_fn is not None:
+        val = cost_scaled(val, log_cost_fn(x))
+    return val
 
 
 def _f_best(state: gp_mod.LazyGPState) -> Array:
@@ -143,7 +164,8 @@ def _use_fused(cfg: AcqConfig, kernel: KernelFn, implementation: str) -> bool:
 
 def _make_eval_batch(state: gp_mod.LazyGPState, kernel: KernelFn,
                      cfg: AcqConfig, implementation: str, fused: bool,
-                     f_best: Array, ymean: Array, tune_s: int):
+                     f_best: Array, ymean: Array, tune_s: int,
+                     log_cost_fn: Callable[[Array], Array] | None = None):
     """Build `eval(X (r, d)) -> (vals (r,), grads (r, d))` for the ascent.
 
     Fused: hoists the loop-invariant precompute — the active mask,
@@ -170,7 +192,8 @@ def _make_eval_batch(state: gp_mod.LazyGPState, kernel: KernelFn,
 
         return eval_batch
     value = lambda x: _acq_value(state, kernel, x, f_best, cfg,
-                                 implementation, ymean=ymean)
+                                 implementation, ymean=ymean,
+                                 log_cost_fn=log_cost_fn)
     return jax.vmap(jax.value_and_grad(value))
 
 
@@ -193,81 +216,39 @@ def ei_value_and_grad(state: gp_mod.LazyGPState, kernel: KernelFn,
     return eval_batch(x)
 
 
-def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
-                         lo: Array, hi: Array, key: Array,
-                         cfg: AcqConfig, top_t: int = 1,
-                         *, implementation: str = "auto",
-                         restart_axis: str | None = None,
-                         restart_shards: int = 1,
-                         desc: desc_mod.TypeDescriptor | None = None,
-                         _tune_s: int = 1) -> tuple[Array, Array]:
-    """Return (points (top_t, d), acq values (top_t,)), best first.
+def ascend_acquisition(eval_batch, lo: Array, hi: Array, key: Array,
+                       cfg: AcqConfig, top_t: int = 1,
+                       *, project=None,
+                       restart_axis: str | None = None,
+                       restart_shards: int = 1,
+                       dtype=jnp.float32) -> tuple[Array, Array]:
+    """Model-free multi-start ascent + layout-stable selection core.
 
-    top_t = 1 is standard sequential BO; top_t = t implements the paper's
-    parallel suggestion of the t best distinct local maxima.  `implementation`
-    selects the linalg substrate for the posterior solves inside the ascent.
-
-    Batched (DESIGN.md §7): a stacked state (leading study axis S) returns
-    `((S, top_t, d), (S, top_t))` — one vmapped dispatch suggests for every
-    study at once.  `key` may be a single key (split per study) or `(S,)`
-    stacked keys; `lo`/`hi` may be shared `(d,)` or per-study `(S, d)`.
-
-    Sharded (DESIGN.md §8): inside a `shard_map` whose mesh carries a
-    `restart_axis` of size `restart_shards`, each shard ascends only its
-    R/restart_shards slice of the seeds and an `all_gather` reassembles the
-    full (R,) candidate set before dedup — every shard then computes the
-    identical result (replicated outputs).  Seeds are generated from the
-    full `key` on every shard and sliced by `axis_index`, so the sharded
-    ascent sees exactly the seeds the unsharded path would.
-
-    Mixed spaces (DESIGN.md §10): with a `TypeDescriptor`, every ascent
-    step interleaves the projected-gradient update on the continuous
-    coordinates with `descriptor.project_units` round-and-repair onto the
-    int/categorical lattice, so candidates are always feasible.  The
-    projection is masked arithmetic on the descriptor arrays — batched
-    states may carry a stacked `(S, d)`-leaved descriptor (studies with
-    *different* type layouts vmap together), but then `kernel` must itself
-    be layout-correct per study (the engine builds per-study closures; a
-    shared `(d,)` descriptor works with one shared kernel).
+    `eval_batch(X (r, d)) -> (vals (r,), grads (r, d))` is the acquisition
+    oracle; everything else — seed generation, projected-gradient ascent,
+    restart sharding, tie-break-quantized argmax / greedy top-t dedup with
+    jittered backfill — is model-independent and shared between the
+    lazy-GP tier (`optimize_acquisition` builds the oracle from a
+    `LazyGPState`) and the neural-basis tier (repro.core.neural_basis
+    builds it from the Bayesian linear head, optionally cost-scaled).
+    `project` (optional) repairs each iterate onto a feasible lattice
+    (mixed spaces, DESIGN.md §10).
     """
-    if state.is_batched:
-        n_studies = state.x_buf.shape[0]
-        keys = key if key.ndim == 2 else jax.random.split(key, n_studies)
-        lo = jnp.asarray(lo)
-        hi = jnp.asarray(hi)
-        d_ax = 0 if desc is not None and desc.is_batched else None
-        return jax.vmap(
-            lambda st, k, l, h, dc: optimize_acquisition(
-                st, kernel, l, h, k, cfg, top_t,
-                implementation=implementation, restart_axis=restart_axis,
-                restart_shards=restart_shards, desc=dc,
-                _tune_s=n_studies),
-            in_axes=(0, 0,
-                     0 if lo.ndim == 2 else None,
-                     0 if hi.ndim == 2 else None,
-                     d_ax))(state, keys, lo, hi, desc)
     if cfg.restarts % restart_shards:
         raise ValueError(
             f"restart shards ({restart_shards}) must divide "
             f"cfg.restarts ({cfg.restarts})")
-    d = state.dim
-    # Loop-invariant hoist: f_best and the active-observation mean are
-    # computed once per suggest call and closed over — never re-reduced
-    # inside the jitted restart loop (pinned by a trace-count test).
-    f_best = _f_best(state)
-    ymean = gp_mod._ymean(state)
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    d = lo.shape[-1]
     width = hi - lo
 
     seeds = lo + (hi - lo) * jax.random.uniform(key, (cfg.restarts, d),
-                                                dtype=state.x_buf.dtype)
+                                                dtype=dtype)
 
-    fused = _use_fused(cfg, kernel, implementation)
-    eval_batch = _make_eval_batch(state, kernel, cfg, implementation, fused,
-                                  f_best, ymean, _tune_s)
-    project = ((lambda u: desc_mod.project_units(u, desc))
-               if desc is not None else (lambda u: u))
-    project_rows = ((lambda u: jax.vmap(project)(u))
-                    if desc is not None else (lambda u: u))
+    point_project = project if project is not None else (lambda u: u)
+    project_rows = ((lambda u: jax.vmap(point_project)(u))
+                    if project is not None else (lambda u: u))
 
     def ascend_batch(x):
         # Whole-batch ascent: every step evaluates the (r, d) candidate
@@ -342,11 +323,82 @@ def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
     # so mixed-space backfills stay on the feasible lattice).
     jitter = 0.01 * width * jax.random.normal(
         jax.random.fold_in(key, 1), (top_t, d), dtype=finals.dtype)
-    fallback = jax.vmap(project)(jnp.clip(chosen[0] + jitter, lo, hi))
+    fallback = jax.vmap(point_project)(jnp.clip(chosen[0] + jitter, lo, hi))
     filled = jnp.arange(top_t) < count
     chosen = jnp.where(filled[:, None], chosen, fallback)
     chosen_vals = jnp.where(filled, chosen_vals, chosen_vals[0])
     return chosen, chosen_vals
+
+
+def optimize_acquisition(state: gp_mod.LazyGPState, kernel: KernelFn,
+                         lo: Array, hi: Array, key: Array,
+                         cfg: AcqConfig, top_t: int = 1,
+                         *, implementation: str = "auto",
+                         restart_axis: str | None = None,
+                         restart_shards: int = 1,
+                         desc: desc_mod.TypeDescriptor | None = None,
+                         log_cost_fn: Callable[[Array], Array] | None = None,
+                         _tune_s: int = 1) -> tuple[Array, Array]:
+    """Return (points (top_t, d), acq values (top_t,)), best first.
+
+    top_t = 1 is standard sequential BO; top_t = t implements the paper's
+    parallel suggestion of the t best distinct local maxima.  `implementation`
+    selects the linalg substrate for the posterior solves inside the ascent.
+
+    Batched (DESIGN.md §7): a stacked state (leading study axis S) returns
+    `((S, top_t, d), (S, top_t))` — one vmapped dispatch suggests for every
+    study at once.  `key` may be a single key (split per study) or `(S,)`
+    stacked keys; `lo`/`hi` may be shared `(d,)` or per-study `(S, d)`.
+
+    Sharded (DESIGN.md §8): inside a `shard_map` whose mesh carries a
+    `restart_axis` of size `restart_shards`, each shard ascends only its
+    R/restart_shards slice of the seeds and an `all_gather` reassembles the
+    full (R,) candidate set before dedup — every shard then computes the
+    identical result (replicated outputs).  Seeds are generated from the
+    full `key` on every shard and sliced by `axis_index`, so the sharded
+    ascent sees exactly the seeds the unsharded path would.
+
+    Mixed spaces (DESIGN.md §10): with a `TypeDescriptor`, every ascent
+    step interleaves the projected-gradient update on the continuous
+    coordinates with `descriptor.project_units` round-and-repair onto the
+    int/categorical lattice, so candidates are always feasible.  The
+    projection is masked arithmetic on the descriptor arrays — batched
+    states may carry a stacked `(S, d)`-leaved descriptor (studies with
+    *different* type layouts vmap together), but then `kernel` must itself
+    be layout-correct per study (the engine builds per-study closures; a
+    shared `(d,)` descriptor works with one shared kernel).
+    """
+    if state.is_batched:
+        n_studies = state.x_buf.shape[0]
+        keys = key if key.ndim == 2 else jax.random.split(key, n_studies)
+        lo = jnp.asarray(lo)
+        hi = jnp.asarray(hi)
+        d_ax = 0 if desc is not None and desc.is_batched else None
+        return jax.vmap(
+            lambda st, k, l, h, dc: optimize_acquisition(
+                st, kernel, l, h, k, cfg, top_t,
+                implementation=implementation, restart_axis=restart_axis,
+                restart_shards=restart_shards, desc=dc,
+                log_cost_fn=log_cost_fn, _tune_s=n_studies),
+            in_axes=(0, 0,
+                     0 if lo.ndim == 2 else None,
+                     0 if hi.ndim == 2 else None,
+                     d_ax))(state, keys, lo, hi, desc)
+    # Loop-invariant hoist: f_best and the active-observation mean are
+    # computed once per suggest call and closed over — never re-reduced
+    # inside the jitted restart loop (pinned by a trace-count test).
+    f_best = _f_best(state)
+    ymean = gp_mod._ymean(state)
+
+    fused = _use_fused(cfg, kernel, implementation)
+    eval_batch = _make_eval_batch(state, kernel, cfg, implementation, fused,
+                                  f_best, ymean, _tune_s, log_cost_fn)
+    project = ((lambda u: desc_mod.project_units(u, desc))
+               if desc is not None else None)
+    return ascend_acquisition(eval_batch, lo, hi, key, cfg, top_t,
+                              project=project, restart_axis=restart_axis,
+                              restart_shards=restart_shards,
+                              dtype=state.x_buf.dtype)
 
 
 def suggest_q(state: gp_mod.LazyGPState, kernel: KernelFn,

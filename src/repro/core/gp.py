@@ -36,17 +36,47 @@ Array = jax.Array
 
 
 class GPCapacityError(RuntimeError):
-    """Raised when an append would overflow the fixed (n_max, …) buffers.
+    """Base of the capacity-rejection taxonomy (kept as the catch-all for
+    back-compat: every admission rejection still `isinstance`-matches it).
 
-    The padded state cannot grow; without this guard the row write at index
-    n == n_max would clamp and silently corrupt the last row of the factor.
+    Two subclasses carry the distinction a client needs to react correctly
+    — `retryable` says whether waiting and retrying the SAME call can ever
+    succeed:
+
+      * `StudySaturatedError` — terminal: the study's lazy-GP slot is at
+        `n_max` (pre-escalation).  Retrying never helps; the study must be
+        promoted to the neural-basis tier (or its budget is spent).
+      * `BackpressureError` — transient: queue depth / in-flight caps /
+        slot contention.  Retry after the next tick or after results come
+        back.
+
+    The transport layer preserves the concrete type over the wire
+    (repro.hpo.transport._WIRE_ERRORS) so remote clients see the same
+    taxonomy as in-process ones.
     """
+
+    retryable = False
+
+
+class StudySaturatedError(GPCapacityError):
+    """Terminal: an append/ask can never fit the study's fixed (n_max, …)
+    buffers.  Without this guard the row write at index n == n_max would
+    clamp and silently corrupt the last row of the factor."""
+
+    retryable = False
+
+
+class BackpressureError(GPCapacityError):
+    """Transient admission rejection (queue full, in-flight cap, every slot
+    busy): the same call can succeed after the next tick — retry."""
+
+    retryable = True
 
 
 def ensure_capacity(n: int, n_max: int, incoming: int = 1) -> None:
     """Host-side capacity guard: fail loudly *before* the buffer overflows."""
     if n + incoming > n_max:
-        raise GPCapacityError(
+        raise StudySaturatedError(
             f"GP buffer full: n={n} + {incoming} incoming observation(s) "
             f"exceeds n_max={n_max}; raise n_max (GPConfig/BOConfig/"
             f"SchedulerConfig) or stop absorbing")

@@ -1,0 +1,428 @@
+"""DNGO-style neural-basis surrogate: the saturation escalation tier.
+
+The paper's lazy GP serves a study beautifully until its padded buffers
+fill: at ``n == n_max`` every append path is a terminal
+`StudySaturatedError`.  This module is what a saturated study escalates
+TO (DESIGN.md §15): an adaptive-basis model in the style of "Scalable
+Bayesian Optimization Using Deep Neural Networks" (Snoek et al., DNGO) —
+a small MLP feature map phi(x) trained on the study's full ledger, with
+an **exact Bayesian linear-regression head** on top.  The posterior is
+two GEMMs against cached Gram factors:
+
+    A      = Phi^T Phi + sigma^2 I          (m+1, m+1), cached Cholesky
+    mean   = y_mean + phi(x)^T w,   w = A^{-1} Phi^T (y - y_mean)
+    var    = s^2 * phi(x)^T A^{-1} phi(x)
+
+so suggest cost is O(m^2) per candidate — FLAT in n, vs the lazy GP's
+O(n^2).  Appends are a rank-1 factor update + one O(m^3) re-Cholesky
+(m is tens, not thousands).  The MLP itself refits on a cadence
+(`NeuralConfig.refit_every`, the analogue of the GP's `lag`): a few
+hundred Adam steps of full-ledger regression through a throwaway linear
+output layer, after which the Bayes head is rebuilt exactly from the new
+features.
+
+A second linear head on the SAME features learns **log cost** from the
+`cost=` values threaded through tells (FABOLAS-style, Klein et al.), so
+the acquisition can run in EI-per-unit-cost mode
+(`AcqConfig(name="ei_per_cost")` + `acquisition.cost_scaled`): cheap
+probes dominate while expensive regions must promise proportionally more
+improvement.
+
+Unlike the GP's fixed buffers the ledger here GROWS: capacity doubles
+when full (`nb_grow`, host-side), so recompiles happen O(log n) times.
+Everything is a plain float32 array pytree — eviction snapshots,
+checkpoints, and the wire all round-trip it bitwise (`nb_to_json` /
+`nb_from_json` carry raw base64 bytes, never decimal reprs).
+"""
+from __future__ import annotations
+
+import base64
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acquisition as acq_mod
+from repro.core import descriptor as desc_mod
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuralConfig:
+    """Shape + training knobs of the neural-basis tier (static: baked into
+    the jitted programs, hashable, rides SchedulerConfig into worker
+    specs)."""
+
+    hidden: int = 32        # MLP hidden width
+    features: int = 16      # m: basis features (head dims m+1 with bias)
+    refit_every: int = 32   # appends between MLP refits (the tier's `lag`)
+    refit_steps: int = 200  # Adam steps per refit
+    refit_lr: float = 3e-3
+    noise2: float = 1e-4    # ridge sigma^2 of the Bayes head
+    cap0: int = 64          # minimum initial ledger capacity
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NeuralBasisState:
+    """Padded ledger + MLP params + cached Bayes-head factors.
+
+    `x_buf/y_buf/c_buf` rows beyond `n` are zero padding (masked out of
+    every reduction).  `c_buf` holds LOG cost.  The factor cache
+    (`ptp/pty/ptc/pt1`, `chol`, `w_y/w_c`) is always consistent with the
+    ledger prefix and the current MLP params — appends update it
+    incrementally, refits rebuild it exactly.
+    """
+
+    x_buf: Array        # (cap, d) observed points (unit space)
+    y_buf: Array        # (cap,) observations
+    c_buf: Array        # (cap,) log cost per observation
+    n: Array            # () int32 active count
+    since_refit: Array  # () int32 appends since the last MLP refit
+    w1: Array           # (d, h) MLP layer 1
+    b1: Array           # (h,)
+    w2: Array           # (h, m) MLP layer 2 (its tanh output is the basis)
+    b2: Array           # (m,)
+    w3: Array           # (m,) throwaway linear output head (refit only)
+    b3: Array           # ()
+    ptp: Array          # (m+1, m+1) Phi^T Phi (bias feature appended)
+    pty: Array          # (m+1,) Phi^T y
+    ptc: Array          # (m+1,) Phi^T log-cost
+    pt1: Array          # (m+1,) Phi^T 1 (for centering)
+    chol: Array         # (m+1, m+1) lower Cholesky of ptp + noise2 I
+    w_y: Array          # (m+1,) Bayes-head weights on centered y
+    w_c: Array          # (m+1,) log-cost-head weights on centered c
+    y_mean: Array       # () ledger mean of y at the last refit
+    c_mean: Array       # () ledger mean of log cost at the last refit
+    s2: Array           # () residual variance scale for the posterior
+
+    @property
+    def cap(self) -> int:
+        return self.x_buf.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.x_buf.shape[1]
+
+
+# -- features + posterior -----------------------------------------------------
+def _features(state: NeuralBasisState, x: Array) -> Array:
+    """phi(x): (…, m+1) — two tanh layers + a constant bias feature."""
+    h = jnp.tanh(x @ state.w1 + state.b1)
+    f = jnp.tanh(h @ state.w2 + state.b2)
+    one = jnp.ones(f.shape[:-1] + (1,), f.dtype)
+    return jnp.concatenate([f, one], axis=-1)
+
+
+def nb_posterior(state: NeuralBasisState, x: Array
+                 ) -> tuple[Array, Array]:
+    """Posterior mean/var at `x (r, d)` — two GEMMs, O(m^2) per point."""
+    phi = _features(state, x)                       # (r, m+1)
+    mean = state.y_mean + phi @ state.w_y
+    sol = jax.scipy.linalg.cho_solve((state.chol, True), phi.T)  # (m+1, r)
+    var = state.s2 * jnp.sum(phi * sol.T, axis=-1)
+    return mean, jnp.maximum(var, 1e-10)
+
+
+def nb_log_cost(state: NeuralBasisState, x: Array) -> Array:
+    """Predicted log cost at `x (…, d)` (the FABOLAS cost head)."""
+    return state.c_mean + _features(state, x) @ state.w_c
+
+
+def _active_mask(state: NeuralBasisState) -> Array:
+    return jnp.arange(state.cap) < state.n
+
+
+def _f_best(state: NeuralBasisState) -> Array:
+    m = _active_mask(state)
+    return jnp.max(jnp.where(m, state.y_buf, -jnp.inf))
+
+
+# -- head solve (shared by append + refit) ------------------------------------
+def _solve_heads(ncfg: NeuralConfig, ptp: Array, pty: Array, ptc: Array,
+                 pt1: Array, y_mean: Array, c_mean: Array
+                 ) -> tuple[Array, Array, Array]:
+    a = ptp + ncfg.noise2 * jnp.eye(ptp.shape[0], dtype=ptp.dtype)
+    chol = jax.scipy.linalg.cholesky(a, lower=True)
+    w_y = jax.scipy.linalg.cho_solve((chol, True), pty - y_mean * pt1)
+    w_c = jax.scipy.linalg.cho_solve((chol, True), ptc - c_mean * pt1)
+    return chol, w_y, w_c
+
+
+def _rebuild_cache(state: NeuralBasisState, ncfg: NeuralConfig
+                   ) -> NeuralBasisState:
+    """Exact factor rebuild from the full (masked) ledger — refit/init."""
+    mask = _active_mask(state)
+    nf = jnp.maximum(state.n.astype(state.y_buf.dtype), 1.0)
+    phi = _features(state, state.x_buf) * mask[:, None]  # (cap, m+1)
+    y_mean = jnp.sum(jnp.where(mask, state.y_buf, 0.0)) / nf
+    c_mean = jnp.sum(jnp.where(mask, state.c_buf, 0.0)) / nf
+    ptp = phi.T @ phi
+    pty = phi.T @ jnp.where(mask, state.y_buf, 0.0)
+    ptc = phi.T @ jnp.where(mask, state.c_buf, 0.0)
+    pt1 = jnp.sum(phi, axis=0)
+    chol, w_y, w_c = _solve_heads(ncfg, ptp, pty, ptc, pt1, y_mean, c_mean)
+    # Residual variance of the new head on the ledger: the posterior's
+    # scale.  Floored at noise2 so a perfectly interpolated ledger still
+    # admits exploration.
+    pred = y_mean + phi @ w_y
+    resid = jnp.where(mask, state.y_buf - pred, 0.0)
+    s2 = jnp.maximum(jnp.sum(resid * resid) / nf, ncfg.noise2)
+    return dataclasses.replace(state, ptp=ptp, pty=pty, ptc=ptc, pt1=pt1,
+                               chol=chol, w_y=w_y, w_c=w_c, y_mean=y_mean,
+                               c_mean=c_mean, s2=s2,
+                               since_refit=jnp.int32(0))
+
+
+# -- append (rank-1) ----------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("ncfg",))
+def nb_append(state: NeuralBasisState, x: Array, y: Array, logc: Array,
+              *, ncfg: NeuralConfig) -> NeuralBasisState:
+    """One observation: ledger row write + rank-1 factor update + O(m^3)
+    re-Cholesky.  Flat in n — the whole point of the tier."""
+    phi = _features(state, x)                        # (m+1,)
+    ptp = state.ptp + jnp.outer(phi, phi)
+    pty = state.pty + phi * y
+    ptc = state.ptc + phi * logc
+    pt1 = state.pt1 + phi
+    chol, w_y, w_c = _solve_heads(ncfg, ptp, pty, ptc, pt1,
+                                  state.y_mean, state.c_mean)
+    return dataclasses.replace(
+        state,
+        x_buf=jax.lax.dynamic_update_slice(state.x_buf, x[None, :],
+                                           (state.n, 0)),
+        y_buf=jax.lax.dynamic_update_slice(state.y_buf,
+                                           y[None].astype(state.y_buf.dtype),
+                                           (state.n,)),
+        c_buf=jax.lax.dynamic_update_slice(
+            state.c_buf, logc[None].astype(state.c_buf.dtype), (state.n,)),
+        n=state.n + 1, since_refit=state.since_refit + 1,
+        ptp=ptp, pty=pty, ptc=ptc, pt1=pt1, chol=chol, w_y=w_y, w_c=w_c)
+
+
+# -- refit (MLP training + exact cache rebuild) -------------------------------
+@functools.partial(jax.jit, static_argnames=("ncfg",))
+def nb_refit(state: NeuralBasisState, *, ncfg: NeuralConfig
+             ) -> NeuralBasisState:
+    """Retrain the feature map on the full ledger, then rebuild the Bayes
+    head exactly.  DNGO training: full-batch Adam on the MSE of a
+    throwaway linear output head; the trained hidden activations become
+    the basis."""
+    mask = _active_mask(state)
+    nf = jnp.maximum(state.n.astype(state.y_buf.dtype), 1.0)
+    y_mean = jnp.sum(jnp.where(mask, state.y_buf, 0.0)) / nf
+    targets = jnp.where(mask, state.y_buf - y_mean, 0.0)
+
+    def loss(params):
+        w1, b1, w2, b2, w3, b3 = params
+        h = jnp.tanh(state.x_buf @ w1 + b1)
+        f = jnp.tanh(h @ w2 + b2)
+        pred = f @ w3 + b3
+        err = jnp.where(mask, pred - targets, 0.0)
+        return jnp.sum(err * err) / nf
+
+    params = (state.w1, state.b1, state.w2, state.b2, state.w3, state.b3)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    b1_, b2_, eps = 0.9, 0.999, 1e-8
+
+    def step(carry, t):
+        params, m, v = carry
+        g = jax.grad(loss)(params)
+        m = jax.tree_util.tree_map(
+            lambda a, b: b1_ * a + (1 - b1_) * b, m, g)
+        v = jax.tree_util.tree_map(
+            lambda a, b: b2_ * a + (1 - b2_) * b * b, v, g)
+        tf = t.astype(state.y_buf.dtype) + 1.0
+        params = jax.tree_util.tree_map(
+            lambda p, mm, vv: p - ncfg.refit_lr
+            * (mm / (1 - b1_ ** tf)) / (jnp.sqrt(vv / (1 - b2_ ** tf)) + eps),
+            params, m, v)
+        return (params, m, v), None
+
+    (params, _, _), _ = jax.lax.scan(step, (params, zeros, zeros),
+                                     jnp.arange(ncfg.refit_steps))
+    w1, b1, w2, b2, w3, b3 = params
+    state = dataclasses.replace(state, w1=w1, b1=b1, w2=w2, b2=b2,
+                                w3=w3, b3=b3)
+    return _rebuild_cache(state, ncfg)
+
+
+# -- init / promotion ---------------------------------------------------------
+def nb_init(d: int, cap: int, key: Array, ncfg: NeuralConfig
+            ) -> NeuralBasisState:
+    """Empty state with MLP params drawn from `key` (scaled normal)."""
+    h, m = ncfg.hidden, ncfg.features
+    k1, k2, k3 = jax.random.split(key, 3)
+    f32 = jnp.float32
+    z = functools.partial(jnp.zeros, dtype=f32)
+    m1 = m + 1
+    return NeuralBasisState(
+        x_buf=z((cap, d)), y_buf=z((cap,)), c_buf=z((cap,)),
+        n=jnp.int32(0), since_refit=jnp.int32(0),
+        w1=(jax.random.normal(k1, (d, h), f32) / np.sqrt(d)),
+        b1=z((h,)),
+        w2=(jax.random.normal(k2, (h, m), f32) / np.sqrt(h)),
+        b2=z((m,)),
+        w3=(jax.random.normal(k3, (m,), f32) / np.sqrt(m)),
+        b3=jnp.float32(0.0),
+        ptp=z((m1, m1)), pty=z((m1,)), ptc=z((m1,)), pt1=z((m1,)),
+        chol=jnp.eye(m1, dtype=f32) * np.sqrt(ncfg.noise2),
+        w_y=z((m1,)), w_c=z((m1,)),
+        y_mean=jnp.float32(0.0), c_mean=jnp.float32(0.0),
+        s2=jnp.float32(1.0))
+
+
+def nb_capacity(n0: int, ncfg: NeuralConfig) -> int:
+    """Initial ledger capacity for a promotion at n0 rows: the next power
+    of two with at least n0 rows of headroom (>= cap0)."""
+    cap = max(int(ncfg.cap0), 1)
+    while cap < 2 * n0:
+        cap *= 2
+    return cap
+
+
+def nb_from_data(xs, ys, logcs, key: Array, ncfg: NeuralConfig,
+                 cap: int | None = None) -> NeuralBasisState:
+    """Promotion entry point: train the tier on a study's full ledger.
+
+    `xs (n0, d)` / `ys (n0,)` are the saturated GP's active buffers,
+    `logcs (n0,)` the log of the costs threaded through its tells.  The
+    ledger lands padded to `cap` (default `nb_capacity`), the MLP inits
+    from `key` and trains immediately (one `nb_refit`), so the first
+    escalated suggestion already sees a fitted basis.
+    """
+    xs = np.asarray(xs, np.float32)
+    ys = np.asarray(ys, np.float32)
+    logcs = np.asarray(logcs, np.float32)
+    n0, d = xs.shape
+    cap = int(cap) if cap is not None else nb_capacity(n0, ncfg)
+    if cap < n0:
+        raise ValueError(f"nb_from_data: cap={cap} < n0={n0}")
+    state = nb_init(d, cap, key, ncfg)
+    pad = cap - n0
+    state = dataclasses.replace(
+        state,
+        x_buf=jnp.asarray(np.pad(xs, ((0, pad), (0, 0)))),
+        y_buf=jnp.asarray(np.pad(ys, (0, pad))),
+        c_buf=jnp.asarray(np.pad(logcs, (0, pad))),
+        n=jnp.int32(n0))
+    return nb_refit(state, ncfg=ncfg)
+
+
+def nb_grow(state: NeuralBasisState, ncfg: NeuralConfig
+            ) -> NeuralBasisState:
+    """Double the ledger capacity (host-side pad; factors untouched).
+    Called when n == cap — O(log n) recompiles over a study's life."""
+    del ncfg
+    cap = state.cap
+    return dataclasses.replace(
+        state,
+        x_buf=jnp.asarray(np.pad(np.asarray(state.x_buf),
+                                 ((0, cap), (0, 0)))),
+        y_buf=jnp.asarray(np.pad(np.asarray(state.y_buf), (0, cap))),
+        c_buf=jnp.asarray(np.pad(np.asarray(state.c_buf), (0, cap))))
+
+
+# -- suggest / fantasize ------------------------------------------------------
+def _make_eval_batch(state: NeuralBasisState, acq: acq_mod.AcqConfig,
+                     f_best: Array):
+    def value(x):
+        mean, var = nb_posterior(state, x[None, :])
+        fn = acq_mod.ACQUISITIONS[acq.name]
+        val = fn(mean, var, f_best, acq.xi)[0]
+        if acq.name == "ei_per_cost":
+            val = acq_mod.cost_scaled(val, nb_log_cost(state, x))
+        return val
+    return jax.vmap(jax.value_and_grad(value))
+
+
+@functools.partial(jax.jit, static_argnames=("acq", "top_t"))
+def nb_suggest(state: NeuralBasisState, key: Array, desc=None, *,
+               acq: acq_mod.AcqConfig, top_t: int = 1
+               ) -> tuple[Array, Array]:
+    """Multi-start acquisition ascent against the neural-basis posterior
+    over the unit box — the same shared core (`ascend_acquisition`) and
+    tie-break law as the lazy-GP tier, so selection is layout-stable.
+    With `acq.name == "ei_per_cost"` the surface is EI over predicted
+    cost (the learned log-cost head)."""
+    d = state.dim
+    lo = jnp.zeros((d,), state.x_buf.dtype)
+    hi = jnp.ones((d,), state.x_buf.dtype)
+    eval_batch = _make_eval_batch(state, acq, _f_best(state))
+    project = ((lambda u: desc_mod.project_units(u, desc))
+               if desc is not None else None)
+    return acq_mod.ascend_acquisition(eval_batch, lo, hi, key, acq, top_t,
+                                      project=project,
+                                      dtype=state.x_buf.dtype)
+
+
+def nb_fantasy_value(state: NeuralBasisState, x: Array, liar: str) -> Array:
+    """Liar observation for a fantasy row — mirrors gp.fantasy_values."""
+    if liar == "pessimistic":
+        m = _active_mask(state)
+        worst = jnp.max(jnp.where(m, state.y_buf, -jnp.inf))
+        return jnp.where(state.n > 0, worst, 0.0)
+    mean, _ = nb_posterior(state, x[None, :])
+    return mean[0]
+
+
+@functools.partial(jax.jit, static_argnames=("ncfg", "liar"))
+def nb_fantasize(state: NeuralBasisState, xs: Array, *,
+                 ncfg: NeuralConfig, liar: str = "mean"
+                 ) -> NeuralBasisState:
+    """Append `xs (q, d)` as fantasy rows (liar observations, predicted
+    log cost).  Fantasies are ordinary rank-1 appends here — rollback is
+    NOT a truncation but a state-snapshot restore (the factor updates are
+    not bitwise-reversible), which the pool manages (DESIGN.md §15)."""
+    def step(st, x):
+        y = nb_fantasy_value(st, x, liar)
+        return nb_append(st, x, y, nb_log_cost(st, x[None, :])[0],
+                         ncfg=ncfg), None
+    state, _ = jax.lax.scan(step, state, xs)
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("ncfg", "acq", "q", "liar"))
+def nb_ask_q(state: NeuralBasisState, key: Array, desc=None, *,
+             ncfg: NeuralConfig, acq: acq_mod.AcqConfig, q: int,
+             liar: str = "mean"
+             ) -> tuple[Array, Array, NeuralBasisState]:
+    """Sequential-fantasy q-suggestion on the neural-basis tier — the qEI
+    recursion of `acquisition.suggest_q` against the O(m^2) posterior.
+    Returns `(xs (q, d), vals (q,), fantasized state)`."""
+    keys = jax.random.split(key, q)
+
+    def step(st, k):
+        x, v = nb_suggest(st, k, desc, acq=acq, top_t=1)
+        st = nb_fantasize(st, x, ncfg=ncfg, liar=liar)
+        return st, (x[0], v[0])
+
+    st, (xs, vals) = jax.lax.scan(step, state, keys)
+    return xs, vals, st
+
+
+# -- bitwise serialization ----------------------------------------------------
+def nb_to_json(state: NeuralBasisState) -> dict:
+    """JSON-safe dict: every leaf as base64 of its raw buffer + dtype +
+    shape.  Bitwise round-trip — escalated studies ride eviction
+    snapshots, checkpoints, and migration records through this."""
+    out = {}
+    for f in dataclasses.fields(state):
+        a = np.asarray(getattr(state, f.name))
+        raw = np.ascontiguousarray(a)  # promotes 0-d to (1,): keep a.shape
+        out[f.name] = {"b64": base64.b64encode(raw.tobytes()).decode("ascii"),
+                       "dtype": a.dtype.str, "shape": list(a.shape)}
+    return out
+
+
+def nb_from_json(d: dict) -> NeuralBasisState:
+    kw = {}
+    for f in dataclasses.fields(NeuralBasisState):
+        spec = d[f.name]
+        a = np.frombuffer(base64.b64decode(spec["b64"]),
+                          np.dtype(spec["dtype"])).reshape(spec["shape"])
+        kw[f.name] = jnp.asarray(a)
+    return NeuralBasisState(**kw)

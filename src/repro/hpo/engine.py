@@ -59,6 +59,7 @@ import numpy as np
 from repro.core import acquisition as acq_mod
 from repro.core import descriptor as desc_mod
 from repro.core import gp as gp_mod
+from repro.core import neural_basis as nb_mod
 from repro.core.kernels import KERNELS, make_mixed_kernel
 from repro.hpo import mesh as mesh_mod
 
@@ -343,6 +344,27 @@ class StudyEngine:
         # single-study state into the stack at a traced index — any slot hits
         # the same compilation, so serving-time restores never re-trace.
         self._load_at = jax.jit(_write_state)
+        # -- saturation escalation tier (DESIGN.md §15) ----------------------
+        # Per-slot tier tag: 0 = lazy GP (the stacked state above), 1 =
+        # neural basis.  Like the descriptors, the tag is per-slot DATA —
+        # heterogeneous tenants share one program per tier (the nb_* jitted
+        # programs are cached by (cap, d) shape + the static NeuralConfig /
+        # AcqConfig, never re-traced per slot).  Escalated slots keep their
+        # frozen GP lane in the stack (it rides the batched programs as
+        # dead weight and is exported untouched); their live model is the
+        # NeuralBasisState held here.
+        self.neural = getattr(cfg, "neural", None) or nb_mod.NeuralConfig()
+        self._fantasy_liar = fantasy_liar
+        self._tier = np.zeros((n_studies,), np.int8)
+        self._nb: dict[int, nb_mod.NeuralBasisState] = {}
+        # Pre-fantasy snapshots: the NB tier's rank-1 factor updates are
+        # not bitwise-reversible, so fantasy rollback is a state-snapshot
+        # restore (O(m^2) floats + the ledger views — cheap, exact).
+        self._nb_shadow: dict[int, nb_mod.NeuralBasisState] = {}
+        self._nb_n: dict[int, int] = {}   # host mirror incl. fantasy rows
+        # Per-row observation costs (tell `cost=`, default 1.0) for the GP
+        # tier — the training set of the promotion-time log-cost head.
+        self._cost_host = np.ones((n_studies, cfg.n_max), np.float32)
 
     def place(self, state: gp_mod.LazyGPState) -> gp_mod.LazyGPState:
         """Put a stacked state onto the configured mesh (identity if none)."""
@@ -412,6 +434,7 @@ class StudyEngine:
     def reset_slot(self, slot: int) -> None:
         """Blank a slot for a new tenant (fresh empty single-study state)."""
         self.load_slot(slot, gp_mod.init_state(self.gp_cfg))
+        self.clear_nb_slot(slot)
 
     def set_desc(self, slot: int, desc: desc_mod.TypeDescriptor) -> None:
         """Install a (possibly different) type layout for one slot.
@@ -448,9 +471,10 @@ class StudyEngine:
                                  top_t=top_t)
 
     # -- absorb -------------------------------------------------------------
-    def absorb(self, study: int, x, y) -> None:
+    def absorb(self, study: int, x, y, cost: float = 1.0) -> None:
         """Routed completion-order absorb (+ per-study lag policy)."""
         gp_mod.ensure_capacity(self.n(study), self.cfg.n_max)
+        self._cost_host[study, self.n(study)] = cost
         self._state = self._append_at(
             self.state, *self._desc_args(), jnp.asarray(study, jnp.int32),
             jnp.asarray(x, jnp.float32),
@@ -459,17 +483,19 @@ class StudyEngine:
         self._sr_host[study] += 1
         self._refit_flagged([study])
 
-    def absorb_round(self, flags, xs, ys) -> None:
+    def absorb_round(self, flags, xs, ys, costs=None) -> None:
         """Masked batched absorb: at most one new observation per study.
 
         `flags (S,)` bool selects which studies actually append; `xs (S, d)`
         / `ys (S,)` carry the observations (ignored where flag is False).
-        One dispatch replaces up to S routed appends.
+        One dispatch replaces up to S routed appends.  `costs (S,)`
+        (optional) records each flagged observation's tell cost.
         """
         flags = np.asarray(flags, bool)
         flagged = np.flatnonzero(flags)
         for s in flagged:
             gp_mod.ensure_capacity(self.n(s), self.cfg.n_max)
+        self._record_costs(flagged, costs)
         self._state = self._append_masked(
             self.state, *self._desc_args(),
             jnp.asarray(xs, jnp.float32),
@@ -479,9 +505,16 @@ class StudyEngine:
         self._sr_host[flagged] += 1
         self._refit_flagged(flagged)
 
+    def _record_costs(self, flagged, costs) -> None:
+        if costs is None:
+            costs = np.ones((self.n_studies,), np.float32)
+        costs = np.asarray(costs, np.float32)
+        for s in flagged:
+            self._cost_host[s, self.n(s)] = costs[s]
+
     # -- fused serving round ------------------------------------------------
     def advance(self, flags, xs, ys, keys,
-                top_t: int = 1) -> tuple[Array, Array]:
+                top_t: int = 1, costs=None) -> tuple[Array, Array]:
         """Masked absorb + batched suggest in ONE jitted dispatch.
 
         Absorbs at most one flagged observation per study (exactly like
@@ -503,6 +536,7 @@ class StudyEngine:
         flagged = np.flatnonzero(flags)
         for s in flagged:
             gp_mod.ensure_capacity(self.n(s), self.cfg.n_max)
+        self._record_costs(flagged, costs)
         self._state, units, vals = self._advance_all(
             self.state, *self._desc_args(),
             jnp.asarray(xs, jnp.float32),
@@ -558,6 +592,135 @@ class StudyEngine:
             self.state, *self._desc_args(), jnp.asarray(study, jnp.int32),
             xs)
         self._n_host[study] += xs.shape[0]
+
+    # -- neural-basis tier (saturation escalation, DESIGN.md §15) -----------
+    def tier(self, study: int) -> int:
+        """0 = lazy GP, 1 = neural basis (escalated)."""
+        return int(self._tier[study])
+
+    def cost_row(self, study: int) -> np.ndarray:
+        """The GP tier's per-row tell costs (rides eviction snapshots so a
+        near-saturation study promoted after a restore still trains its
+        cost head on the full ledger)."""
+        return self._cost_host[study].copy()
+
+    def set_cost_row(self, study: int, costs) -> None:
+        self._cost_host[study] = np.asarray(costs, np.float32)
+
+    def promote_slot(self, slot: int, key: Array) -> None:
+        """Escalate a saturated GP slot to the neural-basis tier.
+
+        The NB model trains on the slot's FULL active ledger (the exact
+        rows the GP absorbed, plus their tell costs) — the caller must
+        have rolled back any fantasy rows first.  The GP lane stays
+        frozen in the stack: exports keep round-tripping it bitwise, and
+        its buffers are never touched again.
+        """
+        if self._tier[slot]:
+            raise RuntimeError(f"slot {slot} is already escalated")
+        n0 = self.n(slot)
+        if n0 < 1:
+            raise RuntimeError("cannot promote an empty slot")
+        st = self.study_state(slot)
+        xs = np.asarray(st.x_buf)[:n0]
+        ys = np.asarray(st.y_buf)[:n0]
+        logcs = np.log(np.maximum(self._cost_host[slot, :n0], 1e-12))
+        self._nb[slot] = nb_mod.nb_from_data(xs, ys, logcs, key,
+                                             self.neural)
+        self._tier[slot] = 1
+        self._nb_n[slot] = n0
+        self._nb_shadow.pop(slot, None)
+
+    def clear_nb_slot(self, slot: int) -> None:
+        """Drop the escalated model (new tenant / detach): back to tier 0."""
+        self._tier[slot] = 0
+        self._nb.pop(slot, None)
+        self._nb_shadow.pop(slot, None)
+        self._nb_n.pop(slot, None)
+        self._cost_host[slot] = 1.0
+
+    def nb_state(self, slot: int) -> nb_mod.NeuralBasisState:
+        return self._nb[slot]
+
+    def load_nb_slot(self, slot: int, state: nb_mod.NeuralBasisState
+                     ) -> None:
+        """Install a restored/imported NB state (tier tag follows)."""
+        self._tier[slot] = 1
+        self._nb[slot] = state
+        self._nb_n[slot] = int(state.n)
+        self._nb_shadow.pop(slot, None)
+
+    def nb_n(self, slot: int) -> int:
+        """Fantasized row count of an escalated slot (host mirror)."""
+        return self._nb_n[slot]
+
+    def _nb_room(self, slot: int, incoming: int
+                 ) -> nb_mod.NeuralBasisState:
+        st = self._nb[slot]
+        while self._nb_n[slot] + incoming > st.cap:
+            st = nb_mod.nb_grow(st, self.neural)
+        return st
+
+    def nb_absorb(self, slot: int, x, y, cost: float = 1.0) -> None:
+        """Escalated absorb: rank-1 append (ledger grows, never full) +
+        the MLP refit cadence (`NeuralConfig.refit_every`, the tier's
+        `lag`).  Must only run with no fantasy rows active (the pool rolls
+        back first — same protocol as the GP tier)."""
+        st = self._nb_room(slot, 1)
+        st = nb_mod.nb_append(
+            st, jnp.asarray(x, jnp.float32), jnp.float32(y),
+            jnp.float32(np.log(max(float(cost), 1e-12))),
+            ncfg=self.neural)
+        if int(st.since_refit) >= self.neural.refit_every:
+            st = nb_mod.nb_refit(st, ncfg=self.neural)
+        self._nb[slot] = st
+        self._nb_n[slot] += 1
+
+    def _nb_desc(self, slot: int):
+        if not self.mixed:
+            return None
+        return desc_mod.index_descriptor(self.desc,
+                                         jnp.asarray(slot, jnp.int32))
+
+    def nb_suggest(self, slot: int, key: Array,
+                   top_t: int = 1) -> tuple[Array, Array]:
+        """Escalated suggest: acquisition ascent against the O(m^2)
+        neural-basis posterior — flat in n."""
+        return nb_mod.nb_suggest(self._nb[slot], key, self._nb_desc(slot),
+                                 acq=self.cfg.acq, top_t=top_t)
+
+    def nb_ask_q(self, slot: int, key: Array, q: int
+                 ) -> tuple[Array, Array]:
+        """Escalated q-suggestion: snapshot the pre-fantasy state, then the
+        qEI suggest-and-fantasize scan.  Rollback = `nb_rollback`."""
+        if slot not in self._nb_shadow:
+            self._nb_shadow[slot] = self._nb[slot]
+        st = self._nb_room(slot, q)
+        xs, vals, st = nb_mod.nb_ask_q(st, key, self._nb_desc(slot),
+                                       ncfg=self.neural, acq=self.cfg.acq,
+                                       q=q, liar=self._fantasy_liar)
+        self._nb[slot] = st
+        self._nb_n[slot] += q
+        return xs, vals
+
+    def nb_rollback(self, slot: int) -> None:
+        """Drop every fantasy row of an escalated slot: restore the
+        pre-fantasy snapshot — bitwise-exact by construction."""
+        sh = self._nb_shadow.pop(slot, None)
+        if sh is not None:
+            self._nb[slot] = sh
+            self._nb_n[slot] = int(sh.n)
+
+    def nb_refantasize(self, slot: int, xs) -> None:
+        """Re-append still-pending fantasy points against the updated
+        posterior (tell-time replay, same protocol as `refantasize`)."""
+        xs = jnp.asarray(xs, jnp.float32)
+        self._nb_shadow[slot] = self._nb[slot]
+        st = self._nb_room(slot, xs.shape[0])
+        st = nb_mod.nb_fantasize(st, xs, ncfg=self.neural,
+                                 liar=self._fantasy_liar)
+        self._nb[slot] = st
+        self._nb_n[slot] += int(xs.shape[0])
 
     def _refit_flagged(self, flagged) -> None:
         """Apply the per-study lag policy after an absorb (host mirrors).

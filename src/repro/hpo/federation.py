@@ -208,7 +208,8 @@ class FederationBase:
         counters summed, q-width histograms merged."""
         out = {"ticks": 0, "asks_served": 0, "absorbed": 0,
                "evictions": 0, "restores": 0, "fantasy_rollbacks": 0,
-               "fantasy_active": 0, "q_width_hist": {},
+               "fantasy_active": 0, "escalated": 0, "saturated": 0,
+               "q_width_hist": {},
                "n_shards": self.fed.n_shards,
                "dead_shards": sorted(dead),
                "studies": len(self._placement),
@@ -218,6 +219,10 @@ class FederationBase:
             for k in ("ticks", "asks_served", "absorbed", "evictions",
                       "restores", "fantasy_rollbacks", "fantasy_active"):
                 out[k] += s[k]
+            for k in ("escalated", "saturated"):
+                # saturation gauges (DESIGN.md §15); .get so a newer front
+                # end keeps merging summaries from an older remote shard
+                out[k] += s.get(k, 0)
             for w, n in s["q_width_hist"].items():
                 out["q_width_hist"][w] = out["q_width_hist"].get(w, 0) + n
         out["per_shard"] = {str(i): s for i, s in sorted(per_shard.items())}
@@ -296,8 +301,9 @@ class FederatedGateway(FederationBase):
     def ask_nowait(self, sid: int, q: int = 1) -> None:
         self._gw_for(sid).ask_nowait(sid, q)
 
-    def tell(self, sid: int, trial: Trial, value: float) -> None:
-        self._gw_for(sid).tell(sid, trial, value)
+    def tell(self, sid: int, trial: Trial, value: float,
+             cost: float = 1.0) -> None:
+        self._gw_for(sid).tell(sid, trial, value, cost)
 
     def tell_failure(self, sid: int, trial: Trial, error: str) -> None:
         self._gw_for(sid).tell_failure(sid, trial, error)

@@ -55,7 +55,8 @@ from typing import Sequence
 import numpy as np
 
 from repro import checkpoint as ckpt_mod
-from repro.core.gp import GPCapacityError
+from repro.core.gp import (BackpressureError, GPCapacityError,
+                           StudySaturatedError)
 from repro.hpo.pool import SchedulerConfig, StudyPool, Trial
 from repro.hpo.space import SearchSpace, space_from_dicts, space_to_dicts
 
@@ -86,6 +87,11 @@ class GatewayConfig:
     # bitwise-identical pool state for the same traffic trace
     # (test-enforced).  Off = every tick is served start-to-finish like
     # the sync tick().
+    escalate: bool = True     # saturation escalation (DESIGN.md §15): when
+    # a study's lazy-GP slot fills (committed == n_max), promote it to the
+    # neural-basis tier (MLP feature map + exact Bayesian linear head,
+    # flat per-append cost) instead of rejecting every further ask with
+    # StudySaturatedError.  Off = the pre-§15 terminal-capacity contract.
 
 
 @dataclasses.dataclass
@@ -106,6 +112,10 @@ class _Logical:
     last_tick: int = 0        # LRU stamp
     version: int = 0          # eviction snapshot counter (monotonic)
     evicted_ever: bool = False
+    tier: int = 0             # 0 = lazy GP, 1 = neural basis (escalated
+    # past n_max, DESIGN.md §15).  Mirrors the pool/engine tier tag but
+    # survives eviction: the NB state itself rides the study's partial
+    # snapshot metadata.
 
 
 @dataclasses.dataclass
@@ -276,11 +286,11 @@ class StudyGateway:
                 "never be served; lower q or raise "
                 "GatewayConfig.max_inflight")
         if len(self._asks) >= self.gw.max_queue:
-            raise GPCapacityError(
+            raise BackpressureError(
                 f"gateway ask queue full ({self.gw.max_queue} queued); "
                 "backpressure — retry after the next tick")
         if log.inflight + log.pending_asks + q > self.gw.max_inflight:
-            raise GPCapacityError(
+            raise BackpressureError(
                 f"study {log.sid} ({log.name}): ask(q={q}) with "
                 f"{log.inflight + log.pending_asks} suggestions already "
                 f"in flight exceeds max_inflight={self.gw.max_inflight}; "
@@ -289,10 +299,18 @@ class StudyGateway:
         # future observation (a q-ask implies q of them, each shadowed by
         # a fantasy row until told).  Refuse the ask now rather than fail
         # the tell after the client has spent a training run on it.
+        # Escalated studies (and, with `escalate` on, studies that WILL be
+        # promoted when this ask is served — see `_needs_escalation`) have
+        # no n_max: the NB ledger doubles instead of filling.  Promotion
+        # needs at least one real observation to train on, so a study that
+        # never absorbed anything keeps the terminal contract.
+        if log.tier:
+            return
         committed = (log.n_obs + log.inflight + log.pending_asks
                      + log.pending_tells)
-        if committed + q > self.cfg.n_max:
-            raise GPCapacityError(
+        if committed + q > self.cfg.n_max and not (
+                self.gw.escalate and log.n_obs > 0):
+            raise StudySaturatedError(
                 f"study {log.sid} ({log.name}): n={log.n_obs} absorbed + "
                 f"{committed - log.n_obs} outstanding + q={q} would exceed "
                 f"n_max={self.cfg.n_max}")
@@ -352,8 +370,15 @@ class StudyGateway:
                     f"mixed space (round-and-repair gives {repaired}); "
                     "encode values with space.to_unit")
 
-    def tell(self, sid: int, trial: Trial, value: float) -> None:
+    def tell(self, sid: int, trial: Trial, value: float,
+             cost: float = 1.0) -> None:
         """Report a result; absorbed by the next tick's fused round.
+
+        `cost` (default 1.0) is the observation's evaluation cost (wall
+        seconds, GPU-hours — any positive unit, consistent per study): it
+        rides the trial into the ledger and trains the escalated tier's
+        log-cost head, the denominator of EI-per-unit-cost acquisition
+        (DESIGN.md §15).
 
         Rejected at the caller (never inside the fused round, where one bad
         input would abort the whole tick): wrong-dim units, non-finite
@@ -371,6 +396,11 @@ class StudyGateway:
             raise ValueError(
                 f"non-finite objective value {value!r}; report crashes "
                 "and divergence via tell_failure()")
+        cost = float(cost)
+        if not np.isfinite(cost) or cost <= 0.0:
+            raise ValueError(
+                f"tell cost must be a positive finite number, got {cost!r}")
+        trial.cost = cost
         # "told" blocks a same-window replay (the absorb flips it to
         # "done" once the append commits)
         trial.status = "told"
@@ -401,7 +431,8 @@ class StudyGateway:
             self.pool.release_fantasies(log.slot,
                                         [np.asarray(trial.unit)])
         if self.cfg.failure_penalty is not None:
-            penalty = Trial(trial.trial_id, trial.unit, trial.hparams)
+            penalty = Trial(trial.trial_id, trial.unit, trial.hparams,
+                            cost=trial.cost)
             # the error tag marks this as a pseudo-observation: it enters
             # the GP through the normal absorb path but must never be
             # reported as the study's best (failure_penalty=0.0 would beat
@@ -509,6 +540,25 @@ class StudyGateway:
         except GPCapacityError:
             return None
 
+    # -- saturation escalation (DESIGN.md §15) ------------------------------
+    def _needs_escalation(self, log: _Logical, q: int) -> bool:
+        """True when serving a q-wide ask for this study could not fit its
+        lazy-GP buffers: every absorbed row, outstanding suggestion (each
+        shadowed by a fantasy row), and queued tell claims a row, and the
+        ask adds q more."""
+        return (self.gw.escalate and log.tier == 0 and log.n_obs > 0
+                and (log.n_obs + log.inflight + log.pending_tells + q
+                     > self.cfg.n_max))
+
+    def _promote(self, log: _Logical) -> None:
+        """Escalate a resident study to the neural-basis tier: the pool
+        retrains the full real ledger (+ tell costs) into the NB model and
+        re-fantasizes any outstanding q-ask rows against it.  The tier tag
+        follows the study through eviction snapshots, checkpoints, and
+        migration records."""
+        self.pool.promote(log.slot)
+        log.tier = 1
+
     # -- federation support (DESIGN.md §13/§14) -----------------------------
     # The federation front end (in-memory FederatedGateway or the socket
     # RPC TransportFederation) sees shards ONLY through this public
@@ -542,7 +592,7 @@ class StudyGateway:
             "sid": log.sid, "name": log.name, "seed": log.seed,
             "dims": space_to_dicts(log.space), "n_obs": log.n_obs,
             "best_value": log.best_value, "version": log.version,
-            "evicted_ever": log.evicted_ever,
+            "evicted_ever": log.evicted_ever, "tier": log.tier,
             "key": self._study_key(log),
         }
 
@@ -628,7 +678,8 @@ class StudyGateway:
                        best_value=record.get("best_value"),
                        last_tick=self._tick_count,
                        version=int(record["version"]),
-                       evicted_ever=bool(record["evicted_ever"]))
+                       evicted_ever=bool(record["evicted_ever"]),
+                       tier=int(record.get("tier", 0)))
         if log.evicted_ever and log.version not in \
                 ckpt_mod.study_versions(self.cfg.ckpt_dir,
                                         self._study_key(log)):
@@ -641,6 +692,7 @@ class StudyGateway:
             log.best_value = None
             log.version = 0
             log.evicted_ever = False
+            log.tier = 0
         self._studies[sid] = log
         self._next_sid = max(self._next_sid, sid + 1)
         if self._wake is not None:
@@ -756,11 +808,14 @@ class StudyGateway:
                 or any(self._studies[sid].slot is None
                        for sid, _fut, _q in take)
                 or any(self._studies[sid].slot is None
-                       for sid, _tr, _val in tells)):
+                       for sid, _tr, _val in tells)
+                or any(self._needs_escalation(self._studies[sid], q)
+                       for sid, _fut, q in take)):
             # pipeline hazards (§13): residency changes re-rank the LRU and
-            # snapshot engine state, and q>1 asks append fantasy rows whose
-            # rollback bookkeeping the next round's staging reads — neither
-            # may overlap an unfinished tick.  Flush it first.
+            # snapshot engine state, q>1 asks append fantasy rows whose
+            # rollback bookkeeping the next round's staging reads, and tier
+            # promotion rebuilds a slot's model — none may overlap an
+            # unfinished tick.  Flush it first.
             try:
                 self.tick_flush()
             except BaseException:
@@ -814,6 +869,15 @@ class StudyGateway:
         take = served
         if not events and not take:
             return None
+        # Saturation escalation (DESIGN.md §15): a served ask that could
+        # not fit the study's GP buffers promotes it to the NB tier BEFORE
+        # the fused round — this tick's tells for it then take the routed
+        # NB absorb, and its q-ask (if any) runs against the escalated
+        # posterior with no capacity guard to trip mid-fantasy.
+        for sid, _fut, q in take:
+            log = self._studies[sid]
+            if self._needs_escalation(log, q):
+                self._promote(log)
         one_slots = sorted(ask_slots[sid] for sid, _f, q in take if q == 1)
         try:
             round_ = self.pool.advance_round_begin(
@@ -960,7 +1024,9 @@ class StudyGateway:
         for sid, tr, val in tells:
             log = self._studies[sid]
             counts[sid] = counts.get(sid, 0) + 1
-            if log.n_obs + counts[sid] > self.cfg.n_max:
+            # escalated studies can never be the raiser (their ledger
+            # doubles instead of filling) — their tells always requeue
+            if log.tier == 0 and log.n_obs + counts[sid] > self.cfg.n_max:
                 # can never fit — dead-letter instead of poisoning the queue
                 log.pending_tells -= 1
                 counts[sid] -= 1
@@ -1130,6 +1196,11 @@ class StudyGateway:
             "best_value": log.best_value,
             "fantasy_active": (self.pool.fantasy_active(log.slot)
                                if log.slot is not None else 0),
+            # saturation observability (DESIGN.md §15): the tier tag and
+            # whether the study has ever hit its GP buffer boundary; both
+            # survive eviction and checkpoint/restore with the registry
+            "tier": log.tier,
+            "saturated": bool(log.tier or log.n_obs >= self.cfg.n_max),
         }
 
     def summary(self) -> dict:
@@ -1142,6 +1213,16 @@ class StudyGateway:
         out = {"ticks": self._tick_count, **self._totals,
                "fantasy_active": sum(self.pool.fantasy_active(s)
                                      for s in range(self.gw.slots)),
+               # saturation gauges (DESIGN.md §15): escalated = studies on
+               # the NB tier; saturated = studies at/past their GP buffer
+               # boundary (escalated ones included).  Derived from the
+               # registry, so they persist across checkpoint/restore and
+               # sum across federation shards.
+               "escalated": sum(1 for log in self._studies.values()
+                                if log.tier),
+               "saturated": sum(1 for log in self._studies.values()
+                                if log.tier
+                                or log.n_obs >= self.cfg.n_max),
                "mean_coalesce_width": 0.0,
                "p50_tick_ms": 0.0, "p95_tick_ms": 0.0}
         if self.stats:
@@ -1180,7 +1261,7 @@ class StudyGateway:
                 "slot": log.slot, "n_obs": log.n_obs,
                 "best_value": log.best_value,
                 "last_tick": log.last_tick, "version": log.version,
-                "evicted_ever": log.evicted_ever,
+                "evicted_ever": log.evicted_ever, "tier": log.tier,
                 "dims": space_to_dicts(log.space),
             } for log in self._studies.values()],
         }
@@ -1244,7 +1325,8 @@ class StudyGateway:
                            best_value=rec.get("best_value"),
                            last_tick=rec["last_tick"],
                            version=rec["version"],
-                           evicted_ever=rec["evicted_ever"])
+                           evicted_ever=rec["evicted_ever"],
+                           tier=int(rec.get("tier", 0)))
             self._studies[log.sid] = log
             if log.slot is not None:
                 self._owner[log.slot] = log.sid

@@ -43,6 +43,7 @@ import numpy as np
 from repro import checkpoint as ckpt_mod
 from repro.core import acquisition as acq_mod
 from repro.core import gp as gp_mod
+from repro.core import neural_basis as nb_mod
 from repro.core.kernels import KernelParams
 from repro.hpo.engine import StudyEngine
 from repro.hpo.space import SearchSpace
@@ -87,6 +88,11 @@ class SchedulerConfig:
         default_factory=gp_mod.FantasyConfig)  # liar policy for q-asks
     # (DESIGN.md §12): "mean" = kriging believer, "pessimistic" = constant
     # liar.  A Python constant inside the engine's q-ask closures.
+    neural: nb_mod.NeuralConfig = dataclasses.field(
+        default_factory=nb_mod.NeuralConfig)  # escalated-tier model
+    # (DESIGN.md §15): MLP feature width/depth, Bayesian-linear-head noise,
+    # and the refit cadence (the NB tier's `lag`) used when a saturated
+    # study is promoted off the fixed-shape lazy GP.
 
 
 @dataclasses.dataclass
@@ -102,6 +108,9 @@ class Trial:
     retries: int = 0
     clamp_count: int | None = None  # cumulative GP conditioning-floor hits
     # at absorb time (ill-conditioning telemetry, DESIGN.md §6)
+    cost: float = 1.0            # tell-time observation cost (DESIGN.md
+    # §15): training-set row of the escalated tier's log-cost head and the
+    # denominator of EI-per-unit-cost acquisition
 
 
 def _trial_from_dict(t: dict) -> Trial:
@@ -109,7 +118,7 @@ def _trial_from_dict(t: dict) -> Trial:
     return Trial(t["trial_id"], np.asarray(t["unit"], np.float32),
                  t["hparams"], t["status"], t["value"], t["error"],
                  t["started"], t["finished"], t["retries"],
-                 t.get("clamp_count"))
+                 t.get("clamp_count"), t.get("cost", 1.0))
 
 
 def _materialize(x) -> np.ndarray:
@@ -139,10 +148,10 @@ class _PendingRound:
     """
 
     __slots__ = ("_pool", "_first", "_ids", "_need_seed", "_t",
-                 "_units", "_clamps", "_finished")
+                 "_units", "_clamps", "_nb_units", "_finished")
 
     def __init__(self, pool: "StudyPool", first: dict, ids: list,
-                 need_seed: set, t: int, units, clamps):
+                 need_seed: set, t: int, units, clamps, nb_units=None):
         self._pool = pool
         self._first = first
         self._ids = ids
@@ -150,6 +159,7 @@ class _PendingRound:
         self._t = t
         self._units = units
         self._clamps = clamps
+        self._nb_units = nb_units or {}
         self._finished = False
 
     def finish(self) -> dict[int, list[Trial]]:
@@ -172,6 +182,11 @@ class _PendingRound:
         for s in self._ids:
             if s in self._need_seed:
                 out[s] = pool.seed_trials(s, self._t)
+            elif s in self._nb_units:
+                # escalated tenants: their suggestions come off the NB
+                # posterior's own staged dispatch, not the GP stack's lane
+                out[s] = [pool._make_trial(s, u)
+                          for u in _materialize(self._nb_units[s])]
             else:
                 out[s] = [pool._make_trial(s, u) for u in units[s]]
         pool._maybe_checkpoint()
@@ -278,6 +293,29 @@ class StudyPool:
         """Unstacked single-study GP view."""
         return self.engine.study_state(study_id)
 
+    # -- saturation escalation (DESIGN.md §15) ------------------------------
+    def tier(self, study_id: int) -> int:
+        """0 = lazy GP, 1 = neural basis (escalated past n_max)."""
+        return self.engine.tier(study_id)
+
+    def promote(self, study_id: int) -> None:
+        """Escalate a saturated study to the neural-basis tier.
+
+        Pending fantasy rows are first rolled back (bitwise GP truncate) so
+        the NB model trains on the REAL ledger + tell costs only; the
+        survivors are then re-fantasized against the escalated posterior —
+        outstanding q-asks keep repelling their regions across the
+        promotion, exactly as they would across a tell.
+        """
+        pend = self._fantasies[study_id]
+        if pend:
+            self.engine.truncate_slot(
+                study_id, self.engine.n(study_id) - len(pend))
+            self.fantasy_rollbacks += 1
+        self.engine.promote_slot(study_id, self._split(study_id))
+        if pend:
+            self.engine.nb_refantasize(study_id, np.stack(pend))
+
     # -- suggest ------------------------------------------------------------
     def seed_trials(self, study_id: int, n: int) -> list[Trial]:
         h = self.studies[study_id]
@@ -287,10 +325,14 @@ class StudyPool:
     def suggest(self, study_id: int, t: int | None = None) -> list[Trial]:
         """Top-t distinct EI local maxima from one study's posterior."""
         t = t or self.cfg.parallel
-        if self.engine.n(study_id) == 0:
+        if self.engine.tier(study_id):
+            units, _ = self.engine.nb_suggest(study_id,
+                                              self._split(study_id), top_t=t)
+        elif self.engine.n(study_id) == 0:
             return self.seed_trials(study_id, t)
-        units, _ = self.engine.suggest(study_id, self._split(study_id),
-                                       top_t=t)
+        else:
+            units, _ = self.engine.suggest(study_id, self._split(study_id),
+                                           top_t=t)
         return [self._make_trial(study_id, np.asarray(u)) for u in units]
 
     # -- fantasy protocol: batched q-suggestion (DESIGN.md §12) -------------
@@ -299,8 +341,10 @@ class StudyPool:
         return len(self._fantasies[study_id])
 
     def n_real(self, study_id: int) -> int:
-        """Real-ledger active count (device n minus pending fantasy rows)."""
-        return self.engine.n(study_id) - len(self._fantasies[study_id])
+        """Real-ledger active count (model n minus pending fantasy rows)."""
+        n = self.engine.nb_n(study_id) if self.engine.tier(study_id) \
+            else self.engine.n(study_id)
+        return n - len(self._fantasies[study_id])
 
     def ask_q(self, study_id: int, q: int) -> list[Trial]:
         """q distinct suggestions through the fantasy fast path.
@@ -315,10 +359,17 @@ class StudyPool:
         """
         if q < 1:
             raise ValueError(f"q must be >= 1, got {q}")
-        if self.engine.n(study_id) == 0:
-            return self.seed_trials(study_id, q)
-        gp_mod.ensure_capacity(self.engine.n(study_id), self.cfg.n_max, q)
-        units, _ = self.engine.ask_q(study_id, self._split(study_id), q)
+        if self.engine.tier(study_id):
+            # escalated tier: the NB ledger doubles instead of filling, so
+            # q-asks never hit a capacity guard
+            units, _ = self.engine.nb_ask_q(study_id,
+                                            self._split(study_id), q)
+        else:
+            if self.engine.n(study_id) == 0:
+                return self.seed_trials(study_id, q)
+            gp_mod.ensure_capacity(self.engine.n(study_id),
+                                   self.cfg.n_max, q)
+            units, _ = self.engine.ask_q(study_id, self._split(study_id), q)
         units = np.asarray(units)
         self._fantasies[study_id].extend(u.copy() for u in units)
         return [self._make_trial(study_id, u) for u in units]
@@ -338,7 +389,13 @@ class StudyPool:
             pend = self._fantasies[sid]
             if not pend:
                 continue
-            self.engine.truncate_slot(sid, self.engine.n(sid) - len(pend))
+            if self.engine.tier(sid):
+                # NB rank-1 updates are not bitwise-reversible: rollback is
+                # a pre-fantasy snapshot restore (exact by construction)
+                self.engine.nb_rollback(sid)
+            else:
+                self.engine.truncate_slot(sid,
+                                          self.engine.n(sid) - len(pend))
             self.fantasy_rollbacks += 1
             for tr in trs:
                 for i, u in enumerate(pend):
@@ -362,8 +419,11 @@ class StudyPool:
                     break
         if not drop:
             return 0
-        self.engine.truncate_slot(
-            study_id, self.engine.n(study_id) - len(pend))
+        if self.engine.tier(study_id):
+            self.engine.nb_rollback(study_id)
+        else:
+            self.engine.truncate_slot(
+                study_id, self.engine.n(study_id) - len(pend))
         self.fantasy_rollbacks += 1
         self._fantasies[study_id] = [
             p for i, p in enumerate(pend) if i not in drop]
@@ -378,7 +438,10 @@ class StudyPool:
         for sid in sorted(set(sids)):
             pend = self._fantasies[sid]
             if pend:
-                self.engine.refantasize(sid, np.stack(pend))
+                if self.engine.tier(sid):
+                    self.engine.nb_refantasize(sid, np.stack(pend))
+                else:
+                    self.engine.refantasize(sid, np.stack(pend))
 
     def _check_capacity(self,
                         events: Sequence[tuple[int, Trial, float]]) -> None:
@@ -393,6 +456,8 @@ class StudyPool:
         for sid, _, _ in events:
             counts[sid] = counts.get(sid, 0) + 1
         for sid, c in counts.items():
+            if self.engine.tier(sid):
+                continue   # escalated ledgers double instead of filling
             gp_mod.ensure_capacity(self.engine.n(sid), self.cfg.n_max,
                                    incoming=c + len(self._fantasies[sid]))
 
@@ -417,7 +482,9 @@ class StudyPool:
         """
         ids = list(studies) if studies is not None else \
             list(range(self.n_studies))
-        need_ei = sorted(s for s in ids if self.engine.n(s) > 0)
+        nb_set = {s for s in ids if self.engine.tier(s)}
+        need_ei = sorted(s for s in ids
+                         if s not in nb_set and self.engine.n(s) > 0)
         ei_set = set(need_ei)
         units_all = None
         if need_ei:
@@ -427,6 +494,12 @@ class StudyPool:
         for s in ids:
             if s in ei_set:
                 out[s] = [self._make_trial(s, u) for u in units_all[s]]
+            elif s in nb_set:
+                # escalated tenants route through their own NB dispatch
+                # (cached by shape + static config, never re-traced per slot)
+                units, _ = self.engine.nb_suggest(s, self._split(s), top_t=t)
+                out[s] = [self._make_trial(s, u)
+                          for u in np.asarray(units)]
             else:
                 out[s] = self.seed_trials(s, t)
         return out
@@ -454,22 +527,33 @@ class StudyPool:
         """
         ids = list(studies) if studies is not None else \
             list(range(self.n_studies))
+        nb_set = {s for s in range(self.n_studies) if self.engine.tier(s)}
         if not events:
             # deferred suggest_all: same stream staging and seed routing,
             # with the materialization/minting left to finish()
-            need_ei = sorted(s for s in ids if self.engine.n(s) > 0)
+            need_ei = sorted(s for s in ids
+                             if s not in nb_set and self.engine.n(s) > 0)
             units = None
             if need_ei:
                 units = self.engine.suggest_all(self._staged_keys(need_ei),
                                                 top_t=t)[0]
-            return _PendingRound(self, {}, ids, set(ids) - set(need_ei),
-                                 t, units, None)
+            nb_units = {s: self.engine.nb_suggest(s, self._split(s),
+                                                  top_t=t)[0]
+                        for s in ids if s in nb_set}
+            return _PendingRound(self, {}, ids,
+                                 set(ids) - set(need_ei) - nb_set,
+                                 t, units, None, nb_units)
         if not ids:
             self.absorb_many(events)
             return _PendingRound(self, {}, [], set(), t, None, None)
+        # Escalated tenants' completions take the routed NB absorb (their
+        # ledger doubles instead of filling — no fused GP lane to share);
+        # the GP-tier events keep the one-per-study fused-round split.
+        nb_events = [e for e in events if e[0] in nb_set]
+        gp_events = [e for e in events if e[0] not in nb_set]
         first: dict[int, tuple[Trial, float]] = {}
         overflow = []
-        for sid, tr, val in events:
+        for sid, tr, val in gp_events:
             if sid in first:
                 overflow.append((sid, tr, val))
             else:
@@ -480,29 +564,37 @@ class StudyPool:
         # put it; survivors are re-fantasized after the round.
         self._rollback_for_events(events)
         self._check_capacity(events)
+        if nb_events:
+            self.absorb_many(nb_events, _fantasies_handled=True)
         if overflow:
             self.absorb_many(overflow, _fantasies_handled=True)
         dim = self.engine.gp_cfg.dim
         flags = np.zeros((self.n_studies,), bool)
         xs = np.zeros((self.n_studies, dim), np.float32)
         ys = np.zeros((self.n_studies,), np.float32)
+        costs = np.ones((self.n_studies,), np.float32)
         for sid, (tr, val) in first.items():
             flags[sid] = True
             xs[sid] = tr.unit
             ys[sid] = float(val)
+            costs[sid] = tr.cost
         # Studies that will still be empty after this absorb get seed
         # trials; only requested non-seed studies advance their streams.
-        need_seed = {s for s in ids
-                     if self.engine.n(s) == 0 and not flags[s]}
-        ei_ids = [s for s in ids if s not in need_seed]
+        need_seed = {s for s in ids if s not in nb_set
+                     and self.engine.n(s) == 0 and not flags[s]}
+        ei_ids = [s for s in ids if s not in need_seed and s not in nb_set]
         units, _ = self.engine.advance(flags, xs, ys,
-                                       self._staged_keys(ei_ids), top_t=t)
+                                       self._staged_keys(ei_ids), top_t=t,
+                                       costs=costs)
         # Clamp telemetry is copied into a FRESH device array before the
         # refantasize (serial read point) — holding `state.clamp_count`
         # itself would break when the next staged round donates it.
         clamps = self.engine.state.clamp_count + 0
-        self._refantasize_pending(first.keys())
-        return _PendingRound(self, first, ids, need_seed, t, units, clamps)
+        nb_units = {s: self.engine.nb_suggest(s, self._split(s), top_t=t)[0]
+                    for s in ids if s in nb_set}
+        self._refantasize_pending(sid for sid, _, _ in events)
+        return _PendingRound(self, first, ids, need_seed, t, units, clamps,
+                             nb_units)
 
     def advance_round(self, events: Sequence[tuple[int, Trial, float]],
                       t: int = 1,
@@ -530,14 +622,22 @@ class StudyPool:
         return self.advance_round_begin(events, t=t, studies=studies).finish()
 
     # -- absorb -------------------------------------------------------------
-    def absorb(self, study_id: int, trial: Trial, value: float) -> None:
+    def absorb(self, study_id: int, trial: Trial, value: float,
+               cost: float | None = None) -> None:
         """Completion-order absorb routed to the owning study."""
+        if cost is not None:
+            trial.cost = float(cost)
         self._rollback_for_events([(study_id, trial, value)])
-        gp_mod.ensure_capacity(
-            self.engine.n(study_id), self.cfg.n_max,
-            incoming=1 + len(self._fantasies[study_id]))
-        self.engine.absorb(study_id, jnp.asarray(trial.unit),
-                           jnp.asarray(value, jnp.float32))
+        if self.engine.tier(study_id):
+            self.engine.nb_absorb(study_id, trial.unit, float(value),
+                                  cost=trial.cost)
+        else:
+            gp_mod.ensure_capacity(
+                self.engine.n(study_id), self.cfg.n_max,
+                incoming=1 + len(self._fantasies[study_id]))
+            self.engine.absorb(study_id, jnp.asarray(trial.unit),
+                               jnp.asarray(value, jnp.float32),
+                               cost=trial.cost)
         # status flips to "done" only once the append committed: callers
         # (the gateway's fault unwind) rely on it to mean "in the GP"
         trial.status = "done"
@@ -568,6 +668,17 @@ class StudyPool:
         if not _fantasies_handled:
             self._rollback_for_events(queue)
         self._check_capacity(queue)
+        # Escalated tenants drain through the routed NB absorb (rank-1
+        # append, flat in n) — they have no lane in the masked GP round.
+        nb_queue = [e for e in queue if self.engine.tier(e[0])]
+        queue = [e for e in queue if not self.engine.tier(e[0])]
+        for sid, tr, val in nb_queue:
+            self.engine.nb_absorb(sid, tr.unit, float(val), cost=tr.cost)
+            tr.status = "done"
+            tr.value = float(val)
+            tr.finished = time.time()
+            tr.clamp_count = self.engine.clamp_count(sid)
+            self._n_done += 1
         while queue:
             round_events: dict[int, tuple[Trial, float]] = {}
             rest = []
@@ -580,11 +691,13 @@ class StudyPool:
             flags = np.zeros((self.n_studies,), bool)
             xs = np.zeros((self.n_studies, dim), np.float32)
             ys = np.zeros((self.n_studies,), np.float32)
+            costs = np.ones((self.n_studies,), np.float32)
             for sid, (tr, val) in round_events.items():
                 flags[sid] = True
                 xs[sid] = tr.unit
                 ys[sid] = float(val)
-            self.engine.absorb_round(flags, xs, ys)
+                costs[sid] = tr.cost
+            self.engine.absorb_round(flags, xs, ys, costs)
             clamps = self.engine.clamp_counts()   # one transfer for all S
             # "done" only after the round committed (see absorb())
             for sid, (tr, val) in round_events.items():
@@ -606,12 +719,18 @@ class StudyPool:
         if self.cfg.failure_penalty is not None:
             # Pseudo-observation keeps EI away from a crashing region.
             self._rollback_for_events([(study_id, trial, 0.0)])
-            gp_mod.ensure_capacity(
-                self.engine.n(study_id), self.cfg.n_max,
-                incoming=1 + len(self._fantasies[study_id]))
-            self.engine.absorb(study_id, jnp.asarray(trial.unit),
-                               jnp.asarray(self.cfg.failure_penalty,
-                                           jnp.float32))
+            if self.engine.tier(study_id):
+                self.engine.nb_absorb(study_id, trial.unit,
+                                      float(self.cfg.failure_penalty),
+                                      cost=trial.cost)
+            else:
+                gp_mod.ensure_capacity(
+                    self.engine.n(study_id), self.cfg.n_max,
+                    incoming=1 + len(self._fantasies[study_id]))
+                self.engine.absorb(study_id, jnp.asarray(trial.unit),
+                                   jnp.asarray(self.cfg.failure_penalty,
+                                               jnp.float32),
+                                   cost=trial.cost)
             trial.clamp_count = self.engine.clamp_count(study_id)
             self._refantasize_pending([study_id])
         elif any(np.array_equal(u, trial.unit)
@@ -665,7 +784,16 @@ class StudyPool:
         meta = {"name": h.name, "next_id": h.next_id,
                 "trials": self.history(slot),
                 "key": np.asarray(h.key).tolist(),
-                "rng_state": h.rng.bit_generator.state}
+                "rng_state": h.rng.bit_generator.state,
+                # escalation tier (DESIGN.md §15): the tag, the per-row
+                # tell costs (float32 -> float64 -> JSON is exact), and —
+                # for escalated slots — the NB state itself.  These ride
+                # the snapshot as metadata because the checkpoint store
+                # shape-validates `tree` against the fixed GP layout.
+                "tier": self.engine.tier(slot),
+                "costs": self.engine.cost_row(slot).tolist()}
+        if self.engine.tier(slot):
+            meta["nb"] = nb_mod.nb_to_json(self.engine.nb_state(slot))
         return {"tree": tree, "meta": meta}
 
     def import_study(self, slot: int, tree: dict, meta: dict,
@@ -674,6 +802,11 @@ class StudyPool:
         tree = dict(tree)
         tree["params"] = KernelParams(**tree["params"])
         self.engine.load_slot(slot, gp_mod.LazyGPState(**tree))
+        self.engine.clear_nb_slot(slot)
+        if "costs" in meta:          # after clear (clear resets the row)
+            self.engine.set_cost_row(slot, meta["costs"])
+        if meta.get("tier"):
+            self.engine.load_nb_slot(slot, nb_mod.nb_from_json(meta["nb"]))
         self._fantasies[slot] = []   # snapshots hold only real state
         h = self.studies[slot]
         if space is not None:
@@ -739,8 +872,11 @@ class StudyPool:
             return None
         active = [s for s in range(self.n_studies) if self._fantasies[s]]
         for sid in active:
-            self.engine.truncate_slot(
-                sid, self.engine.n(sid) - len(self._fantasies[sid]))
+            if self.engine.tier(sid):
+                self.engine.nb_rollback(sid)
+            else:
+                self.engine.truncate_slot(
+                    sid, self.engine.n(sid) - len(self._fantasies[sid]))
             self.fantasy_rollbacks += 1
         self._done_at_last_ckpt = self._n_done
         meta = {
@@ -753,6 +889,15 @@ class StudyPool:
                  "key": np.asarray(h.key).tolist(),
                  "rng_state": h.rng.bit_generator.state}
                 for h in self.studies]),
+            # Escalated-tier state (DESIGN.md §15) rides the snapshot as
+            # metadata: the store shape-validates the main tree against
+            # the fixed GP layout, and NB ledgers have per-study caps.
+            "escalated": json.dumps({
+                str(s): nb_mod.nb_to_json(self.engine.nb_state(s))
+                for s in range(self.n_studies) if self.engine.tier(s)}),
+            "cost_rows": json.dumps({
+                str(s): self.engine.cost_row(s).tolist()
+                for s in range(self.n_studies)}),
         }
         if extra:
             meta.update(extra)
@@ -782,6 +927,14 @@ class StudyPool:
         # Snapshots hold only real state; pending q-asks died with the
         # crash and are re-served upstream, so no fantasy rows survive.
         self._fantasies = [[] for _ in range(self.n_studies)]
+        esc = json.loads(meta.get("escalated", "{}"))
+        rows = json.loads(meta.get("cost_rows", "{}"))
+        for s in range(self.n_studies):
+            self.engine.clear_nb_slot(s)
+            if str(s) in rows:
+                self.engine.set_cost_row(s, rows[str(s)])
+            if str(s) in esc:
+                self.engine.load_nb_slot(s, nb_mod.nb_from_json(esc[str(s)]))
         for rec in json.loads(meta["studies"]):
             h = self.studies[rec["study_id"]]
             h.name = rec["name"]

@@ -77,6 +77,7 @@ import numpy as np
 from repro import checkpoint as ckpt_mod
 from repro.core import acquisition as acq_mod
 from repro.core import gp as gp_mod
+from repro.core import neural_basis as nb_mod
 from repro.hpo.federation import (FederationBase, FederationConfig)
 from repro.hpo.gateway import GatewayConfig, StudyGateway
 from repro.hpo.pool import SchedulerConfig, Trial
@@ -136,6 +137,11 @@ async def read_frame(reader: asyncio.StreamReader) -> dict:
 # TransportError with the worker-side type in the message.
 _WIRE_ERRORS = {
     "GPCapacityError": gp_mod.GPCapacityError,
+    # the capacity taxonomy (DESIGN.md §15) crosses the wire intact:
+    # clients distinguish a terminal saturation (stop asking / escalate)
+    # from retryable backpressure by TYPE, not by message parsing
+    "StudySaturatedError": gp_mod.StudySaturatedError,
+    "BackpressureError": gp_mod.BackpressureError,
     "KeyError": KeyError,
     "ValueError": ValueError,
     "RuntimeError": RuntimeError,
@@ -183,7 +189,7 @@ def trial_to_wire(tr: Trial) -> dict:
     return {"trial_id": tr.trial_id,
             "unit_b64": base64.b64encode(unit.tobytes()).decode("ascii"),
             "hparams": tr.hparams, "status": tr.status,
-            "value": tr.value, "error": tr.error}
+            "value": tr.value, "error": tr.error, "cost": tr.cost}
 
 
 def trial_from_wire(d: dict) -> Trial:
@@ -194,7 +200,8 @@ def trial_from_wire(d: dict) -> Trial:
         unit = np.asarray(d["unit"], np.float32)
     return Trial(int(d["trial_id"]), unit,
                  d.get("hparams") or {}, d.get("status", "pending"),
-                 d.get("value"), d.get("error"))
+                 d.get("value"), d.get("error"),
+                 cost=float(d.get("cost", 1.0)))
 
 
 # -- config spec (front end -> worker) ---------------------------------------
@@ -214,6 +221,8 @@ def gateway_from_spec(spec: dict, ckpt_dir: str) -> StudyGateway:
     sched = dict(spec["scheduler"])
     sched["acq"] = acq_mod.AcqConfig(**sched["acq"])
     sched["fantasy"] = gp_mod.FantasyConfig(**sched["fantasy"])
+    if "neural" in sched:   # older front ends predate the escalation tier
+        sched["neural"] = nb_mod.NeuralConfig(**sched["neural"])
     cfg = SchedulerConfig(ckpt_dir=ckpt_dir, **sched)
     space = space_from_dicts(spec["space"])
     return StudyGateway(space, cfg, GatewayConfig(**spec["gateway"]))
@@ -406,9 +415,9 @@ class ShardServer:
             self._outstanding[(sid, tr.trial_id)] = tr
         return [trial_to_wire(tr) for tr in trials]
 
-    def _op_tell(self, sid, trial, value):
+    def _op_tell(self, sid, trial, value, cost=1.0):
         tr = self._resolve_told(sid, trial)
-        self.gw.tell(sid, tr, value)
+        self.gw.tell(sid, tr, value, cost)
         self._mark_resolved(sid, trial)  # only after tell() accepted
 
     def _op_tell_failure(self, sid, trial, error):
@@ -798,7 +807,8 @@ class TransportFederation(FederationBase):
         wire["hparams"] = {}
         return wire
 
-    async def tell(self, sid: int, trial: Trial, value: float) -> None:
+    async def tell(self, sid: int, trial: Trial, value: float,
+                   cost: float = 1.0) -> None:
         if trial.status not in ("pending", "running"):
             # same replay law as the in-memory path, without a round trip
             raise RuntimeError(
@@ -806,7 +816,7 @@ class TransportFederation(FederationBase):
                 f"({trial.status}); each suggestion takes exactly one tell")
         await self._client_for(sid).call(
             "tell", sid=sid, trial=self._tell_wire(trial),
-            value=float(value))
+            value=float(value), cost=float(cost))
         trial.status = "told"  # the worker's copy is authoritative
 
     async def tell_failure(self, sid: int, trial: Trial,

@@ -133,7 +133,8 @@ def test_capacity_aware_ask_reject_before_training():
     """An ask whose eventual tell cannot fit n_max is refused up front."""
     with tempfile.TemporaryDirectory() as d:
         gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=3),
-                          GatewayConfig(slots=1, max_inflight=8))
+                          GatewayConfig(slots=1, max_inflight=8,
+                                        escalate=False))
         s = gw.create_study()
         for _ in range(3):
             gw.ask_nowait(s)
@@ -541,7 +542,8 @@ def test_ask_q_admission_rejections():
     n_max rejects — all BEFORE any fantasy row is appended."""
     async def main(d):
         gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=8),
-                          GatewayConfig(slots=1, max_inflight=4))
+                          GatewayConfig(slots=1, max_inflight=4,
+                                        escalate=False))
         sid = gw.create_study()
         with pytest.raises(GPCapacityError, match="max_inflight"):
             await gw.ask(sid, q=5)     # unservable at any future time

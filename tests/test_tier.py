@@ -1,0 +1,445 @@
+"""Saturation escalation tier (DESIGN.md §15): when a study's lazy-GP slot
+fills to n_max, the gateway promotes it to the neural-basis tier (MLP
+feature map + exact Bayesian linear head) instead of rejecting asks
+forever.  This suite pins the tier's contracts:
+
+  * the capacity error taxonomy — terminal `StudySaturatedError` vs
+    retryable `BackpressureError`, preserved across the transport wire;
+  * clean terminal rejection at the ask(q) saturation boundary (no
+    partially fantasized state, bitwise no-leak vs a twin);
+  * serving THROUGH saturation: a study driven past 2x n_max keeps
+    answering asks and its best value never regresses below the
+    truncated-at-n_max lazy-GP baseline (Levy-4d);
+  * promotion -> eviction -> restore -> q-ask bitwise stream parity,
+    and pool checkpoint/restore of escalated state (NB ledger + cost
+    rows travel exactly);
+  * the cost axis — tell(cost=) threads gateway -> pool -> engine
+    ledger and rides the trial wire form; EI-per-unit-cost acquisition
+    (FABOLAS-style) steers the ascent away from expensive regions;
+  * saturation observability merged through federation summaries.
+
+Everything is seeded and deterministic; comparisons are bitwise where
+the contract is bitwise (rollback, eviction, restore).
+"""
+import asyncio
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _traffic import assert_slots_equal
+from _traffic import foreign_trial as _foreign_trial
+from _traffic import make_cfg as _cfg
+from _traffic import objective as obj
+from repro.core import (BackpressureError, GPCapacityError, GPConfig,
+                        NeuralConfig, StudySaturatedError, init_state,
+                        levy_bounds, matern52, neg_levy, refactor)
+from repro.core import neural_basis as nb_mod
+from repro.core.acquisition import AcqConfig, optimize_acquisition
+from repro.hpo import (FederatedGateway, FederationConfig, GatewayConfig,
+                       StudyGateway, StudyPool)
+from repro.hpo import transport as tx
+from repro.hpo.pool import Trial
+from repro.hpo.space import RESNET_SPACE, Dim, SearchSpace
+
+# Small neural tier for test budgets: tiny MLP, short refits, small
+# initial ledger capacity (growth doubling still exercised).
+NB = NeuralConfig(hidden=16, features=8, refit_every=8, refit_steps=40,
+                  cap0=16)
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy: terminal saturation vs retryable backpressure
+# ---------------------------------------------------------------------------
+def test_capacity_error_taxonomy():
+    """Both split errors ARE GPCapacityError (existing handlers keep
+    working); clients distinguish them by type / `retryable`, not by
+    message parsing."""
+    assert issubclass(StudySaturatedError, GPCapacityError)
+    assert issubclass(BackpressureError, GPCapacityError)
+    assert StudySaturatedError("full").retryable is False
+    assert BackpressureError("busy").retryable is True
+    assert GPCapacityError("generic").retryable is False
+
+
+def test_taxonomy_survives_the_wire():
+    """The transport re-raises the exact subclass client-side: a remote
+    client can retry backpressure and terminally stop on saturation."""
+    for name, cls, retryable in (
+            ("StudySaturatedError", StudySaturatedError, False),
+            ("BackpressureError", BackpressureError, True),
+            ("GPCapacityError", GPCapacityError, False)):
+        err = tx._decode_error({"etype": name, "error": "m"})
+        assert type(err) is cls
+        assert isinstance(err, GPCapacityError)
+        assert err.retryable is retryable
+
+
+def test_admission_raises_the_right_type():
+    """Gateway admission: inflight-cap overrun is retryable backpressure;
+    capacity exhaustion (escalation off) is terminal saturation."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=4),
+                          GatewayConfig(slots=1, max_inflight=2,
+                                        escalate=False))
+        sid = gw.create_study()
+        batch = await gw.ask(sid, q=2)
+        with pytest.raises(BackpressureError, match="in flight"):
+            await gw.ask(sid)            # 2 inflight + 1 > max_inflight=2
+        for tr in batch:
+            gw.tell(sid, tr, obj(sid, tr.unit))
+        await gw.drain()
+        for _ in range(2):
+            tr = await gw.ask(sid)
+            gw.tell(sid, tr, obj(sid, tr.unit))
+        await gw.drain()
+        with pytest.raises(StudySaturatedError, match="n_max"):
+            await gw.ask(sid)            # 4 committed == n_max, no tier
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+# ---------------------------------------------------------------------------
+# ask(q) at the saturation boundary: clean rejection or clean escalation
+# ---------------------------------------------------------------------------
+def test_ask_q_boundary_rejects_without_partial_fantasies():
+    """n = n_max - k committed with k < q: terminal rejection happens at
+    admission — BEFORE any fantasy row is appended.  Bitwise no-leak: the
+    rejected gateway's slot is identical to a twin that never asked."""
+    async def main(d1, d2):
+        def mk(d):
+            gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=8),
+                              GatewayConfig(slots=1, max_inflight=8,
+                                            escalate=False))
+            return gw, gw.create_study()
+        (ga, sa), (gb, sb) = mk(d1), mk(d2)
+        rng = np.random.RandomState(3)
+        for _ in range(6):                   # n = n_max - 2
+            u = rng.rand(3).astype(np.float32)
+            v = obj(0, u)
+            ga.tell(sa, _foreign_trial(u), v)
+            gb.tell(sb, _foreign_trial(u), v)
+        ga.tick(), gb.tick()
+        with pytest.raises(StudySaturatedError, match="n_max"):
+            await ga.ask(sa, q=4)            # k=2 < q=4: can never fit
+        slot_a, slot_b = ga._studies[sa].slot, gb._studies[sb].slot
+        assert ga.pool.fantasy_active(slot_a) == 0
+        assert ga._studies[sa].pending_asks == 0
+        assert_slots_equal(ga.pool, slot_a, gb.pool, slot_b,
+                           "after q-ask rejection")
+        batch = await ga.ask(sa, q=2)        # k=2 == q=2 still serves
+        assert len(batch) == 2
+        await ga.aclose(), await gb.aclose()
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        asyncio.run(main(d1, d2))
+
+
+def test_ask_q_boundary_escalates_when_enabled():
+    """Same boundary with escalation on: the oversized q-ask promotes the
+    study and serves all q suggestions from the neural tier."""
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=8, neural=NB),
+                          GatewayConfig(slots=1, max_inflight=8))
+        sid = gw.create_study()
+        rng = np.random.RandomState(3)
+        for _ in range(6):
+            u = rng.rand(3).astype(np.float32)
+            gw.tell(sid, _foreign_trial(u), obj(0, u))
+        gw.tick()
+        batch = await gw.ask(sid, q=4)       # 6 + 4 > 8 -> promote, serve
+        assert len(batch) == 4
+        assert gw.study_info(sid)["tier"] == 1
+        assert gw.study_info(sid)["saturated"] is True
+        for tr in batch:
+            gw.tell(sid, tr, obj(0, tr.unit))
+        await gw.drain()
+        assert gw.pool.n_real(gw._studies[sid].slot) == 10   # past n_max
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+# ---------------------------------------------------------------------------
+# Serving through saturation: Levy-4d accuracy vs the truncated baseline
+# ---------------------------------------------------------------------------
+LEVY_SPACE = SearchSpace(tuple(Dim(f"x{i}", 0.0, 1.0) for i in range(4)))
+_LO, _HI = (np.asarray(b, np.float64) for b in levy_bounds(4))
+
+
+def _levy_obj(unit) -> float:
+    x = _LO + np.asarray(unit, np.float64) * (_HI - _LO)
+    return float(neg_levy(x))
+
+
+async def _levy_run(d, *, escalate, asks, n_max=10):
+    gw = StudyGateway(
+        LEVY_SPACE,
+        _cfg(d, n_max=n_max, neural=NB,
+             acq=AcqConfig(restarts=16, ascent_steps=8)),
+        GatewayConfig(slots=1, escalate=escalate))
+    sid = gw.create_study()
+    best, hist = -np.inf, []
+    try:
+        for _ in range(asks):
+            tr = await gw.ask(sid)
+            v = _levy_obj(tr.unit)
+            best = max(best, v)
+            hist.append(best)
+            gw.tell(sid, tr, v)
+            await gw.drain()
+    except StudySaturatedError:
+        pass
+    info, summ = gw.study_info(sid), gw.summary()
+    await gw.aclose()
+    return best, hist, info, summ
+
+
+def test_levy4d_escalated_no_worse_than_truncated_gp():
+    """The acceptance regression: driven to >= 2x n_max through the
+    gateway, the escalated study keeps serving and its best value is no
+    worse than the lazy GP truncated at n_max.  The first n_max asks are
+    the SAME code path in both runs (escalation changes nothing until the
+    ask that would overflow), so the comparison is exact, not tolerant."""
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        esc, esc_hist, esc_info, esc_summ = asyncio.run(
+            _levy_run(d1, escalate=True, asks=24))
+        trunc, trunc_hist, trunc_info, _ = asyncio.run(
+            _levy_run(d2, escalate=False, asks=24))
+        assert len(trunc_hist) == 10          # terminal at n_max
+        assert len(esc_hist) == 24            # kept serving past 2x n_max
+        # identical machinery before the promotion point
+        assert esc_hist[:10] == trunc_hist
+        # best value monotone, never below the truncated baseline
+        assert esc >= trunc
+        assert esc_info["tier"] == 1 and esc_info["saturated"] is True
+        assert trunc_info["tier"] == 0
+        assert esc_summ["escalated"] == 1 and esc_summ["saturated"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Promotion -> eviction -> restore -> q-ask: bitwise stream parity
+# ---------------------------------------------------------------------------
+def test_promoted_study_evicts_and_restores_bitwise():
+    """A promoted study churned through eviction/restore produces the
+    BITWISE-identical suggestion stream (q=1 and q=2 asks interleaved) as
+    the same study in a gateway with enough slots to never evict — the
+    NB ledger, its cost rows, and the fantasy shadow all travel exactly."""
+    async def probe(d, slots):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=5, neural=NB),
+                          GatewayConfig(slots=slots))
+        sids = [gw.create_study(name=f"t{i}") for i in range(3)]
+        out = []
+        for r in range(9):
+            res = await gw.ask(sids[0], q=2 if r % 2 else 1)
+            for tr in (res if isinstance(res, list) else [res]):
+                out.append(np.asarray(tr.unit).copy())
+                gw.tell(sids[0], tr, obj(0, tr.unit), cost=1.0 + 0.1 * r)
+            await gw.drain()
+            for s in sids[1:]:    # churn: forces sids[0] out when slots=2
+                tr2 = await gw.ask(s)
+                gw.tell(s, tr2, obj(s, tr2.unit))
+                await gw.drain()
+        tier0 = gw.study_info(sids[0])["tier"]
+        log = gw._studies[sids[0]]
+        n0 = log.n_obs
+        await gw.aclose()
+        return out, tier0, n0, log
+    async def main(d1, d2):
+        resident, tier_a, n_a, log_a = await probe(d1, slots=3)
+        churned, tier_b, n_b, log_b = await probe(d2, slots=2)
+        assert tier_a == 1 and tier_b == 1           # both promoted
+        assert n_a == n_b == 13                      # 13 > 2x n_max=10
+        assert not log_a.evicted_ever
+        assert log_b.evicted_ever
+        assert len(resident) == len(churned) == 13
+        for k, (x, y) in enumerate(zip(resident, churned)):
+            assert np.array_equal(x, y), \
+                f"suggestion {k} diverged through eviction churn"
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        asyncio.run(main(d1, d2))
+
+
+def test_escalated_pool_checkpoint_restore_is_exact():
+    """Pool checkpoint with an escalated study (fantasies outstanding):
+    the snapshot holds only real NB state (rollback -> snapshot ->
+    re-fantasize), cost rows travel, and the restored pool is bitwise the
+    never-fantasized twin — then keeps serving q-asks."""
+    def mk(d):
+        return StudyPool([RESNET_SPACE], _cfg(d, n_max=6, neural=NB))
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        pa, pb = mk(d1), mk(d2)
+        rng = np.random.RandomState(11)
+        for i in range(6):                       # fill to n_max, twinned
+            u = rng.rand(3).astype(np.float32)
+            v = obj(0, u)
+            pa.absorb(0, _foreign_trial(u), v, cost=1.0 + 0.25 * i)
+            pb.absorb(0, _foreign_trial(u), v, cost=1.0 + 0.25 * i)
+        pa.promote(0), pb.promote(0)
+        assert pa.tier(0) == 1 and pa.engine.nb_n(0) == 6
+        for i in range(2):                       # NB-tier absorbs, twinned
+            u = rng.rand(3).astype(np.float32)
+            v = obj(0, u)
+            pa.absorb(0, _foreign_trial(u), v, cost=3.0)
+            pb.absorb(0, _foreign_trial(u), v, cost=3.0)
+        # q-ask on the escalated tier, tells drain in full: rollback must
+        # leave pa bitwise equal to the never-fantasized twin
+        trials = pa.ask_q(0, 3)
+        assert pa.fantasy_active(0) == 3 and pa.n_real(0) == 8
+        for tr in trials:
+            v = obj(0, tr.unit)
+            pa.absorb(0, tr, v)
+            pb.absorb(0, _foreign_trial(tr.unit), v)
+        assert pa.fantasy_active(0) == 0
+        assert nb_mod.nb_to_json(pa.engine.nb_state(0)) == \
+            nb_mod.nb_to_json(pb.engine.nb_state(0))
+        # checkpoint mid-fantasy: snapshot is real-state only
+        pending = pa.ask_q(0, 2)
+        assert pa.checkpoint() is not None
+        assert pa.fantasy_active(0) == 2         # live pool re-fantasized
+        pr = mk(d1)
+        assert pr.restore()
+        assert pr.tier(0) == 1 and pr.engine.nb_n(0) == 11
+        assert pr.fantasy_active(0) == 0
+        np.testing.assert_array_equal(pr.engine.cost_row(0),
+                                      pb.engine.cost_row(0))
+        assert nb_mod.nb_to_json(pr.engine.nb_state(0)) == \
+            nb_mod.nb_to_json(pb.engine.nb_state(0))
+        # the restored escalated study keeps serving
+        more = pr.ask_q(0, 2)
+        assert len(more) == 2 and pr.fantasy_active(0) == 2
+        for tr in more + pending:
+            pr.absorb(0, _foreign_trial(tr.unit), obj(0, tr.unit))
+        assert pr.engine.nb_n(0) == 15
+
+
+# ---------------------------------------------------------------------------
+# The cost axis: tell(cost=) -> ledger -> wire; EI-per-unit-cost ascent
+# ---------------------------------------------------------------------------
+def test_cost_threads_gateway_to_ledger():
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=16),
+                          GatewayConfig(slots=1))
+        sid = gw.create_study()
+        costs = [2.0, 0.5, 1.0]                  # third tell: default
+        for i, c in enumerate(costs):
+            tr = await gw.ask(sid)
+            if i == 2:
+                gw.tell(sid, tr, obj(sid, tr.unit))
+            else:
+                gw.tell(sid, tr, obj(sid, tr.unit), cost=c)
+            await gw.drain()
+        row = gw.pool.engine.cost_row(gw._studies[sid].slot)
+        np.testing.assert_array_equal(row[:3],
+                                      np.asarray(costs, np.float32))
+        for bad in (-1.0, 0.0, float("nan"), float("inf")):
+            with pytest.raises(ValueError, match="cost"):
+                gw.tell(sid, _foreign_trial(np.full(3, 0.5)), 0.1,
+                        cost=bad)
+        await gw.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_cost_rides_the_trial_wire_form():
+    tr = Trial(7, np.asarray([0.1, 0.2, 0.3], np.float32), {}, cost=2.5)
+    back = tx.trial_from_wire(tx.trial_to_wire(tr))
+    assert back.cost == 2.5
+    # hand-built frames from pre-cost clients default to 1.0
+    legacy = tx.trial_from_wire({"trial_id": 1, "unit": [0.5, 0.5, 0.5]})
+    assert legacy.cost == 1.0
+
+
+def _unit_gp_state(n0=6, d=2, seed=0):
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.uniform(key, (n0, d))
+    ys = -jnp.sum((xs - 0.5) ** 2, axis=-1)
+    cfg = GPConfig(n_max=16, dim=d, noise2=1e-6)
+    st = init_state(cfg)
+    st = dataclasses.replace(
+        st, x_buf=st.x_buf.at[:n0].set(xs),
+        y_buf=st.y_buf.at[:n0].set(ys), n=jnp.asarray(n0, jnp.int32))
+    return refactor(st, matern52)
+
+
+def test_ei_per_cost_steers_away_from_expensive_region():
+    """FABOLAS-style acquisition: with a log-cost head that makes the
+    x0 > 0.5 half-box exponentially expensive, the cost-scaled ascent
+    lands its argmax in the cheap half; without a cost head the mode
+    degrades bitwise to plain EI."""
+    st = _unit_gp_state()
+    lo, hi = jnp.zeros(2), jnp.ones(2)
+    key = jax.random.PRNGKey(42)
+    acq = AcqConfig(name="ei_per_cost", restarts=16, ascent_steps=12,
+                    fused="off")
+
+    def log_cost(x):
+        return 12.0 * jnp.maximum(x[..., 0] - 0.5, 0.0)
+
+    x_cheap, _ = optimize_acquisition(st, matern52, lo, hi, key, acq,
+                                      log_cost_fn=log_cost)
+    assert float(x_cheap[0, 0]) <= 0.5 + 1e-3
+    # no cost head -> plain EI, bitwise
+    x_plain, v_plain = optimize_acquisition(
+        st, matern52, lo, hi, key,
+        AcqConfig(name="ei", restarts=16, ascent_steps=12, fused="off"))
+    x_none, v_none = optimize_acquisition(st, matern52, lo, hi, key, acq)
+    np.testing.assert_array_equal(np.asarray(x_none), np.asarray(x_plain))
+    np.testing.assert_array_equal(np.asarray(v_none), np.asarray(v_plain))
+
+
+# ---------------------------------------------------------------------------
+# Observability: saturation gauges persist and merge through federation
+# ---------------------------------------------------------------------------
+def test_saturation_gauges_persist_across_gateway_restart():
+    async def main(d):
+        gw = StudyGateway(RESNET_SPACE, _cfg(d, n_max=4, neural=NB),
+                          GatewayConfig(slots=1))
+        sid = gw.create_study()
+        for _ in range(9):                       # past 2x n_max
+            tr = await gw.ask(sid)
+            gw.tell(sid, tr, obj(sid, tr.unit))
+            await gw.drain()
+        assert gw.study_info(sid)["tier"] == 1
+        assert gw.summary()["escalated"] == 1
+        assert gw.checkpoint() is not None
+        await gw.aclose()
+        g2 = StudyGateway(RESNET_SPACE, _cfg(d, n_max=4, neural=NB),
+                          GatewayConfig(slots=1))
+        assert g2.restore()
+        info = g2.study_info(sid)
+        assert info["tier"] == 1 and info["saturated"] is True
+        s = g2.summary()
+        assert s["escalated"] == 1 and s["saturated"] >= 1
+        tr = await g2.ask(sid)                   # still serving post-restore
+        g2.tell(sid, tr, obj(sid, tr.unit))
+        await g2.drain()
+        await g2.aclose()
+    with tempfile.TemporaryDirectory() as d:
+        asyncio.run(main(d))
+
+
+def test_federation_summary_merges_saturation_gauges():
+    async def main(root):
+        fg = FederatedGateway(RESNET_SPACE, _cfg(root, n_max=4, neural=NB),
+                              GatewayConfig(slots=2),
+                              FederationConfig(n_shards=2))
+        sids = [fg.create_study(name=f"s{i}") for i in range(2)]
+        for _ in range(9):                       # drive ONE study past cap
+            tr = await fg.ask(sids[0])
+            fg.tell(sids[0], tr, obj(sids[0], tr.unit), cost=2.0)
+            await fg.drain()
+        assert fg.study_info(sids[0])["tier"] == 1
+        s = fg.summary()
+        assert s["escalated"] == 1
+        assert s["saturated"] >= 1
+        await fg.aclose()
+    with tempfile.TemporaryDirectory() as root:
+        asyncio.run(main(root))
